@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: structural block-attention vs full causal.
+
+Wall-times are CPU-interpret throughput (relative structure only; the TPU
+numbers come from the roofline). The FLOPs ratios are the paper's Fig.1
+geometry and are exact.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention as A
+
+
+def _time(fn, *args, repeats=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run(emit=print):
+    B, H, KV, D = 1, 8, 8, 64
+    key = jax.random.PRNGKey(0)
+    for S, nb in [(1024, 8), (4096, 16)]:
+        q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+        v = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+        scale = D ** -0.5
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        full = jax.jit(lambda q, k, v: A.flash_attention(
+            q, k, v, A.causal_mask_fn(pos, pos), scale, kv_chunk=512))
+        block = jax.jit(lambda q, k, v: A.blockwise_prefill(
+            q, k, v, nb, scale, kv_chunk=512))
+        t_full = _time(full, q, k, v)
+        t_block = _time(block, q, k, v)
+        L = S // nb
+        area_full = S * (S + 1) / 2
+        area_block = nb * L * (L + 1) / 2 + L * (S - L)
+        emit(f"attn_full_S{S},{t_full:.0f},area={area_full:.3e}")
+        emit(f"attn_block_S{S}_nb{nb},{t_block:.0f},"
+             f"area={area_block:.3e} flops_saving="
+             f"{100 * (1 - area_block / area_full):.1f}% "
+             f"speedup={t_full / t_block:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

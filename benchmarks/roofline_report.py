@@ -1,0 +1,107 @@
+"""Render the §Dry-run / §Roofline tables in EXPERIMENTS.md from the JSON
+records emitted by repro.launch.dryrun.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      --dir experiments/dryrun --mesh 16x16
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _useful_ratio(rec) -> float:
+    """Recompute MODEL_FLOPS/step_FLOPs with the like-for-like yardstick
+    (6ND train / 2ND inference) regardless of record age."""
+    from repro.configs import get_config
+    from repro.core.config import SHAPES
+    from repro.launch.specs import arch_shape_config
+    from repro.roofline import model_flops_6nd
+    cfg = arch_shape_config(get_config(rec["arch"]), SHAPES[rec["shape"]])
+    mf = model_flops_6nd(cfg, SHAPES[rec["shape"]])
+    total = rec["flops_analytic"]["total"]
+    return mf / total if total else 0.0
+
+
+def load(dir_: str, mesh: str):
+    recs = {}
+    for path in glob.glob(os.path.join(dir_, f"*_{mesh}.json")):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x >= 0.01:
+        return f"{x:.2f}"
+    return f"{x:.1e}"
+
+
+def roofline_table(recs, emit=print):
+    emit("| arch | shape | compute s | memory s | collective s | dominant "
+         "| peak GiB/chip | useful ratio | note |")
+    emit("|---|---|---|---|---|---|---|---|---|")
+    archs = sorted({a for a, _ in recs})
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                emit(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                     f"skipped (see DESIGN.md §5) |")
+                continue
+            if not r.get("ok"):
+                emit(f"| {arch} | {shape} | FAIL | | | | | | "
+                     f"{r.get('error', '')[:60]} |")
+                continue
+            rl = r["roofline"]
+            peak = r["memory"]["peak_bytes"] / 2**30
+            note = ""
+            emit(f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} "
+                 f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
+                 f"| {rl['dominant']} | {peak:.2f} "
+                 f"| {_useful_ratio(r):.2f} | {note} |")
+
+
+def dryrun_table(recs, emit=print):
+    emit("| arch | shape | lower s | compile s | arg GiB | temp GiB "
+         "| HLO flops (raw) | collective GiB | collectives |")
+    emit("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape) in sorted(recs):
+        r = recs[(arch, shape)]
+        if not r.get("ok"):
+            continue
+        m = r["memory"]
+        c = r["collectives"]
+        ops = " ".join(f"{k}x{v}" for k, v in
+                       sorted(c["count_by_op"].items()))
+        emit(f"| {arch} | {shape} | {r['lower_s']} | {r['compile_s']} "
+             f"| {m['argument_bytes'] / 2**30:.2f} "
+             f"| {m['temp_bytes'] / 2**30:.2f} "
+             f"| {r['cost']['flops']:.2e} "
+             f"| {c['total_bytes'] / 2**30:.2f} | {ops} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    if args.table == "roofline":
+        roofline_table(recs)
+    else:
+        dryrun_table(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark driver — one section per paper table/figure.
+
+  Table 3  -> ttft (TTFT + FLOPs-TFT vs total length)
+  §2.5     -> cache (hit rate / reuse / eviction)
+  Fig. 1   -> kernels_bench (block vs full attention geometry)
+  Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
+                      PYTHONPATH=src python -m benchmarks.accuracy_recovery)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", nargs="+",
+                    default=["ttft", "cache", "kernels"],
+                    choices=["ttft", "cache", "kernels"])
+    ap.add_argument("--lengths", type=int, nargs="+",
+                    default=[50, 512, 1024, 2048])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if "ttft" in args.sections:
+        from benchmarks import ttft
+        ttft.run(args.lengths, repeats=3,
+                 emit=lambda s: None if s.startswith("name,") else print(s))
+    if "cache" in args.sections:
+        from benchmarks import cache
+        cache.run()
+    if "kernels" in args.sections:
+        from benchmarks import kernels_bench
+        kernels_bench.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Example: lower ANY assigned architecture onto the production mesh and
+read its roofline — the programmatic version of repro.launch.dryrun.
+
+  PYTHONPATH=src python examples/multiarch_dryrun.py --arch olmoe-1b-7b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--shape", default="prefill_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    # dryrun must own the process (XLA_FLAGS before jax import), so exec it
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", args.arch, "--shape", args.shape]
+    if args.multi_pod:
+        cmd.append("--multi-pod")
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: Block-attention in 60 lines.
+
+Builds a small model, shows that (1) block-attention isolates passages,
+(2) cached blocks + position re-encoding reproduce block-mode logits
+exactly, (3) the cross-request cache slashes prefill work.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+
+cfg = ModelConfig(name="quickstart", arch_type="dense", num_layers=4,
+                  d_model=256, num_heads=8, num_kv_heads=4, d_ff=512,
+                  vocab_size=1024, dtype="float32", param_dtype="float32")
+params = api.model_init(jax.random.PRNGKey(0), cfg)
+
+# --- a RAG-style prompt: 4 retrieved passages + a user query -------------
+rng = np.random.default_rng(0)
+passages = [rng.integers(5, 1024, 48).astype(np.int32) for _ in range(4)]
+query = rng.integers(5, 1024, 24).astype(np.int32)
+blocks = passages + [query]
+
+# --- 1. block-attention forward (the paper's Fig. 1 mask) ----------------
+tokens = np.concatenate(blocks)
+ids = np.concatenate([np.full(len(b), i, np.int32)
+                      for i, b in enumerate(blocks)])
+batch = {"tokens": jnp.asarray(tokens)[None],
+         "block_ids": jnp.asarray(ids)[None],
+         "last_block": jnp.asarray([len(blocks) - 1])}
+logits_block, _ = api.forward_logits(params, cfg, batch, block_mode=True)
+logits_full, _ = api.forward_logits(params, cfg, batch, block_mode=False)
+print(f"block vs full logits differ: "
+      f"{float(jnp.abs(logits_block - logits_full).max()):.3f} "
+      f"(different masks -> different models of the prompt)")
+
+# --- 2. serving engine: cache, re-encode, final-block pass ---------------
+engine = BlockAttentionEngine(params, cfg, max_seq=512)
+res_cold = engine.generate(blocks, max_new_tokens=4)
+oracle = int(jnp.argmax(logits_block[0, -1]))
+print(f"engine first token {res_cold.tokens[0, 0]} == oracle {oracle}: "
+      f"{int(res_cold.tokens[0, 0]) == oracle}")
+
+# --- 3. the payoff: a second request reusing the same passages -----------
+new_query = rng.integers(5, 1024, 24).astype(np.int32)
+res_hot = engine.generate(passages + [new_query], max_new_tokens=4)
+print(f"prefill tokens computed: cold={res_cold.prefill_tokens_computed} "
+      f"hot={res_hot.prefill_tokens_computed} "
+      f"(reuse {100 * (1 - res_hot.prefill_tokens_computed / res_hot.prefill_tokens_total):.0f}%)")
+print(f"store: {len(engine.store)} blocks, hit rate "
+      f"{engine.store.hit_rate:.2f}")

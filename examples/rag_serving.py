@@ -1,0 +1,48 @@
+"""RAG serving example (deliverable b): a multi-turn session where the
+engine's cross-request block cache eliminates passage re-encoding —
+the paper's Fig. 2 pipeline with live TTFT accounting.
+
+  PYTHONPATH=src python examples/rag_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+from repro.serving.scheduler import Scheduler
+
+cfg = ModelConfig(name="rag-serve", arch_type="dense", num_layers=6,
+                  d_model=384, num_heads=6, num_kv_heads=6, d_ff=1024,
+                  vocab_size=2048, dtype="float32", param_dtype="float32")
+params = api.model_init(jax.random.PRNGKey(0), cfg)
+
+rng = np.random.default_rng(0)
+# a document store of 12 passages; queries retrieve 5 of them
+corpus = [rng.integers(5, 2048, 64).astype(np.int32) for _ in range(12)]
+engine = BlockAttentionEngine(params, cfg, max_seq=512)
+sched = Scheduler(max_batch=4)
+
+print("turn,batch,ttft_ms,reuse_pct,store_blocks")
+for turn in range(6):
+    # 4 concurrent user queries hitting overlapping retrievals
+    for _ in range(4):
+        idx = rng.choice(12, 5, replace=False)
+        blocks = [corpus[i] for i in idx]
+        blocks.append(rng.integers(5, 2048, 24).astype(np.int32))
+        sched.submit(blocks, max_new_tokens=4)
+    batch = sched.next_batch()
+    res = engine.generate_batch([r.blocks for r in batch.requests],
+                                max_new_tokens=4)
+    reuse = 100 * (1 - res.prefill_tokens_computed
+                   / res.prefill_tokens_total)
+    print(f"{turn},{len(batch.requests)},{res.ttft_s * 1e3:.1f},"
+          f"{reuse:.0f},{len(engine.store)}", flush=True)
+
+print(f"\nfinal store: {len(engine.store)} blocks "
+      f"({engine.store.nbytes / 2**20:.1f} MiB), "
+      f"hit rate {engine.store.hit_rate:.2f}")
+print("note how reuse climbs to ~100% once the corpus is cached — "
+      "the paper's 'greater text, greater necessity' effect.")

@@ -1,0 +1,7 @@
+"""repro: Block-Attention for Efficient Prefilling (ICLR 2025) — a
+production-grade JAX/Pallas reproduction + framework.
+
+Layers: core (the paper's mechanism) / nn / models / data / training /
+serving / kernels / configs / launch / roofline.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,46 @@
+"""Assigned-architecture registry: one module per arch, exact pool configs.
+
+``get_config(arch_id)`` returns the full production config;
+``get_config(arch_id, smoke=True)`` the reduced same-family variant used by
+the CPU smoke tests (<=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.core.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "llama4_scout_17b_a16e",
+    "llava_next_mistral_7b",
+    "minitron_8b",
+    "glm4_9b",
+    "chatglm3_6b",
+    "qwen3_14b",
+    "zamba2_2p7b",
+    "whisper_base",
+    "xlstm_350m",
+    "olmoe_1b_7b",
+    "tulu3_8b",          # the paper's own base model (Llama-3.1-8B class)
+]
+
+_ALIASES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "minitron-8b": "minitron_8b",
+    "glm4-9b": "glm4_9b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen3-14b": "qwen3_14b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "whisper-base": "whisper_base",
+    "xlstm-350m": "xlstm_350m",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "tulu3-8b": "tulu3_8b",
+}
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    name = _ALIASES.get(arch_id, arch_id.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.smoke_config() if smoke else mod.config()

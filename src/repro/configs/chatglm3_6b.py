@@ -1,0 +1,40 @@
+"""chatglm3-6b [dense] — 2d/interleaved partial RoPE, GQA kv=2.
+[arXiv:2406.12793]
+"""
+from repro.core.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm3-6b",
+        arch_type="dense",
+        num_layers=28,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        d_ff=13696,
+        vocab_size=65024,
+        head_dim=128,
+        rotary_pct=0.5,
+        rope_interleaved=True,
+        rope_theta=10_000.0,
+        source="arXiv:2406.12793",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm3-smoke",
+        arch_type="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        rotary_pct=0.5,
+        rope_interleaved=True,
+        dtype="float32", param_dtype="float32",
+        source="arXiv:2406.12793 (reduced)",
+    )

@@ -1,0 +1,38 @@
+"""glm4-9b [dense] — RoPE (partial rotary, half dims), GQA kv=2.
+[hf:THUDM/glm-4-9b]
+"""
+from repro.core.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="glm4-9b",
+        arch_type="dense",
+        num_layers=40,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        d_ff=13696,
+        vocab_size=151552,
+        head_dim=128,
+        rotary_pct=0.5,
+        rope_theta=10_000.0,
+        source="hf:THUDM/glm-4-9b",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="glm4-smoke",
+        arch_type="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        rotary_pct=0.5,
+        dtype="float32", param_dtype="float32",
+        source="hf:THUDM/glm-4-9b (reduced)",
+    )

@@ -1,0 +1,47 @@
+"""llama4-scout-17b-a16e [moe] — MoE 16 experts top-1, early fusion,
+chunked attention (8192) on 3 of every 4 layers, RoPE off on global layers
+(we keep RoPE everywhere; the NoPE detail does not affect sharding/roofline).
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+"""
+from repro.core.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        arch_type="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202048,
+        head_dim=128,
+        rope_theta=500_000.0,
+        attention_chunk=8192,
+        chunk_attn_every=4,
+        moe=MoEConfig(num_experts=16, experts_per_token=1, d_expert=8192,
+                      num_shared_experts=1, d_shared=8192),
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-smoke",
+        arch_type="moe",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        rope_theta=500_000.0,
+        attention_chunk=32,
+        chunk_attn_every=2,
+        moe=MoEConfig(num_experts=4, experts_per_token=1, d_expert=256,
+                      num_shared_experts=1, d_shared=256),
+        dtype="float32", param_dtype="float32",
+        source="hf:meta-llama/Llama-4-Scout-17B-16E (reduced)",
+    )

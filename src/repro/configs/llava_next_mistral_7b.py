@@ -1,0 +1,48 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B decoder + anyres tiling vision
+frontend (STUB per the carve-out: input_specs provides patch embeddings).
+anyres: 4 tiles + 1 base thumbnail, 576 patches each -> 2880 image tokens.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+"""
+from repro.core.config import ModelConfig
+
+NUM_TILES = 5           # 2x2 grid + base image
+PATCHES_PER_TILE = 576  # 24x24 @ CLIP-ViT-L/336
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-mistral-7b",
+        arch_type="vlm",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=32000,
+        head_dim=128,
+        rope_theta=1_000_000.0,
+        frontend="vision_stub",
+        frontend_tokens=NUM_TILES * PATCHES_PER_TILE,
+        frontend_tiles=NUM_TILES,
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-smoke",
+        arch_type="vlm",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        rope_theta=1_000_000.0,
+        frontend="vision_stub",
+        frontend_tokens=4 * 16,
+        frontend_tiles=4,
+        dtype="float32", param_dtype="float32",
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf (reduced)",
+    )

@@ -1,0 +1,34 @@
+"""minitron-8b [dense] — width-pruned Nemotron-4 15B. [arXiv:2407.14679]"""
+from repro.core.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b",
+        arch_type="dense",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=256000,
+        head_dim=128,
+        rope_theta=10_000.0,
+        source="arXiv:2407.14679",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-smoke",
+        arch_type="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        dtype="float32", param_dtype="float32",
+        source="arXiv:2407.14679 (reduced)",
+    )

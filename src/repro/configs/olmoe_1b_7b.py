@@ -1,0 +1,36 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8, qk-norm, MHA. [arXiv:2409.02060]"""
+from repro.core.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b",
+        arch_type="moe",
+        num_layers=16,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=1024,
+        vocab_size=50304,
+        qk_norm=True,
+        rope_theta=10_000.0,
+        moe=MoEConfig(num_experts=64, experts_per_token=8, d_expert=1024),
+        source="arXiv:2409.02060",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-smoke",
+        arch_type="moe",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=8,
+        d_ff=128,
+        vocab_size=512,
+        qk_norm=True,
+        moe=MoEConfig(num_experts=4, experts_per_token=2, d_expert=128),
+        dtype="float32", param_dtype="float32",
+        source="arXiv:2409.02060 (reduced)",
+    )

@@ -1,0 +1,36 @@
+"""qwen3-14b [dense] — qk_norm, GQA kv=8. [hf:Qwen/Qwen3-8B family]"""
+from repro.core.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-14b",
+        arch_type="dense",
+        num_layers=40,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        d_ff=17408,
+        vocab_size=151936,
+        head_dim=128,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        source="hf:Qwen/Qwen3-8B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-smoke",
+        arch_type="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        qk_norm=True,
+        dtype="float32", param_dtype="float32",
+        source="hf:Qwen/Qwen3-8B (reduced)",
+    )

@@ -1,0 +1,37 @@
+"""tulu3-8b — the paper's base model (Llama-3.1-Tulu-3-8B-SFT).
+[hf:allenai/Llama-3.1-Tulu-3-8B-SFT]
+"""
+from repro.core.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="tulu3-8b",
+        arch_type="dense",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=128256,
+        head_dim=128,
+        rope_theta=500_000.0,
+        source="hf:allenai/Llama-3.1-Tulu-3-8B-SFT",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="tulu3-smoke",
+        arch_type="dense",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        rope_theta=500_000.0,
+        dtype="float32", param_dtype="float32",
+        source="hf:allenai/Llama-3.1-Tulu-3-8B-SFT (reduced)",
+    )

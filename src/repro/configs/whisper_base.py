@@ -1,0 +1,48 @@
+"""whisper-base [audio] — enc-dec; conv/mel frontend is a STUB (input_specs
+provides frame embeddings). Decoder uses learned absolute positions.
+long_500k is skipped for this arch (DESIGN.md §5). [arXiv:2212.04356]
+"""
+from repro.core.config import EncoderConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        arch_type="audio",
+        num_layers=6,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=8,
+        d_ff=2048,
+        vocab_size=51865,
+        use_rope=False,
+        tie_embeddings=True,
+        max_position_embeddings=65536,   # covers decode_32k positions
+        encoder=EncoderConfig(num_layers=6, d_model=512, num_heads=8,
+                              d_ff=2048, max_positions=1500),
+        frontend="audio_stub",
+        frontend_tokens=1500,            # 30 s @ 50 Hz post-conv
+        source="arXiv:2212.04356",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke",
+        arch_type="audio",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=512,
+        use_rope=False,
+        tie_embeddings=True,
+        max_position_embeddings=256,
+        encoder=EncoderConfig(num_layers=2, d_model=96, num_heads=4,
+                              d_ff=192, max_positions=64),
+        frontend="audio_stub",
+        frontend_tokens=32,
+        dtype="float32", param_dtype="float32",
+        source="arXiv:2212.04356 (reduced)",
+    )

@@ -1,0 +1,35 @@
+"""xlstm-350m [ssm] — alternating sLSTM (1-in-4) + mLSTM blocks; no separate
+FFN (blocks carry their own up-projection). [arXiv:2405.04517]
+"""
+from repro.core.config import ModelConfig, XLSTMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m",
+        arch_type="ssm",
+        num_layers=24,
+        d_model=1024,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        xlstm=XLSTMConfig(slstm_every=4, proj_factor=2.0, conv_width=4),
+        source="arXiv:2405.04517",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-smoke",
+        arch_type="ssm",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=512,
+        xlstm=XLSTMConfig(slstm_every=2, proj_factor=2.0, conv_width=4),
+        dtype="float32", param_dtype="float32",
+        source="arXiv:2405.04517 (reduced)",
+    )

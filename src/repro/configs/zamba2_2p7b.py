@@ -1,0 +1,42 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared-weight attention block
+invoked every 6th layer (weights shared across invocations). ssm_state=64.
+[arXiv:2411.15242]
+"""
+from repro.core.config import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b",
+        arch_type="hybrid",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,           # MHA in the shared block
+        d_ff=10240,
+        vocab_size=32000,
+        head_dim=80,
+        shared_attn_every=6,
+        ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4,
+                      chunk_size=256),
+        source="arXiv:2411.15242",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke",
+        arch_type="hybrid",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        shared_attn_every=2,
+        ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, conv_width=4,
+                      chunk_size=16),
+        dtype="float32", param_dtype="float32",
+        source="arXiv:2411.15242 (reduced)",
+    )

@@ -1,0 +1,26 @@
+"""Core Block-attention library — the paper's primary contribution.
+
+Submodules:
+  config     — ModelConfig / ShapeConfig / TrainConfig
+  rope       — RoPE + position re-encoding (paper Eq. 1-3)
+  blocks     — block segmentation and layouts (paper §2.2, §3.1)
+  attention  — ref / flash / blockwise block-attention (paper Fig. 1)
+  kv_cache   — cross-request block KV store + decode cache (paper §2.5)
+"""
+from repro.core.config import (  # noqa: F401
+    ATTN, MAMBA2, MLSTM, SLSTM, SHARED_ATTN,
+    FFN_DENSE, FFN_MOE, FFN_NONE,
+    EncoderConfig, ModelConfig, MoEConfig, SSMConfig, XLSTMConfig,
+    ShapeConfig, TrainConfig, SHAPES,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+)
+from repro.core.blocks import (  # noqa: F401
+    BlockLayout, SegmentationRules, full_attention_layout, uniform_layout,
+    layout_from_lengths, rag_blocks, segment_tokens,
+)
+from repro.core.attention import (  # noqa: F401
+    attention_ref, block_mask, blockwise_prefill, decode_attention,
+    flash_attention, causal_mask_fn,
+)
+from repro.core.rope import apply_rope, reencode_positions, zero_base_positions  # noqa: F401
+from repro.core.kv_cache import BlockKVStore, DecodeKVCache, block_key, cache_update  # noqa: F401

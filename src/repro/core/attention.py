@@ -1,0 +1,264 @@
+"""Attention implementations for Block-attention.
+
+Three interchangeable implementations (all numerically cross-checked in tests):
+
+  * ``attention_ref``       — masked dense softmax attention. O(S^2) memory.
+                              The oracle for everything else.
+  * ``flash_attention``     — fori_loop over KV chunks with online softmax.
+                              O(Sq * chunk) memory; the production jnp path for
+                              long sequences and the fallback when the Pallas
+                              kernel is unavailable.
+  * ``blockwise_prefill``   — the TPU-native structural form of Block-attention
+                              for uniform blocks: non-final blocks are folded
+                              into the batch dimension (dense MXU tiles, no
+                              masking waste) and only the final block runs a
+                              global pass. The O(S^2) -> O(S*L + S*L) FLOPs
+                              reduction is visible to XLA cost analysis, which
+                              is what the roofline reads.
+
+Conventions: q (B, Sq, H, D); k/v (B, Skv, KV, D); GQA via head grouping.
+Softmax in f32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Mask construction
+# ---------------------------------------------------------------------------
+def block_mask(
+    q_pos: jax.Array,                  # (B, Sq) int32 global positions
+    kv_pos: jax.Array,                 # (B, Skv)
+    q_blk: Optional[jax.Array] = None,  # (B, Sq) block ids
+    kv_blk: Optional[jax.Array] = None,
+    last_blk: Optional[jax.Array] = None,  # (B,) id of the global query block
+    window: int = 0,
+    chunk: int = 0,
+) -> jax.Array:
+    """The Block-attention mask (paper Fig. 1) plus window/chunk variants.
+
+    attend(i, j) = causal(i, j)
+                   AND (same_block OR q in final block)     [block mode]
+                   AND within sliding window                [if window > 0]
+                   AND same attention chunk                 [if chunk > 0]
+    Returns (B, Sq, Skv) bool.
+    """
+    m = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if q_blk is not None:
+        same = q_blk[:, :, None] == kv_blk[:, None, :]
+        is_final = q_blk[:, :, None] == last_blk[:, None, None]
+        m &= same | is_final
+    if window:
+        m &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if chunk:
+        m &= (kv_pos[:, None, :] // chunk) == (q_pos[:, :, None] // chunk)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Dense reference
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, mask, scale: float, softcap: float = 0.0):
+    """Masked dense attention oracle. mask: (B, Sq, Skv) bool."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (pure JAX, fori_loop over KV chunks, online softmax)
+# ---------------------------------------------------------------------------
+def flash_attention(
+    q, k, v,
+    mask_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    scale: float,
+    kv_chunk: int = 512,
+    softcap: float = 0.0,
+):
+    """Online-softmax attention scanning KV in chunks.
+
+    ``mask_fn(kv_start, kv_len) -> (B, Sq, kv_len) bool`` builds the mask for
+    the chunk beginning at ``kv_start``; closures capture positions/block ids.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kv_chunk = min(kv_chunk, Skv)
+    # pad KV to a chunk multiple; padded keys are masked out via kv_len arg
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Skv + pad) // kv_chunk
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, D)
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        start = i * kv_chunk
+        kc = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=1)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc.astype(jnp.float32))
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = mask_fn(start, kv_chunk)                       # (B, Sq, C)
+        # also mask the tail padding
+        valid = (start + jnp.arange(kv_chunk)) < Skv          # (C,)
+        mask = mask & valid[None, None, :]
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+        m_cur = jnp.max(logits, axis=-1)                      # (B,KV,G,Sq)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new[..., None])
+        l_corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * l_corr + jnp.sum(p, axis=-1)
+        acc = acc * l_corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        return m_new, l_new, acc
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, Sq, D), jnp.float32)
+    m_f, l_f, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    # rows that saw no unmasked key produce 0 (matches ref up to softmax(-inf))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]            # (B,KV,G,Sq,D)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def _slice_padded(arr, start, length, fill):
+    """dynamic_slice that never clamps: pad the tail with ``fill`` first.
+
+    (dynamic_slice clamps out-of-range starts, which would misalign the mask
+    against the kernel's zero-padded KV tail when Skv % chunk != 0.)"""
+    padded = jnp.pad(arr, ((0, 0), (0, length)), constant_values=fill)
+    return jax.lax.dynamic_slice_in_dim(padded, start, length, axis=1)
+
+
+def causal_mask_fn(q_pos: jax.Array, kv_pos: jax.Array, window: int = 0,
+                   chunk: int = 0, q_blk=None, kv_blk=None, last_blk=None):
+    """Builds a chunk-sliced mask_fn for ``flash_attention``."""
+    def fn(start, length):
+        kv_pos_c = _slice_padded(kv_pos, start, length, jnp.int32(2**30))
+        kv_blk_c = (_slice_padded(kv_blk, start, length, jnp.int32(-1))
+                    if kv_blk is not None else None)
+        return block_mask(q_pos, kv_pos_c, q_blk, kv_blk_c, last_blk,
+                          window=window, chunk=chunk)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Structural blockwise prefill (uniform blocks)
+# ---------------------------------------------------------------------------
+def blockwise_prefill(
+    q, k, v,
+    num_blocks: int,
+    scale: float,
+    kv_chunk: int = 512,
+    softcap: float = 0.0,
+    final_global: bool = True,
+    dense: bool = False,
+    fold_spec=None,
+):
+    """Block-attention over ``num_blocks`` uniform blocks.
+
+    Non-final blocks: folded into the batch dim — each runs local causal
+    attention over its own L tokens (this IS the paper's parallel context
+    encoding; FLOPs B*nb*L^2 instead of B*S^2).
+    Final block: one global causal pass over the whole sequence
+    (FLOPs B*L*S) — the "user query attends everything" part.
+
+    With ``final_global=False`` this doubles as llama4-style chunked
+    attention (every chunk independent, none global).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    assert S % num_blocks == 0, (S, num_blocks)
+    L = S // num_blocks
+
+    # ---- within-block passes, blocks folded into batch ----
+    qb = q.reshape(B * num_blocks, L, H, D)
+    kb = k.reshape(B * num_blocks, L, KV, D)
+    vb = v.reshape(B * num_blocks, L, KV, D)
+    if fold_spec is not None:
+        # block-parallel sharding (§Perf): independent blocks spread over
+        # EVERY mesh axis — within-block prefill becomes collective-free
+        qb = jax.lax.with_sharding_constraint(qb, fold_spec)
+        kb = jax.lax.with_sharding_constraint(kb, fold_spec)
+        vb = jax.lax.with_sharding_constraint(vb, fold_spec)
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B * num_blocks, L))
+    if dense:   # loop-free form: FLOPs fully visible to XLA cost analysis
+        out_within = attention_ref(qb, kb, vb, block_mask(pos, pos), scale,
+                                   softcap=softcap)
+    else:
+        out_within = flash_attention(
+            qb, kb, vb, causal_mask_fn(pos, pos), scale,
+            kv_chunk=min(kv_chunk, L), softcap=softcap)
+    out = out_within.reshape(B, S, H, D)
+
+    if not final_global or num_blocks == 1:
+        return out
+
+    # ---- final block: global causal attention over the full sequence ----
+    qf = q[:, S - L:]
+    q_pos = jnp.broadcast_to(jnp.arange(S - L, S, dtype=jnp.int32), (B, L))
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if dense:
+        out_final = attention_ref(qf, k, v, block_mask(q_pos, kv_pos), scale,
+                                  softcap=softcap)
+    else:
+        out_final = flash_attention(
+            qf, k, v, causal_mask_fn(q_pos, kv_pos), scale,
+            kv_chunk=kv_chunk, softcap=softcap)
+    return jnp.concatenate([out[:, : S - L], out_final], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-step) attention over a KV cache
+# ---------------------------------------------------------------------------
+def decode_attention(
+    q, k_cache, v_cache,
+    cache_len: jax.Array,            # (B,) valid length of the cache
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """One new token (Sq small, usually 1) attending a cache of Skv slots.
+
+    Memory O(B*H*Skv) — linear, fine even at 500K. ``window`` restricts
+    attention to the trailing ``window`` positions (sliding-window decode
+    for dense archs at long context).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache.astype(jnp.float32))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kv_pos = jnp.arange(Skv, dtype=jnp.int32)[None, :]        # (1, Skv)
+    q_pos = cache_len[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    mask = kv_pos[:, None, :] < (q_pos[:, :, None] + 1)       # causal+valid
+    if window:
+        mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

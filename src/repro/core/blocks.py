@@ -1,0 +1,104 @@
+"""Block segmentation (paper §2.2, §3.1).
+
+A ``BlockLayout`` carries everything the attention layers need to realise the
+Block-attention mask for one sequence:
+
+  * ``block_ids`` — per-token block index, non-decreasing, int32 ``(seq,)``
+  * ``num_blocks`` — static upper bound on the number of blocks
+  * ``last_block_id`` — id of the final (query) block, which attends globally
+
+Segmentation rules implemented from §3.1 of the paper:
+  1. multi-turn: each (user, assistant) turn is a block
+  2. system message and user message are separate blocks
+  3. separator tokens ("\n\n", "---", "===", "\n\t\t") open a new block
+  RAG: each retrieved passage is one block; the user query is the final block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    block_ids: jax.Array          # (seq,) or (batch, seq) int32
+    last_block_id: jax.Array      # scalar or (batch,) int32
+
+    @property
+    def batched(self) -> bool:
+        return self.block_ids.ndim == 2
+
+
+def full_attention_layout(seq_len: int, batch: int | None = None) -> BlockLayout:
+    """Single block == plain causal full attention."""
+    shape = (seq_len,) if batch is None else (batch, seq_len)
+    ids = jnp.zeros(shape, jnp.int32)
+    last = jnp.zeros((), jnp.int32) if batch is None else jnp.zeros((batch,), jnp.int32)
+    return BlockLayout(ids, last)
+
+
+def uniform_layout(seq_len: int, num_blocks: int, batch: int | None = None) -> BlockLayout:
+    """``num_blocks`` equal blocks; the last one is the query block.
+
+    Used for dry-runs / benchmarks where the block structure is synthetic.
+    ``seq_len`` must be divisible by ``num_blocks``.
+    """
+    assert seq_len % num_blocks == 0, (seq_len, num_blocks)
+    ids = jnp.repeat(jnp.arange(num_blocks, dtype=jnp.int32), seq_len // num_blocks)
+    last = jnp.asarray(num_blocks - 1, jnp.int32)
+    if batch is not None:
+        ids = jnp.broadcast_to(ids, (batch, seq_len))
+        last = jnp.broadcast_to(last, (batch,))
+    return BlockLayout(ids, last)
+
+
+def layout_from_lengths(lengths: Sequence[int]) -> BlockLayout:
+    """Build a (host-side) layout from explicit per-block lengths."""
+    ids = np.concatenate(
+        [np.full(l, i, np.int32) for i, l in enumerate(lengths)]
+    )
+    return BlockLayout(jnp.asarray(ids), jnp.asarray(len(lengths) - 1, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Host-side segmentation of token sequences (paper §3.1 rules)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SegmentationRules:
+    separator_ids: tuple = ()        # token ids acting like "\n\n" / "---" / "==="
+    turn_start_ids: tuple = ()       # ids that open a new dialogue turn
+    min_block_len: int = 8           # avoid degenerate 1-token blocks
+    max_blocks: int = 64
+
+
+def segment_tokens(tokens: np.ndarray, rules: SegmentationRules) -> List[np.ndarray]:
+    """Split a 1-D token array into blocks per the §3.1 separator rules.
+
+    The final block is always the trailing segment (the "user query")."""
+    cuts = [0]
+    for i, t in enumerate(tokens):
+        if len(cuts) >= rules.max_blocks:
+            break
+        is_sep = int(t) in rules.separator_ids or int(t) in rules.turn_start_ids
+        if is_sep and i - cuts[-1] >= rules.min_block_len:
+            cuts.append(i)
+    cuts.append(len(tokens))
+    return [np.asarray(tokens[a:b]) for a, b in zip(cuts[:-1], cuts[1:]) if b > a]
+
+
+def rag_blocks(passages: Sequence[np.ndarray], query: np.ndarray) -> List[np.ndarray]:
+    """RAG segmentation: one block per retrieved passage, query last."""
+    return [np.asarray(p) for p in passages] + [np.asarray(query)]
+
+
+def block_starts(layout_ids: np.ndarray, num_blocks: int) -> np.ndarray:
+    """Offset of each block's first token (for position re-encoding)."""
+    starts = np.zeros(num_blocks, np.int64)
+    for b in range(1, num_blocks):
+        idx = np.argmax(layout_ids == b)
+        starts[b] = idx
+    return starts

@@ -1,0 +1,260 @@
+"""Configuration system for the Block-Attention framework.
+
+Every architecture in the assigned pool is expressed as a ``ModelConfig``.
+The config is a plain frozen dataclass so it hashes / compares cleanly and can
+be closed over by jitted step functions without retracing surprises.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer schedule entries (per-layer sequence-mixer type)
+# ---------------------------------------------------------------------------
+ATTN = "attn"            # softmax attention (GQA)
+MAMBA2 = "mamba2"        # Mamba2 SSD layer
+MLSTM = "mlstm"          # xLSTM matrix-memory (parallelisable linear attn)
+SLSTM = "slstm"          # xLSTM scalar-memory (recurrent scan)
+SHARED_ATTN = "shared_attn"  # zamba2-style shared-weight attention block
+
+# Feed-forward types
+FFN_DENSE = "dense"      # SwiGLU MLP
+FFN_MOE = "moe"          # top-k routed experts
+FFN_NONE = "none"        # no FFN (xLSTM blocks carry their own up-proj)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    experts_per_token: int          # top-k
+    d_expert: int                   # per-expert hidden dim
+    num_shared_experts: int = 0     # llama4-style always-on shared expert
+    d_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    group_size: int = 1024          # routing-group length (§Perf lever)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64             # N (per-head state size)
+    num_heads: int = 0              # mamba2 heads (0 -> derived)
+    head_dim: int = 64              # P
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256           # SSD chunked-scan block length
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 0            # 0 = pure mLSTM; k>0 = sLSTM at layers i%k==0
+    proj_factor: float = 2.0        # mLSTM up-projection factor
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec (whisper) / frontend width for VLM stubs."""
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    d_ff: int = 0
+    max_positions: int = 1500       # whisper: 30s @ 50Hz after conv stride 2
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+
+    # --- attention details ---
+    qk_norm: bool = False           # qwen3
+    rope_theta: float = 10_000.0
+    rotary_pct: float = 1.0         # glm/chatglm partial rotary
+    rope_interleaved: bool = False  # chatglm 2d-style interleaved pairs
+    use_rope: bool = True           # whisper uses learned absolute positions
+    sliding_window: int = 0         # 0 = disabled; >0 = window size
+    attention_chunk: int = 0        # llama4 chunked-attention span (0 = off)
+    chunk_attn_every: int = 0       # apply chunked attn on layers i%k != k-1
+    max_position_embeddings: int = 1_048_576
+
+    # --- layer schedule ---
+    # Derived if empty: all-ATTN. hybrid/ssm configs override.
+    layer_schedule: Tuple[str, ...] = ()
+    ffn_schedule: Tuple[str, ...] = ()   # derived if empty: all dense / all moe
+    shared_attn_every: int = 0           # zamba2: shared attn at i%k==0
+
+    # --- sub-configs ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+
+    # --- modality frontend stubs ---
+    frontend: str = "none"          # none | vision_stub | audio_stub
+    frontend_tokens: int = 0        # patches / frames provided by input_specs
+    frontend_tiles: int = 1         # vlm anyres tiles (each tile = a block)
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+
+    # provenance (citation for the assigned pool)
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if not self.layer_schedule:
+            object.__setattr__(self, "layer_schedule", self._default_layers())
+        if not self.ffn_schedule:
+            object.__setattr__(self, "ffn_schedule", self._default_ffns())
+        assert len(self.layer_schedule) == self.num_layers, self.name
+        assert len(self.ffn_schedule) == self.num_layers, self.name
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, self.name
+
+    def _default_layers(self) -> Tuple[str, ...]:
+        if self.arch_type == "ssm" and self.xlstm is not None:
+            k = self.xlstm.slstm_every
+            return tuple(
+                SLSTM if (k and i % k == 0) else MLSTM
+                for i in range(self.num_layers)
+            )
+        if self.arch_type == "hybrid":
+            k = self.shared_attn_every or 6
+            return tuple(
+                SHARED_ATTN if (i % k == k - 1) else MAMBA2
+                for i in range(self.num_layers)
+            )
+        return tuple(ATTN for _ in range(self.num_layers))
+
+    def _default_ffns(self) -> Tuple[str, ...]:
+        if self.moe is not None:
+            return tuple(FFN_MOE for _ in range(self.num_layers))
+        if self.arch_type == "ssm":
+            return tuple(FFN_NONE for _ in range(self.num_layers))
+        return tuple(FFN_DENSE for _ in range(self.num_layers))
+
+    # ------------------------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def rotary_dim(self) -> int:
+        d = int(self.head_dim * self.rotary_pct)
+        return d - d % 2
+
+    def uses_attention(self) -> bool:
+        return any(t in (ATTN, SHARED_ATTN) for t in self.layer_schedule)
+
+    def is_recurrent(self) -> bool:
+        """True if the arch has O(1)-state sequence mixers (SSM / xLSTM)."""
+        return any(t in (MAMBA2, MLSTM, SLSTM) for t in self.layer_schedule)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline math)."""
+        n = self.vocab_size * self.d_model  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        hd = self.head_dim
+        for lt, ft in zip(self.layer_schedule, self.ffn_schedule):
+            if lt in (ATTN,):
+                n += self.d_model * hd * (self.num_heads + 2 * self.num_kv_heads)
+                n += self.num_heads * hd * self.d_model
+            elif lt == MAMBA2 and self.ssm:
+                s = self.ssm
+                d_in = s.expand * self.d_model
+                nh = s.num_heads or d_in // s.head_dim
+                n += self.d_model * (2 * d_in + 2 * nh * s.state_dim + nh)
+                n += d_in * self.d_model + s.conv_width * (d_in + 2 * nh * s.state_dim)
+            elif lt in (MLSTM, SLSTM) and self.xlstm:
+                d_in = int(self.xlstm.proj_factor * self.d_model)
+                n += 2 * self.d_model * d_in + d_in * self.d_model
+                n += 3 * self.d_model * d_in  # q,k,v
+            if ft == FFN_DENSE:
+                n += 3 * self.d_model * self.d_ff
+            elif ft == FFN_MOE and self.moe:
+                m = self.moe
+                n += m.num_experts * 3 * self.d_model * m.d_expert
+                n += m.num_shared_experts * 3 * self.d_model * m.d_shared
+                n += self.d_model * m.num_experts  # router
+            n += 2 * self.d_model  # norms
+        if self.shared_attn_every:
+            # shared attention weights counted once, remove duplicates
+            n_shared = sum(1 for t in self.layer_schedule if t == SHARED_ATTN)
+            per = self.d_model * hd * (self.num_heads + 2 * self.num_kv_heads) \
+                + self.num_heads * hd * self.d_model
+            n -= 0  # SHARED_ATTN not counted in loop; add once
+            n += per + 3 * self.d_model * self.d_ff  # shared block incl. MLP
+        if self.encoder:
+            e = self.encoder
+            per = 4 * e.d_model * e.d_model + 2 * e.d_model * e.d_ff + 4 * e.d_model
+            n += e.num_layers * per + e.max_positions * e.d_model
+            # decoder cross-attention
+            n += self.num_layers * 4 * self.d_model * self.d_model
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE top-k) for MODEL_FLOPS = 6*N_active*D."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        n = self.param_count()
+        inactive = (m.num_experts - m.experts_per_token) * 3 * self.d_model * m.d_expert
+        n -= inactive * sum(1 for f in self.ffn_schedule if f == FFN_MOE)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+    # Block structure used for dry-run/bench prefill: uniform blocks.
+    num_blocks: int = 0        # 0 -> derived (seq_len // block_len)
+    block_len: int = 2048
+
+    @property
+    def blocks(self) -> int:
+        return self.num_blocks or max(self.seq_len // self.block_len, 1)
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train", block_len=512)
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill", block_len=2048)
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode", block_len=2048)
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode", block_len=8192)
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 2e-5     # paper §3.4
+    batch_size: int = 64            # paper §3.4
+    warmup_steps: int = 20          # paper §3.4
+    total_steps: int = 1000
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    # paper §3.1: every sample trained in BOTH block and full attention mode
+    mixed_block_full: bool = True
+    seed: int = 0

@@ -1,0 +1,133 @@
+"""KV caches for Block-attention.
+
+Two tiers:
+
+  * ``BlockKVStore`` — the paper's cross-request cache (§2.5 / Fig. 2):
+    content-addressed (hash of the block's token ids) store of *zero-based*
+    per-layer KV states. On fetch, keys are re-rotated to the block's offset
+    in the new prompt (Eq. 3) — see ``repro.core.rope.reencode_positions`` and
+    the fused ``repro.kernels.rope_shift`` kernel.
+    LRU-evicted under a byte budget. Host-side bookkeeping; values may live on
+    device (the TPU adaptation keeps hot blocks HBM-resident).
+
+  * ``DecodeKVCache`` — the ordinary intra-request autoregressive cache used
+    by ``serve_step`` (a jit-friendly pytree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Device-side decode cache (pytree)
+# ---------------------------------------------------------------------------
+class DecodeKVCache(NamedTuple):
+    """Stacked-layer KV cache: k/v (L, B, S, KV, D); length (B,)."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array
+
+    @classmethod
+    def create(cls, num_layers, batch, max_seq, kv_heads, head_dim,
+               dtype=jnp.bfloat16):
+        shape = (num_layers, batch, max_seq, kv_heads, head_dim)
+        return cls(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+
+
+def cache_update(cache_k, cache_v, k_new, v_new, start):
+    """Write (B, S_new, KV, D) into per-layer cache slabs at ``start``.
+
+    ``start`` is a scalar (all batch rows aligned — the engine pads to a
+    common length, which is also what keeps this jit-static-friendly).
+    """
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, start, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, start, axis=1)
+    return cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Cross-request block store (the paper's contribution)
+# ---------------------------------------------------------------------------
+def block_key(tokens: np.ndarray, model_tag: str = "") -> str:
+    h = hashlib.sha256()
+    h.update(model_tag.encode())
+    h.update(np.ascontiguousarray(tokens, dtype=np.int32).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class BlockEntry:
+    kv: Any                 # pytree of zero-based KV arrays (per group-pos)
+    num_tokens: int
+    nbytes: int
+
+
+class BlockKVStore:
+    """Content-addressed LRU store of zero-based block KV states."""
+
+    def __init__(self, budget_bytes: int = 8 << 30, model_tag: str = ""):
+        self._entries: "OrderedDict[str, BlockEntry]" = OrderedDict()
+        self.budget_bytes = budget_bytes
+        self.model_tag = model_tag
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._bytes = 0
+
+    # -- stats ---------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    # -- core ops ------------------------------------------------------
+    def lookup(self, tokens: np.ndarray) -> Optional[BlockEntry]:
+        key = block_key(tokens, self.model_tag)
+        ent = self._entries.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)   # LRU touch
+        self.hits += 1
+        return ent
+
+    def insert(self, tokens: np.ndarray, kv: Any) -> BlockEntry:
+        key = block_key(tokens, self.model_tag)
+        nbytes = int(sum(a.size * a.dtype.itemsize
+                         for a in jax.tree.leaves(kv)))
+        ent = BlockEntry(kv=kv, num_tokens=int(tokens.shape[0]), nbytes=nbytes)
+        if key in self._entries:           # refresh
+            self._bytes -= self._entries[key].nbytes
+        self._entries[key] = ent
+        self._entries.move_to_end(key)
+        self._bytes += nbytes
+        self._evict()
+        return ent
+
+    def _evict(self):
+        while self._bytes > self.budget_bytes and len(self._entries) > 1:
+            _, old = self._entries.popitem(last=False)
+            self._bytes -= old.nbytes
+            self.evictions += 1
+
+    def clear(self):
+        self._entries.clear()
+        self._bytes = 0

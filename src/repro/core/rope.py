@@ -1,0 +1,90 @@
+"""Rotary position embeddings + the paper's position re-encoding (Eq. 1-3).
+
+Key property exploited by Block-attention: RoPE is a per-position rotation, so
+a key encoded at position ``p`` can be moved to position ``p + delta`` by one
+additional rotation of ``delta * theta_k`` — no re-projection through W_k.
+
+We support three variants needed by the assigned pool:
+  * full rotary, half-split layout (llama/mistral/qwen/minitron)
+  * partial rotary (``rotary_pct`` < 1) over the leading dims (glm4, chatglm3)
+  * interleaved pair layout (chatglm's 2d-style rope)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig
+
+
+def rope_frequencies(rotary_dim: int, theta: float, dtype=jnp.float32):
+    """inv_freq[k] = theta^(-2k/d) for k in [0, d/2)."""
+    k = jnp.arange(0, rotary_dim, 2, dtype=dtype)
+    return 1.0 / (theta ** (k / rotary_dim))
+
+
+def _angles(positions, inv_freq):
+    # positions: (..., seq) int32 -> (..., seq, d/2) f32
+    return positions[..., None].astype(jnp.float32) * inv_freq
+
+
+def _rotate_half_layout(x, cos, sin):
+    """llama layout: x = [x1, x2] halves; rotate (x1, x2) pairs."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _rotate_interleaved(x, cos, sin):
+    """chatglm layout: (x0,x1),(x2,x3),... adjacent pairs."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(x.shape)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Apply RoPE at ``positions``.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq) broadcastable.
+    Only the leading ``cfg.rotary_dim`` dims are rotated (partial rotary).
+    """
+    if not cfg.use_rope or cfg.rotary_dim == 0:
+        return x
+    rd = cfg.rotary_dim
+    inv_freq = rope_frequencies(rd, cfg.rope_theta)
+    ang = _angles(positions, inv_freq)                 # (..., seq, rd/2)
+    cos = jnp.cos(ang)[..., None, :]                   # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    xf = x_rot.astype(jnp.float32)
+    rotated = (_rotate_interleaved(xf, cos, sin) if cfg.rope_interleaved
+               else _rotate_half_layout(xf, cos, sin))
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+def reencode_positions(k: jax.Array, delta: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Paper Eq. 3: move cached keys from their stored positions to +delta.
+
+    Cached block keys are stored with *zero-based* positions (the paper's
+    standardisation: "the positional encoding of the initial token of each
+    block is standardized to zero"). Re-use at offset ``i_delta`` therefore
+    needs exactly one extra rotation by ``delta``; because RoPE rotations
+    compose additively, rotating by ``delta`` equals apply_rope at position
+    ``delta`` for every token of the block.
+
+    k: (..., seq, kv_heads, head_dim); delta: scalar or (...,) int32.
+    """
+    if not cfg.use_rope or cfg.rotary_dim == 0:
+        return k
+    delta = jnp.asarray(delta, jnp.int32)
+    # broadcast delta to a per-token position array of the constant delta
+    pos = jnp.broadcast_to(delta[..., None], k.shape[:-2])
+    return apply_rope(k, pos, cfg)
+
+
+def zero_base_positions(k: jax.Array, start: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Paper Eq. 2: counter-rotate keys encoded at [start, start+len) back to
+    zero-based positions (used when adopting full-attention KV into the block
+    store)."""
+    return reencode_positions(k, -jnp.asarray(start, jnp.int32), cfg)

@@ -1,0 +1,3 @@
+"""Data substrate: synthetic RAG task + batch pipeline."""
+from repro.data.pipeline import PipelineConfig, batches, eval_batches  # noqa: F401
+from repro.data.synthetic import RagTaskConfig, build_batch, make_sample  # noqa: F401

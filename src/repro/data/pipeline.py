@@ -1,0 +1,46 @@
+"""Batch pipeline: host-side iterator feeding the trainer.
+
+Implements the paper's §3.1 recipe: every sample is consumed in BOTH
+attention modes (block + full) when ``mixed_block_full`` is on — the trainer
+alternates the mask, the data pipeline just tags batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator
+
+import numpy as np
+
+from repro.data.synthetic import RagTaskConfig, build_batch
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    task: RagTaskConfig
+    batch_size: int = 64
+    mixed_block_full: bool = True
+    seed: int = 0
+
+
+def batches(cfg: PipelineConfig) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite stream. Yields dict batches with a ``block_mode`` flag.
+
+    With mixed training, the same underlying samples are yielded twice —
+    once per attention mode — matching "all samples in the training set will
+    be trained in both ways" (paper §3.1).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    while True:
+        batch = build_batch(rng, cfg.task, cfg.batch_size)
+        if cfg.mixed_block_full:
+            yield dict(batch, block_mode=True)
+            yield dict(batch, block_mode=False)
+        else:
+            yield dict(batch, block_mode=False)
+
+
+def eval_batches(task: RagTaskConfig, batch_size: int, num_batches: int,
+                 seed: int = 10_000) -> Iterator[Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    for _ in range(num_batches):
+        yield build_batch(rng, task, batch_size)

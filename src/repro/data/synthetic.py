@@ -1,0 +1,163 @@
+"""Synthetic RAG task mirroring the paper's training data *shape* (§3.1).
+
+Each sample = (question, 10 retrieved passages, answer), where:
+  * passages are token sequences containing (key -> value) "facts";
+  * exactly one retrieved passage (the gold one) contains the queried fact;
+  * the answer is the fact's value token — answerable ONLY by reading the
+    gold passage (the association is unique per sample, never memorisable).
+
+This gives the same qualitative dynamics as NQ/TQA RAG fine-tuning: a model
+must attend from the query block into a passage block, so switching to
+Block-attention without fine-tuning breaks it (the paper's 67.9 -> 48.0 drop)
+and block fine-tuning repairs it — which is exactly what
+benchmarks/accuracy_recovery.py measures.
+
+Token map (tiny vocab): 0 PAD, 1 BOS, 2 QUERY, 3 ANSWER, 4 SEP,
+5..KEYS+5 keys, then values, then filler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+PAD, BOS, QUERY, ANSWER, SEP = 0, 1, 2, 3, 4
+N_SPECIAL = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class RagTaskConfig:
+    vocab_size: int = 512
+    num_keys: int = 96
+    num_values: int = 96
+    passage_len: int = 24
+    facts_per_passage: int = 2
+    num_passages: int = 10          # paper: 10 retrieved passages
+    queries_per_sample: int = 4     # multiple lookups -> denser loss signal
+    seed: int = 0
+
+    @property
+    def key_range(self) -> Tuple[int, int]:
+        return N_SPECIAL, N_SPECIAL + self.num_keys
+
+    @property
+    def value_range(self) -> Tuple[int, int]:
+        lo = N_SPECIAL + self.num_keys
+        return lo, lo + self.num_values
+
+    @property
+    def filler_range(self) -> Tuple[int, int]:
+        lo = N_SPECIAL + self.num_keys + self.num_values
+        return lo, self.vocab_size
+
+    @property
+    def query_block_len(self) -> int:
+        # per query: [QUERY, key, value] — the value is predicted FROM the
+        # key position (classic induction-head geometry: find the key
+        # earlier in context, copy the token after it)
+        return 3 * self.queries_per_sample
+
+    @property
+    def sample_len(self) -> int:
+        return self.num_passages * self.passage_len + self.query_block_len
+
+
+def _make_passage(rng: np.random.Generator, cfg: RagTaskConfig,
+                  facts: List[Tuple[int, int]]) -> np.ndarray:
+    """A passage: filler tokens with (key, value) pairs embedded."""
+    f_lo, f_hi = cfg.filler_range
+    toks = rng.integers(f_lo, f_hi, cfg.passage_len).astype(np.int32)
+    # place facts at random non-overlapping slots
+    slots = rng.choice(cfg.passage_len // 2 - 1, size=len(facts),
+                       replace=False) * 2
+    for (key, val), s in zip(facts, slots):
+        toks[s] = key
+        toks[s + 1] = val
+    return toks
+
+
+def make_sample(rng: np.random.Generator, cfg: RagTaskConfig
+                ) -> Dict[str, np.ndarray]:
+    """Returns blocks (list of token arrays), query, answer, flat sample."""
+    k_lo, k_hi = cfg.key_range
+    v_lo, v_hi = cfg.value_range
+    # distinct keys across the whole sample so the queried fact is unique
+    n_facts = cfg.num_passages * cfg.facts_per_passage
+    keys = rng.choice(k_hi - k_lo, size=n_facts, replace=False) + k_lo
+    vals = rng.integers(v_lo, v_hi, n_facts)
+    facts = list(zip(keys.tolist(), vals.tolist()))
+
+    passages = []
+    for i in range(cfg.num_passages):
+        fs = facts[i * cfg.facts_per_passage:(i + 1) * cfg.facts_per_passage]
+        passages.append(_make_passage(rng, cfg, fs))
+
+    # several lookups per sample — denser training signal; the FIRST query
+    # is the scored one for accuracy evals
+    q_idx = rng.choice(n_facts, size=cfg.queries_per_sample, replace=False)
+    tail, ans_positions = [], []
+    for j, fi in enumerate(q_idx):
+        key, val = facts[fi]
+        tail.extend([QUERY, key, val])
+        ans_positions.append(3 * j + 2)
+    query_block = np.asarray(tail, np.int32)
+    first_key, first_val = facts[q_idx[0]]
+
+    return {
+        "passages": passages,
+        "query_block": query_block,
+        "answer_positions": np.asarray(ans_positions, np.int32),
+        "answer_token": np.int32(first_val),
+        "gold_passage": np.int32(q_idx[0] // cfg.facts_per_passage),
+    }
+
+
+def build_batch(rng: np.random.Generator, cfg: RagTaskConfig, batch: int
+                ) -> Dict[str, np.ndarray]:
+    """Batch of flat samples + block structure + labels.
+
+    Layout per row: [p_0 ... p_9 | query+answer]; block i = passage i,
+    final block = query + answer (the paper's "user query is the final
+    block"; the answer must live in the final block so its loss positions
+    can attend every passage).
+    """
+    S = cfg.sample_len
+    tokens = np.zeros((batch, S), np.int32)
+    labels = np.full((batch, S), -1, np.int32)       # -1 = no loss
+    block_ids = np.zeros((batch, S), np.int32)
+    answer_tok = np.zeros((batch,), np.int32)
+    gold = np.zeros((batch,), np.int32)
+
+    for b in range(batch):
+        s = make_sample(rng, cfg)
+        row, ids = [], []
+        for i, p in enumerate(s["passages"]):
+            row.append(p)
+            ids.append(np.full(len(p), i, np.int32))
+        row.append(s["query_block"])
+        ids.append(np.full(len(s["query_block"]), cfg.num_passages, np.int32))
+        row = np.concatenate(row)
+        ids = np.concatenate(ids)
+        tokens[b] = row
+        block_ids[b] = ids
+        # next-token loss on each answer (value) position
+        q_start = cfg.num_passages * cfg.passage_len
+        for ap in s["answer_positions"]:
+            pos = q_start + ap
+            labels[b, pos - 1] = row[pos]
+        answer_tok[b] = s["answer_token"]
+        gold[b] = s["gold_passage"]
+
+    return {
+        "tokens": tokens,
+        "labels": labels,
+        "block_ids": block_ids,
+        "last_block": np.full((batch,), cfg.num_passages, np.int32),
+        "answer_token": answer_tok,
+        "gold_passage": gold,
+    }
+
+
+def query_start(cfg: RagTaskConfig) -> int:
+    return cfg.num_passages * cfg.passage_len

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the Block-attention hot-spots.
+
+  block_attention — within-block + final-global flash prefill (grid-level
+                    tile skipping realises the paper's FLOPs reduction)
+  decode_attention — single-token flash decode over the KV cache
+  rope_shift      — fused position re-encoding of cached keys (paper Eq. 3)
+
+ops.py = jit'd public wrappers; ref.py = pure-jnp oracles. Kernels are
+validated in interpret mode on CPU (TPU is the deploy target).
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: causal flash attention with GQA + query offset.
+
+This single kernel realises both halves of Block-attention prefill
+(the paper's Fig. 1 mask) via *grid-level sparsity* instead of in-kernel
+masking waste:
+
+  * within-block passes — blocks are folded into the batch dimension by the
+    caller (``ops.block_attention_prefill``), so the KV grid only ever spans
+    one block: cross-block tiles are never visited. FLOPs scale with
+    Σ block_len² instead of S².
+  * final-block global pass — the same kernel with ``q_offset = S - L``:
+    the query block attends the whole sequence causally.
+
+Grid: (B*KV, num_q_tiles, num_kv_tiles); the KV dimension is the innermost
+(sequential) axis — running max / denominator / accumulator live in VMEM
+scratch across KV iterations (the canonical TPU flash-attention schedule).
+Fully-masked KV tiles (beyond the causal frontier) are skipped with
+``pl.when``: the MXU does no work for them.
+
+BlockSpec tiling (VMEM working set, bf16 in / f32 acc):
+  q tile (1, G, TQ, D) + acc (G, TQ, D) f32 + k/v tiles (TK, D)
+  with TQ=256, TK=512, G<=8, D=128  ->  ~0.5 + 1.0 + 0.25 MB << 16 MB VMEM,
+  and TQ/TK/D all multiples of the 128-lane MXU tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TQ = 256
+DEFAULT_TK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, q_offset: int, kv_len: int,
+                  tq: int, tk: int, softcap: float):
+    """One (n, i, j) grid step: q tile i accumulates kv tile j."""
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal frontier: last query of this tile sits at global position
+    # q_offset + (i+1)*tq - 1; kv tile j starts at j*tk.
+    q_hi = q_offset + (i + 1) * tq - 1
+    live = (j * tk <= q_hi) & (j * tk < kv_len)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale              # (G, TQ, D)
+        k = k_ref[0].astype(jnp.float32)                      # (TK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, TQ, TK)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_offset + i * tq + jax.lax.broadcasted_iota(
+            jnp.int32, (tq, tk), 0)
+        kv_pos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        mask = (kv_pos <= q_pos) & (kv_pos < kv_len)
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_ref[...]                                   # (G, TQ)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, TQ, D)
+        m_ref[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_causal(
+    q: jax.Array,            # (N, G, Sq, D)   N = batch * kv_heads
+    k: jax.Array,            # (N, Skv, D)
+    v: jax.Array,            # (N, Skv, D)
+    *,
+    scale: float,
+    q_offset: int = 0,       # global position of q[.., 0, ..] on the kv axis
+    kv_len: int = 0,         # valid kv length (0 -> Skv)
+    tq: int = DEFAULT_TQ,
+    tk: int = DEFAULT_TK,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    N, G, Sq, D = q.shape
+    Skv = k.shape[1]
+    kv_len = kv_len or Skv
+    tq = min(tq, Sq)
+    tk = min(tk, Skv)
+    assert Sq % tq == 0 and Skv % tk == 0, (Sq, tq, Skv, tk)
+    grid = (N, Sq // tq, Skv // tk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, q_offset=q_offset, kv_len=kv_len,
+        tq=tq, tk=tk, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, tq, D), lambda n, i, j: (n, 0, i, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, i, j: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, tq, D), lambda n, i, j: (n, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, tq), jnp.float32),        # running max m
+            pltpu.VMEM((G, tq), jnp.float32),        # denominator l
+            pltpu.VMEM((G, tq, D), jnp.float32),     # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: single-step (decode) flash attention over a KV cache.
+
+One new token per sequence attends ``cache_len`` cached KV entries.
+Grid: (B*KV, num_kv_tiles) with the KV axis sequential; scratch accumulators
+carry the online softmax. The dynamic valid length arrives as a scalar-ish
+(1,1) int32 operand (portable across interpret/TPU without scalar prefetch).
+
+An optional sliding ``window`` restricts attention to the trailing positions —
+the long_500k dense-arch variant.
+
+VMEM: q (G, D) + k/v tiles (TK, D) + acc (G, D) f32 — trivially small; the
+kernel is HBM-bandwidth-bound by the cache stream, as the roofline confirms.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_TK = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, tk: int, window: int, softcap: float):
+    j = pl.program_id(1)
+    nkv = pl.num_programs(1)
+    cache_len = len_ref[0, 0]               # tokens valid in cache (incl. new)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo = jnp.maximum(cache_len - window, 0) if window else 0
+    live = (j * tk < cache_len) & ((j + 1) * tk > lo)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale               # (G, D)
+        k = k_ref[0].astype(jnp.float32)                       # (TK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, TK)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        kv_pos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (1, tk), 1)[0]
+        mask = kv_pos < cache_len
+        if window:
+            mask &= kv_pos >= lo
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,            # (N, G, D)  N = batch * kv_heads
+    k_cache: jax.Array,      # (N, Skv, D)
+    v_cache: jax.Array,      # (N, Skv, D)
+    cache_len: jax.Array,    # (1, 1) int32 — valid length incl. the new token
+    *,
+    scale: float,
+    window: int = 0,
+    tk: int = DEFAULT_TK,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    N, G, D = q.shape
+    Skv = k_cache.shape[1]
+    tk = min(tk, Skv)
+    assert Skv % tk == 0, (Skv, tk)
+    grid = (N, Skv // tk)
+    kernel = functools.partial(_decode_kernel, scale=scale, tk=tk,
+                               window=window, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda n, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda n, j: (n, 0, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, j: (n, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, j: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda n, j: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len, q, k_cache, v_cache)

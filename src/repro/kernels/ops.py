@@ -1,0 +1,124 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Layout adapters: models use (B, S, H, D) / (B, S, KV, D); the kernels use
+(N=B*KV, G, S, D) with GQA folded. ``interpret`` defaults to True (CPU
+container); on real TPU pass interpret=False (or set REPRO_PALLAS_COMPILE=1).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_attention import flash_causal
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.rope_shift import rope_shift
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _fold(q, k, v):
+    """(B,Sq,H,D)x(B,Skv,KV,D) -> q (B*KV, G, Sq, D); k/v (B*KV, Skv, D)."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, Sq, KV, G, D).transpose(0, 2, 3, 1, 4).reshape(
+        B * KV, G, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+    return qf, kf, vf
+
+
+def _unfold(o, B, H, D):
+    """(B*KV, G, S, D) -> (B, S, H, D)."""
+    N, G, S, _ = o.shape
+    KV = N // B
+    return o.reshape(B, KV, G, S, D).transpose(0, 3, 1, 2, 4).reshape(
+        B, S, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_blocks", "scale", "softcap", "interpret"))
+def block_attention_prefill(q, k, v, num_blocks: int, scale: float,
+                            softcap: float = 0.0,
+                            interpret: bool = INTERPRET):
+    """Block-attention prefill (paper Fig. 1) via two kernel launches.
+
+    1) within-block: blocks folded into batch — the grid never visits a
+       cross-block tile (that's the FLOPs reduction);
+    2) final block re-done globally with q_offset = S - L.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    L = S // num_blocks
+    assert S % num_blocks == 0
+
+    # within-block: (B, nb, L, ...) folded to batch
+    qb = q.reshape(B * num_blocks, L, H, D)
+    kb = k.reshape(B * num_blocks, L, KV, D)
+    vb = v.reshape(B * num_blocks, L, KV, D)
+    qf, kf, vf = _fold(qb, kb, vb)
+    tq = min(256, L)
+    tk = min(512, L)
+    o_within = flash_causal(qf, kf, vf, scale=scale, tq=tq, tk=tk,
+                            softcap=softcap, interpret=interpret)
+    o_within = _unfold(o_within, B * num_blocks, H, D).reshape(B, S, H, D)
+    if num_blocks == 1:
+        return o_within
+
+    # final block: global causal pass
+    qf2, kf2, vf2 = _fold(q[:, S - L:], k, v)
+    o_final = flash_causal(qf2, kf2, vf2, scale=scale, q_offset=S - L,
+                           tq=min(256, L), tk=min(512, S), softcap=softcap,
+                           interpret=interpret)
+    o_final = _unfold(o_final, B, H, D)
+    return jnp.concatenate([o_within[:, : S - L], o_final], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "q_offset", "softcap", "interpret"))
+def causal_attention(q, k, v, scale: float, q_offset: int = 0,
+                     softcap: float = 0.0, interpret: bool = INTERPRET):
+    """Plain causal flash attention (full-attention mode)."""
+    B, S, H, D = q.shape
+    qf, kf, vf = _fold(q, k, v)
+    o = flash_causal(qf, kf, vf, scale=scale, q_offset=q_offset,
+                     tq=min(256, S), tk=min(512, k.shape[1]),
+                     softcap=softcap, interpret=interpret)
+    return _unfold(o, B, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "window", "softcap", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, scale: float,
+                     window: int = 0, softcap: float = 0.0,
+                     interpret: bool = INTERPRET):
+    """Single-token decode. q (B,1,H,D); cache_len scalar int32 (incl. new)."""
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, -1, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, -1, D)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (1, 1))
+    o = flash_decode(qf, kf, vf, cl, scale=scale, window=window,
+                     softcap=softcap, interpret=interpret)
+    return o.reshape(B, KV, G, D).reshape(B, 1, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rotary_dim", "theta", "interleaved", "interpret"))
+def reencode_block_kv(k, delta, rotary_dim: int, theta: float,
+                      interleaved: bool = False, interpret: bool = INTERPRET):
+    """Fused Eq.-3 re-rotation of cached zero-based keys to offset delta.
+
+    k: (..., S, KV, D) — leading dims (layers/groups) are vmapped.
+    """
+    d = jnp.broadcast_to(jnp.asarray(delta, jnp.int32), (1, 1))
+    fn = functools.partial(rope_shift, rotary_dim=rotary_dim, theta=theta,
+                           interleaved=interleaved, interpret=interpret)
+    flat = k.reshape((-1,) + k.shape[-3:])
+    out = jax.vmap(lambda kk: fn(kk, d))(flat)
+    return out.reshape(k.shape)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as A
+from repro.core.blocks import uniform_layout
+from repro.core.rope import rope_frequencies
+
+
+def block_attention_ref(q, k, v, num_blocks: int, scale: float,
+                        softcap: float = 0.0):
+    """Oracle for ops.block_attention_prefill. q (B,S,H,D), k/v (B,S,KV,D)."""
+    B, S = q.shape[:2]
+    lay = uniform_layout(S, num_blocks, batch=B)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = A.block_mask(pos, pos, lay.block_ids, lay.block_ids,
+                        lay.last_block_id)
+    return A.attention_ref(q, k, v, mask, scale, softcap=softcap)
+
+
+def causal_attention_ref(q, k, v, scale: float, q_offset: int = 0,
+                         softcap: float = 0.0):
+    """Oracle for flash_causal. q (B,Sq,H,D) at global offset q_offset."""
+    B, Sq = q.shape[:2]
+    Skv = k.shape[1]
+    q_pos = jnp.broadcast_to(
+        q_offset + jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32), (B, Skv))
+    mask = A.block_mask(q_pos, kv_pos)
+    return A.attention_ref(q, k, v, mask, scale, softcap=softcap)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, scale: float,
+                         window: int = 0, softcap: float = 0.0):
+    """Oracle for flash_decode. q (B,1,H,D); cache_len (B,) incl. new token."""
+    return A.decode_attention(q, k_cache, v_cache, cache_len - 1, scale,
+                              window=window, softcap=softcap)
+
+
+def rope_shift_ref(k, delta, *, rotary_dim: int, theta: float,
+                   interleaved: bool = False):
+    """Oracle for rope_shift. k (S, KV, D); delta scalar int."""
+    half = rotary_dim // 2
+    inv_freq = rope_frequencies(rotary_dim, theta)
+    ang = jnp.asarray(delta, jnp.float32) * inv_freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x = k[..., :rotary_dim].astype(jnp.float32)
+    if interleaved:
+        x1, x2 = x[..., 0::2], x[..., 1::2]
+        rot = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                        axis=-1).reshape(x.shape)
+    else:
+        x1, x2 = x[..., :half], x[..., half:]
+        rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                              axis=-1)
+    return jnp.concatenate([rot.astype(k.dtype), k[..., rotary_dim:]], axis=-1)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused position re-encoding (paper Eq. 3).
+
+Rotates cached (zero-based) keys to a new block offset ``delta`` in one HBM
+round trip: k' = R(delta) @ k elementwise over (seq, kv_heads, head_dim).
+The rotation angle is constant across the block — cos/sin are computed once
+per tile from the scalar delta (VPU work, negligible) instead of materialising
+a positions array in HBM.
+
+Grid: (num_seq_tiles,); block (TS, KV, D) in VMEM. Purely elementwise —
+HBM-bandwidth bound (2 * bytes(k) moved), which is exactly why fusing the
+zero-base + re-rotate of the naive two-pass formulation matters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TS = 512
+
+
+def _rope_shift_kernel(delta_ref, k_ref, o_ref, *, rotary_dim: int,
+                       theta: float, interleaved: bool):
+    k = k_ref[...]
+    delta = delta_ref[0, 0].astype(jnp.float32)
+    rd = rotary_dim
+    half = rd // 2
+    inv_freq = 1.0 / (theta ** (
+        jax.lax.broadcasted_iota(jnp.float32, (1, half), 1)[0] * 2.0 / rd))
+    ang = delta * inv_freq                                    # (half,)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x = k[..., :rd].astype(jnp.float32)
+    if interleaved:
+        x1, x2 = x[..., 0::2], x[..., 1::2]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        rot = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    else:
+        x1, x2 = x[..., :half], x[..., half:]
+        rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                              axis=-1)
+    o_ref[...] = jnp.concatenate(
+        [rot.astype(k.dtype), k[..., rd:]], axis=-1)
+
+
+def rope_shift(
+    k: jax.Array,            # (S, KV, D) zero-based cached keys
+    delta: jax.Array,        # (1, 1) int32 target offset
+    *,
+    rotary_dim: int,
+    theta: float,
+    interleaved: bool = False,
+    ts: int = DEFAULT_TS,
+    interpret: bool = True,
+) -> jax.Array:
+    S, KV, D = k.shape
+    ts = min(ts, S)
+    assert S % ts == 0, (S, ts)
+    kernel = functools.partial(_rope_shift_kernel, rotary_dim=rotary_dim,
+                               theta=theta, interleaved=interleaved)
+    return pl.pallas_call(
+        kernel,
+        grid=(S // ts,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((ts, KV, D), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, KV, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, KV, D), k.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(delta, k)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, sharding rules, dry-run, train/serve CLIs."""
+from repro.launch.mesh import make_production_mesh  # noqa: F401

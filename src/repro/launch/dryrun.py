@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks on first init.
+
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import json                # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config                  # noqa: E402
+from repro.core.config import SHAPES, TrainConfig               # noqa: E402
+from repro.launch import sharding as SH                         # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.specs import arch_shape_config, input_specs, supported  # noqa: E402
+from repro.launch.steps import make_step                        # noqa: E402
+from repro.models import api                                    # noqa: E402
+from repro.models.transformer import build_layer_specs, find_period  # noqa: E402
+from repro.roofline import (                                    # noqa: E402
+    model_flops_6nd, parse_collectives, roofline_terms, step_flops,
+)
+from repro.training import optim                                # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh): lower + compile the step
+function against ShapeDtypeStruct inputs on the production mesh, print
+memory/cost analysis, audit collectives, and emit a JSON record consumed by
+EXPERIMENTS.md §Dry-run / §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tulu3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+
+VARIANTS = ("base", "fsdp", "blockpar", "cf10", "group4096", "group256")
+
+
+def apply_variant(cfg, variant: str):
+    """§Perf config-level variants (sharding-level ones handled in run_one)."""
+    if variant == "cf10" and cfg.moe:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    if variant.startswith("group") and cfg.moe:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         group_size=int(variant[5:])))
+    return cfg
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str = "experiments/dryrun", unroll: bool = False,
+            block_mode: bool = True, variant: str = "base") -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = supported(cfg0, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "block_mode": block_mode, "variant": variant, "ok": False}
+    if not ok:
+        rec.update(skipped=True, reason=why)
+        return rec
+
+    cfg = apply_variant(arch_shape_config(cfg0, shape), variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    t0 = time.perf_counter()
+
+    model_parallel = variant not in ("fsdp", "blockpar")
+    fold_spec = None
+    if variant == "blockpar":
+        dp = ("pod", "data", "model") if multi_pod else ("data", "model")
+        fold_spec = P(dp, None, None, None)
+
+    # ---- shape-only pytrees (no allocation) --------------------------
+    params_shape = jax.eval_shape(
+        lambda k: api.model_init(k, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = input_specs(cfg, shape)
+    step, needs_opt = make_step(cfg, shape, TrainConfig(), fold_spec=fold_spec)
+
+    # ---- shardings ----------------------------------------------------
+    p_sh = SH.params_sharding(params_shape, mesh,
+                              model_parallel=model_parallel)
+    if shape.kind == "decode":
+        b_sh = {
+            "tokens": SH.batch_sharding(specs["tokens"], mesh),
+            "cache_len": SH.batch_sharding(specs["cache_len"], mesh),
+        }
+        shard_seq = shape.global_batch == 1
+        if "caches" in specs:
+            b_sh["caches"] = SH.cache_sharding(cfg, specs["caches"], mesh,
+                                               shard_seq=shard_seq)
+        if "states" in specs:
+            b_sh["states"] = SH.cache_sharding(cfg, specs["states"], mesh)
+        if "enc_out" in specs:
+            b_sh["enc_out"] = SH.batch_sharding(specs["enc_out"], mesh)
+        args = (params_shape, specs)
+        in_sh = (p_sh, b_sh)
+        fn = lambda params, batch: step(params, batch)        # noqa: E731
+    elif shape.kind == "prefill":
+        b_sh = SH.batch_sharding(specs, mesh)
+        args = (params_shape, specs)
+        in_sh = (p_sh, b_sh)
+        fn = step
+    else:  # train
+        opt_shape = jax.eval_shape(optim.init_opt_state, params_shape)
+        o_sh = optim.AdamState(
+            step=SH.batch_sharding(opt_shape.step, mesh),
+            mu=SH.params_sharding(opt_shape.mu, mesh),
+            nu=SH.params_sharding(opt_shape.nu, mesh))
+        b_sh = SH.batch_sharding(specs, mesh)
+        args = (params_shape, opt_shape, specs)
+        in_sh = (p_sh, o_sh, b_sh)
+        fn = step
+
+    # ---- lower + compile ----------------------------------------------
+    try:
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+    except Exception as e:  # noqa: BLE001 — a failure IS the finding
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+
+    # ---- roofline -------------------------------------------------------
+    period = find_period(build_layer_specs(cfg))
+    groups = cfg.num_layers // period
+    colls = parse_collectives(hlo, loop_trip_count=groups)
+    fl = step_flops(cfg, shape, block_mode=block_mode)
+    mf = model_flops_6nd(cfg, shape)
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    rl = roofline_terms(
+        analytic_flops_total=fl["total"],
+        hbm_bytes_per_chip=hbm_bytes,
+        coll_bytes_per_chip=colls.total_bytes,
+        chips=chips,
+        model_flops=mf,
+        hlo_flops_raw=float(cost.get("flops", 0.0)))
+
+    rec.update(
+        ok=True,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            peak_bytes=mem.peak_memory_in_bytes,
+        ),
+        cost=dict(flops=float(cost.get("flops", 0.0)),
+                  bytes_accessed=hbm_bytes),
+        collectives=dict(bytes_by_op=colls.bytes_by_op,
+                         count_by_op=colls.count_by_op,
+                         total_bytes=colls.total_bytes),
+        flops_analytic=fl,
+        roofline=rl.as_dict(),
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if block_mode else "_full"
+        if variant != "base":
+            suffix += f"_{variant}"
+        path = os.path.join(
+            out_dir, f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (pod,data,model) mesh instead of 16x16")
+    ap.add_argument("--full-attention", action="store_true",
+                    help="lower the full-attention baseline (no block mask)")
+    ap.add_argument("--variant", default="base", choices=VARIANTS,
+                    help="§Perf sharding/config variant")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    n_fail = 0
+    for arch in archs:
+        for shp in shapes:
+            t0 = time.perf_counter()
+            rec = run_one(arch, shp, args.multi_pod, args.out,
+                          block_mode=not args.full_attention,
+                          variant=args.variant)
+            dt = time.perf_counter() - t0
+            if rec.get("skipped"):
+                status = f"SKIP ({rec['reason'][:60]})"
+            elif rec["ok"]:
+                r = rec["roofline"]
+                status = (f"OK   {dt:6.1f}s  peak={rec['memory']['peak_bytes']/2**30:6.2f}GiB  "
+                          f"dom={r['dominant']:<10} "
+                          f"c/m/x={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+                          f"{r['collective_s']:.2e}s")
+            else:
+                n_fail += 1
+                status = f"FAIL {rec.get('error', '')[:100]}"
+            print(f"[dryrun] {arch:<24} {shp:<12} "
+                  f"{'2x16x16' if args.multi_pod else '16x16':<8} {status}",
+                  flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

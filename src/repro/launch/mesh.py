@@ -1,0 +1,27 @@
+"""Production mesh construction (TPU v5e pods; CPU-host placeholders for
+the dry-run).
+
+Single pod  : (16, 16)      axes ("data", "model")   = 256 chips
+Multi-pod   : (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (smoke tests see 1 device; only dryrun.py forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that shard the batch (pod folds into data parallelism)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,184 @@
+"""GSPMD partition rules: FSDP over ``data`` + tensor/expert parallel over
+``model`` (MaxText-style regex rules over '/'-joined param paths).
+
+The ``pod`` axis (multi-pod mesh) is pure data parallelism: params replicate
+across pods, the batch shards over (pod, data). This keeps cross-pod (DCN)
+traffic to gradient all-reduce only — the right default when inter-pod
+bandwidth << ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.config import ModelConfig
+
+# (regex over param path, spec for the LAST ndim dims of the leaf)
+# "D" = FSDP axis (data), "M" = tensor-parallel axis (model).
+_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    (r"embed$",                    ("M", "D")),     # (V, d)
+    (r"lm_head$",                  ("D", "M")),     # (d, V)
+    (r"dec_pos$",                  (None, "M")),    # (maxpos, d)
+    (r"enc_proj$",                 (None, "M")),
+    (r"projector/w1$",             (None, "M")),
+    (r"projector/w2$",             ("M", "D")),
+    # attention
+    (r"attn/wq$|attn/wk$|attn/wv$|self/wq$|self/wk$|self/wv$|"
+     r"cross/wq$|cross/wk$|cross/wv$", ("D", "M")),
+    (r"attn/wo$|self/wo$|cross/wo$",   ("M", "D")),
+    (r"q_norm$|k_norm$",           (None,)),
+    # dense mlp
+    (r"mlp/w_gate$|mlp/w_up$|w_in$",   ("D", "M")),
+    (r"mlp/w_down$|w_out$",            ("M", "D")),
+    # moe (expert parallel over model)
+    (r"moe/router$",               ("D", None)),
+    (r"moe/w_gate$|moe/w_up$",     ("M", "D", None)),   # (E, d, ff)
+    (r"moe/w_down$",               ("M", None, "D")),   # (E, ff, d)
+    (r"moe/shared/w_gate$|moe/shared/w_up$", ("D", "M")),
+    (r"moe/shared/w_down$",        ("M", "D")),
+    # mamba2
+    (r"mamba/in_proj$",            ("D", "M")),
+    (r"mamba/out_proj$",           ("M", "D")),
+    (r"mamba/conv_w$",             (None, "M")),
+    (r"mamba/conv_b$",             ("M",)),
+    (r"mamba/(A_log|D|dt_bias)$",  (None,)),
+    (r"mamba/norm$",               ("M",)),
+    # xlstm
+    (r"up_proj$",                  ("D", "M")),
+    (r"down_proj$",                ("M", "D")),
+    (r"(mlstm|slstm)/w[qkv]$",     ("D", "M")),
+    (r"w_if$|w_gates$",            ("D", None)),
+    (r"r_gates$",                  ("M", None, None)),  # (H, dh, 4dh)
+    (r"b_if$|b_gates$",            (None,)),
+    (r"conv_w$",                   (None, "M")),
+    (r"conv_b$",                   ("M",)),
+    # norms / everything 1-d
+    (r"(^|/)(ln|ln1|ln2|ln_x|norm|final_norm|enc_final_ln)$", (None,)),
+]
+
+
+def _axis(tag: Optional[str], mesh: Mesh):
+    if tag == "D":
+        return "data"
+    if tag == "M":
+        return "model"
+    return None
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    ndim = len(shape)
+    for pat, tags in _RULES:
+        if re.search(pat, path):
+            axes = [_axis(t, mesh) for t in tags]
+            pad = ndim - len(axes)            # group-stacked leading dims
+            if pad < 0:                       # rule longer than leaf (scalars)
+                axes = axes[-ndim:] if ndim else []
+                pad = 0
+            axes = [None] * pad + axes
+            # jit in_shardings require divisibility: drop non-dividing axes
+            axes = [a if a is not None and shape[i] % mesh.shape[a] == 0
+                    else None for i, a in enumerate(axes)]
+            return P(*axes)
+    return P()                                # replicate by default
+
+
+def flatten_paths(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_paths(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(flatten_paths(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):
+        for k in tree._fields:
+            out.update(flatten_paths(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def params_sharding(params_shape, mesh: Mesh, model_parallel: bool = True):
+    """Pytree of NamedSharding matching a params (shape-)pytree.
+
+    model_parallel=False -> pure FSDP/DP: the 'model' axis is dropped from
+    every rule (weights replicated across it, batch can fold over it).
+    The right call for small models (see §Perf: whisper) and for
+    block-parallel prefill.
+    """
+    flat = flatten_paths(params_shape)
+
+    def spec(path, shape):
+        s = spec_for_path(path, shape, mesh)
+        if not model_parallel:
+            s = P(*[None if a == "model" else a for a in s])
+        return s
+
+    specs = {path: spec(path, tuple(leaf.shape)) for path, leaf
+             in flat.items()}
+    leaves, treedef = jax.tree.flatten(params_shape)
+    keys = list(flat.keys())
+    return treedef.unflatten(
+        [NamedSharding(mesh, specs[k]) for k in keys])
+
+
+def batch_sharding(batch_shape, mesh: Mesh):
+    """Shard dim 0 (global batch) over (pod,)data; replicate the rest."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return jax.tree.map(
+        lambda leaf: _batch_leaf(leaf, mesh, dp), batch_shape)
+
+
+def _batch_leaf(leaf, mesh, dp):
+    if getattr(leaf, "ndim", 0) == 0:
+        return NamedSharding(mesh, P())
+    b = leaf.shape[0]
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    if b % total == 0 and b >= total:
+        spec = P(dp if len(dp) > 1 else dp[0])
+        return NamedSharding(mesh, spec)
+    return NamedSharding(mesh, P())
+
+
+def cache_sharding(cfg: ModelConfig, caches_shape, mesh: Mesh,
+                   shard_seq: bool = False):
+    """Decode KV cache (G, B, S, KV, D) sharding.
+
+    Default: batch over (pod,)data; KV heads over model when divisible,
+    otherwise the sequence axis goes to model (kv=2 GQA can't fill 16-way TP).
+    ``shard_seq``: long_500k (batch=1) — sequence over ALL data axes.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    model_size = mesh.shape["model"]
+    kv_on_model = cfg.num_kv_heads % model_size == 0
+
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def leaf_spec(leaf):
+        if leaf.ndim == 5:                       # (G, B, S, KV, D)
+            B, S = leaf.shape[1], leaf.shape[2]
+            if shard_seq and S % dp_total == 0:
+                return P(None, None, dp_spec,
+                         "model" if kv_on_model else None, None)
+            if B % dp_total:
+                return P()
+            if kv_on_model:
+                return P(None, dp_spec, None, "model", None)
+            if S % model_size == 0:
+                return P(None, dp_spec, "model", None, None)
+            return P(None, dp_spec, None, None, None)
+        if leaf.ndim >= 2 and leaf.shape[1] > 1 \
+                and leaf.shape[1] % dp_total == 0:  # recurrent states (G,B,..)
+            return P(None, dp_spec)
+        return P()
+
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, leaf_spec(leaf)), caches_shape)

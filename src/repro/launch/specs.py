@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct input specs for every (arch × input-shape) pair.
+
+No device allocation — the dry-run lowers against these stand-ins.
+Decode shapes include the KV-cache / recurrent-state pytrees obtained via
+``jax.eval_shape`` over the real initialisers, so spec and runtime can never
+drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer as T
+from repro.models.vlm import D_VISION
+
+SDS = jax.ShapeDtypeStruct
+
+
+def arch_shape_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Shape-dependent config variants (DESIGN.md §5).
+
+    long_500k on dense full-attention archs -> sliding-window (8192) variant.
+    llama4 keeps its native chunked attention; recurrent archs unchanged.
+    """
+    if (shape.name == "long_500k" and cfg.uses_attention()
+            and not cfg.is_recurrent() and cfg.attention_chunk == 0
+            and cfg.sliding_window == 0 and cfg.arch_type != "audio"):
+        return dataclasses.replace(cfg, sliding_window=8192)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if cfg.arch_type == "audio" and shape.name == "long_500k":
+        return False, ("enc-dec ASR decoder has no 500K-token decode regime "
+                       "(DESIGN.md §5)")
+    return True, ""
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.arch_type == "vlm":
+        P = cfg.frontend_tokens
+        S_text = S - P
+        return {
+            "tokens": SDS((B, S_text), i32),
+            "labels": SDS((B, S_text), i32),
+            "patches": SDS((B, P, D_VISION), _dtype(cfg)),
+        }
+    if cfg.arch_type == "audio":
+        F = cfg.frontend_tokens
+        return {
+            "frames": SDS((B, F, cfg.encoder.d_model), _dtype(cfg)),
+            "tokens": SDS((B, S), i32),
+            "labels": SDS((B, S), i32),
+        }
+    return {
+        "tokens": SDS((B, S), i32),
+        "labels": SDS((B, S), i32),
+        "block_ids": SDS((B, S), i32),
+        "last_block": SDS((B,), i32),
+    }
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    specs = train_specs(cfg, shape)
+    specs.pop("labels", None)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.arch_type == "audio":
+        cache = jax.eval_shape(
+            lambda: encdec.init_decode_cache(cfg, B, S, _dtype(cfg)))
+        return {
+            "tokens": SDS((B, 1), i32),
+            "caches": cache,
+            "enc_out": SDS((B, cfg.frontend_tokens, cfg.d_model), _dtype(cfg)),
+            "cache_len": SDS((), i32),
+        }
+    caches, states = jax.eval_shape(
+        lambda: T.init_decode_caches(cfg, B, S, _dtype(cfg)))
+    return {
+        "tokens": SDS((B, 1), i32),
+        "caches": caches,
+        "states": states,
+        "cache_len": SDS((), i32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    cfg = arch_shape_config(cfg, shape)
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)

@@ -1,0 +1,80 @@
+"""Step functions lowered by the dry-run and driven by train.py / serve.py.
+
+One builder per shape kind; all are pure (params, [opt_state,] batch) fns so
+``jax.jit(step, in_shardings=..., out_shardings=...)`` fully describes the
+distributed computation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import api, encdec
+from repro.training import optim
+from repro.training.trainer import loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    block_mode: bool = True) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, block_mode, remat=True)
+        params, opt_state, info = optim.adamw_update(
+            params, grads, opt_state, tcfg)
+        return params, opt_state, dict(info, loss=loss, ce=ce, aux=aux)
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      block_mode: bool = True, fold_spec=None) -> Callable:
+    """(params, batch) -> (first-token logits, per-layer KV / enc states).
+
+    Uses the STRUCTURAL blockwise fast path with the shape's uniform block
+    count — the form whose FLOPs reduction XLA cost analysis can see.
+    ``fold_spec``: optional PartitionSpec spreading independent blocks over
+    extra mesh axes (§Perf block-parallel prefill).
+    """
+    structural = shape.blocks if cfg.arch_type not in ("vlm", "audio") else 0
+
+    def step(params, batch):
+        return api.prefill(params, cfg, batch, block_mode=block_mode,
+                           structural_blocks=structural,
+                           fold_spec=fold_spec)
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, batch{tokens, caches, states, cache_len}) ->
+    (logits, caches, states) — ONE new token against a seq_len KV cache."""
+
+    if cfg.arch_type == "audio":
+        def step(params, batch):
+            logits, cache = encdec.decode_step(
+                params, cfg, batch["tokens"], batch["caches"],
+                batch["cache_len"], batch["enc_out"])
+            return logits, cache
+        return step
+
+    def step(params, batch):
+        return api.decode_step(params, cfg, batch["tokens"], batch["caches"],
+                               batch["states"], batch["cache_len"])
+
+    return step
+
+
+def make_step(cfg: ModelConfig, shape: ShapeConfig, tcfg: TrainConfig = None,
+              fold_spec=None):
+    """Dispatch on the shape kind; returns (step_fn, needs_opt_state)."""
+    if shape.kind == "train":
+        return make_train_step(cfg, tcfg or TrainConfig()), True
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, fold_spec=fold_spec), False
+    return make_serve_step(cfg), False

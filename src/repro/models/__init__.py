@@ -1,0 +1,5 @@
+"""Model zoo: unified decoder + enc-dec + VLM, driven by ModelConfig."""
+from repro.models.api import decode_step, forward_logits, model_init, prefill  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    AttnCtx, build_layer_specs, find_period, init_decode_caches,
+)

@@ -1,0 +1,153 @@
+"""Model-level API: one set of entry points across all assigned architectures.
+
+Batch dict conventions (built by repro.data / repro.launch.dryrun.input_specs):
+  text archs : tokens (B,S) [, block_ids (B,S), last_block (B,), labels]
+  vlm        : + patches (B, P, D_VISION), num_tiles static
+  audio      : frames (B, F, d_enc) + tokens (B, S_dec)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import BlockLayout
+from repro.core.config import ModelConfig
+from repro.models import encdec, transformer as T, vlm as V
+
+
+def model_init(key, cfg: ModelConfig):
+    if cfg.arch_type == "audio":
+        return encdec.init_params(key, cfg)
+    if cfg.arch_type == "vlm":
+        return V.init_params(key, cfg)
+    return T.init_params(key, cfg)
+
+
+def _text_ctx(batch: Dict[str, Any], block_mode: bool, structural_blocks: int,
+              collect_kv: bool = False, impl: str = "flash",
+              fold_spec=None) -> T.AttnCtx:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get(
+        "positions",
+        jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)))
+    layout = None
+    if block_mode and structural_blocks == 0 and "block_ids" in batch:
+        layout = BlockLayout(batch["block_ids"], batch["last_block"])
+    return T.AttnCtx(
+        kind="blockwise" if structural_blocks else "mask",
+        positions=positions,
+        layout=layout,
+        num_blocks=structural_blocks,
+        collect_kv=collect_kv,
+        use_block_mask=block_mode,
+        impl=impl,
+        fold_spec=fold_spec,
+    )
+
+
+def forward_logits(
+    params, cfg: ModelConfig, batch: Dict[str, Any], *,
+    block_mode: bool = True,
+    structural_blocks: int = 0,
+    remat: bool = False,
+    impl: str = "flash",
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits (B,S,V) f32, aux loss scalar).
+
+    block_mode=False  -> plain causal full attention (the paper's "full mode").
+    structural_blocks -> use the uniform blockwise fast path with that many
+                         blocks (0 = mask-based path / plain causal).
+    """
+    if cfg.arch_type == "audio":
+        layout = batch.get("frame_block_ids") if block_mode else None
+        enc = encdec.encode(params, cfg, batch["frames"], layout)
+        return encdec.decode_full(params, cfg, batch["tokens"], enc), \
+            jnp.zeros((), jnp.float32)
+
+    if cfg.arch_type == "vlm":
+        h, positions, layout = V.merge_inputs(
+            params, cfg, batch["tokens"], batch["patches"],
+            batch.get("num_tiles", cfg.frontend_tiles))
+        ctx = T.AttnCtx(kind="mask", positions=positions,
+                        layout=layout if block_mode else None,
+                        use_block_mask=block_mode, impl=impl)
+        h, aux, *_ = T.forward_hidden(params, cfg, h, ctx, remat=remat,
+                                      unroll=unroll)
+        S_text = batch["tokens"].shape[1]
+        return T.logits_from_hidden(params, cfg, h[:, -S_text:]), aux
+
+    ctx = _text_ctx(batch, block_mode, structural_blocks, impl=impl)
+    h = T.embed_tokens(params, cfg, batch["tokens"])
+    h, aux, *_ = T.forward_hidden(params, cfg, h, ctx, remat=remat,
+                                  unroll=unroll)
+    return T.logits_from_hidden(params, cfg, h), aux
+
+
+def prefill(
+    params, cfg: ModelConfig, batch: Dict[str, Any], *,
+    block_mode: bool = True,
+    structural_blocks: int = 0,
+    initial_states: Optional[dict] = None,
+    impl: str = "flash",
+    unroll: bool = False,
+    fold_spec=None,
+) -> Tuple[jax.Array, dict, dict]:
+    """Prefill pass returning (last-position logits, collected_kv, states).
+
+    collected_kv: per group-position {"k","v"} of shape (G, B, S, KV, D) —
+    RoPE'd at the batch's positions (zero-based when encoding a lone block,
+    which is exactly what the BlockKVStore wants).
+    """
+    if cfg.arch_type == "audio":
+        layout = batch.get("frame_block_ids") if block_mode else None
+        enc = encdec.encode(params, cfg, batch["frames"], layout)
+        logits = encdec.decode_full(params, cfg, batch["tokens"], enc)
+        return logits[:, -1:], {"enc_out": enc}, {}
+
+    if cfg.arch_type == "vlm":
+        h, positions, layout = V.merge_inputs(
+            params, cfg, batch["tokens"], batch["patches"],
+            batch.get("num_tiles", cfg.frontend_tiles))
+        ctx = T.AttnCtx(kind="mask", positions=positions,
+                        layout=layout if block_mode else None,
+                        use_block_mask=block_mode, collect_kv=True, impl=impl)
+        h, _, _, states, collected = T.forward_hidden(
+            params, cfg, h, ctx, unroll=unroll)
+        return T.logits_from_hidden(params, cfg, h[:, -1:]), collected, states
+
+    ctx = _text_ctx(batch, block_mode, structural_blocks, collect_kv=True,
+                    impl=impl, fold_spec=fold_spec)
+    h = T.embed_tokens(params, cfg, batch["tokens"])
+    h, aux, _, states, collected = T.forward_hidden(
+        params, cfg, h, ctx, states=initial_states, unroll=unroll)
+    logits = T.logits_from_hidden(params, cfg, h[:, -1:])
+    return logits, collected, states
+
+
+def decode_step(
+    params, cfg: ModelConfig, tokens: jax.Array,
+    caches: dict, states: dict, cache_len: jax.Array,
+    enc_out: Optional[jax.Array] = None,
+    unroll: bool = False,
+) -> Tuple[jax.Array, dict, dict]:
+    """One serve step: tokens (B, T) -> (logits (B,T,V), caches, states).
+
+    ``cache_len``: scalar int32, tokens already in the cache (write offset).
+    """
+    if cfg.arch_type == "audio":
+        logits, cache = encdec.decode_step(
+            params, cfg, tokens, caches, cache_len, enc_out)
+        return logits, cache, {}
+
+    B, Tq = tokens.shape
+    positions = cache_len + jnp.arange(Tq, dtype=jnp.int32)
+    positions = jnp.broadcast_to(positions, (B, Tq))
+    ctx = T.AttnCtx(kind="decode", positions=positions, cache_len=cache_len)
+    h = T.embed_tokens(params, cfg, tokens)
+    h, aux, new_caches, new_states, _ = T.forward_hidden(
+        params, cfg, h, ctx, caches=caches, states=states, unroll=unroll)
+    return T.logits_from_hidden(params, cfg, h), new_caches, new_states

@@ -1,0 +1,446 @@
+"""Unified decoder covering the dense / MoE / hybrid / ssm assigned archs.
+
+The layer schedule of every assigned architecture is *periodic* (all-attention,
+zamba2's 5×mamba+shared-attn, llama4's 3×chunked+1×global, xlstm's
+1×sLSTM+3×mLSTM). We scan over repeating *groups*: params are stacked
+``(num_groups, ...)`` per position-in-group, the group body unrolls the
+(short) period. This keeps HLO size O(period) for 28–54-layer models — which
+is what makes 40 (arch × shape) dry-run compiles tractable — and gives remat
+a natural boundary.
+
+Three execution kinds, one code path:
+  * kind="mask"      — training/eval: flash attention with the Block-attention
+                       mask (or plain causal). Handles ragged blocks.
+  * kind="blockwise" — prefill fast path for uniform blocks: the structural
+                       decomposition whose FLOPs saving XLA can see.
+  * kind="decode"    — serve_step: one (or few) new tokens against KV caches /
+                       recurrent states.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as A
+from repro.core.blocks import BlockLayout
+from repro.core.config import (
+    ATTN, FFN_DENSE, FFN_MOE, FFN_NONE, MAMBA2, MLSTM, SHARED_ATTN, SLSTM,
+    ModelConfig,
+)
+from repro.core.kv_cache import cache_update
+from repro.core.rope import apply_rope
+from repro.nn import layers as L
+from repro.nn import mamba as M
+from repro.nn import moe as MOE
+from repro.nn import xlstm_layers as X
+
+
+# ---------------------------------------------------------------------------
+# Layer specs & periodicity
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str
+    ffn: str
+    chunked: bool = False     # llama4 chunked-attention layer
+
+
+def build_layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    specs = []
+    for i, (mixer, ffn) in enumerate(zip(cfg.layer_schedule, cfg.ffn_schedule)):
+        chunked = (
+            mixer == ATTN and cfg.attention_chunk > 0 and cfg.chunk_attn_every > 0
+            and (i % cfg.chunk_attn_every) != cfg.chunk_attn_every - 1
+        )
+        specs.append(LayerSpec(mixer, ffn, chunked))
+    return specs
+
+
+def find_period(specs: List[LayerSpec]) -> int:
+    n = len(specs)
+    for p in range(1, n + 1):
+        if n % p == 0 and all(specs[i] == specs[i % p] for i in range(n)):
+            return p
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Per-sublayer init
+# ---------------------------------------------------------------------------
+def attn_sublayer_init(key, cfg: ModelConfig, dtype):
+    hd, H, KV, d = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln": L.rmsnorm_init(d),
+        "wq": L.dense_init(ks[0], d, H * hd, dtype),
+        "wk": L.dense_init(ks[1], d, KV * hd, dtype),
+        "wv": L.dense_init(ks[2], d, KV * hd, dtype),
+        "wo": L.dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(hd)
+        p["k_norm"] = L.rmsnorm_init(hd)
+    return p
+
+
+def layer_init(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    kmix, kffn = jax.random.split(key)
+    p: Dict[str, Any] = {}
+    if spec.mixer == ATTN:
+        p["attn"] = attn_sublayer_init(kmix, cfg, dtype)
+    elif spec.mixer == MAMBA2:
+        p["mamba"] = M.mamba_init(kmix, cfg.d_model, cfg.ssm, dtype)
+        p["ln"] = L.rmsnorm_init(cfg.d_model)
+    elif spec.mixer == MLSTM:
+        p["mlstm"] = X.mlstm_init(kmix, cfg.d_model, cfg.num_heads, cfg.xlstm, dtype)
+        p["ln"] = L.rmsnorm_init(cfg.d_model)
+    elif spec.mixer == SLSTM:
+        p["slstm"] = X.slstm_init(kmix, cfg.d_model, cfg.num_heads, dtype)
+        p["ln"] = L.rmsnorm_init(cfg.d_model)
+    elif spec.mixer == SHARED_ATTN:
+        pass  # weights live once in params["shared_attn"]
+    if spec.ffn == FFN_DENSE:
+        p["mlp"] = L.mlp_init(kffn, cfg.d_model, cfg.d_ff, dtype)
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+    elif spec.ffn == FFN_MOE:
+        p["moe"] = MOE.moe_init(kffn, cfg.d_model, cfg.moe, dtype)
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    specs = build_layer_specs(cfg)
+    period = find_period(specs)
+    groups = cfg.num_layers // period
+    k_emb, k_head, k_shared, k_layers = jax.random.split(key, 4)
+
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    if any(s.mixer == SHARED_ATTN for s in specs):
+        ks1, ks2 = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "attn": attn_sublayer_init(ks1, cfg, dtype),
+            "mlp": L.mlp_init(ks2, cfg.d_model, cfg.d_ff, dtype),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+        }
+
+    group_params = {}
+    layer_keys = jax.random.split(k_layers, groups * period).reshape(
+        groups, period, 2)
+    for j in range(period):
+        init_j = functools.partial(layer_init, spec=specs[j], cfg=cfg, dtype=dtype)
+        group_params[f"pos{j}"] = jax.vmap(lambda k: init_j(k))(layer_keys[:, j])
+    params["groups"] = group_params
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Execution context
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnCtx:
+    kind: str                                 # mask | blockwise | decode
+    positions: jax.Array                      # (B, S)
+    layout: Optional[BlockLayout] = None      # mask kind: block ids
+    num_blocks: int = 0                       # blockwise kind (0 = causal full)
+    cache_len: Optional[jax.Array] = None     # decode: scalar — len before write
+    kv_chunk: int = 512
+    collect_kv: bool = False                  # prefill: return per-layer KV
+    use_block_mask: bool = True               # False -> plain causal (full mode)
+    impl: str = "flash"                       # flash | dense (dry-run/tests)
+    fold_spec: Any = None                     # §Perf block-parallel sharding
+
+
+def _attn_sublayer(p, cfg: ModelConfig, spec: LayerSpec, h, ctx: AttnCtx,
+                   cache: Optional[dict]):
+    """Returns (out, new_cache_or_None, collected_kv_or_None)."""
+    B, S, d = h.shape
+    hd, H, KV = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    x = L.rmsnorm(p["ln"], h, cfg.norm_eps)
+    q = L.linear(p["wq"], x).reshape(B, S, H, hd)
+    k = L.linear(p["wk"], x).reshape(B, S, KV, hd)
+    v = L.linear(p["wv"], x).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, ctx.positions, cfg)
+    k = apply_rope(k, ctx.positions, cfg)
+    scale = hd ** -0.5
+    chunk = cfg.attention_chunk if spec.chunked else 0
+    window = cfg.sliding_window
+
+    new_cache = None
+    if ctx.kind == "decode":
+        assert cache is not None
+        ck, cv = cache_update(cache["k"], cache["v"], k, v, ctx.cache_len)
+        o = A.decode_attention(q, ck, cv, ctx.cache_len, scale,
+                               window=window or (chunk and _chunk_window(ctx, chunk)))
+        new_cache = {"k": ck, "v": cv}
+    elif ctx.kind == "blockwise" and ctx.num_blocks > 0:
+        o = _blockwise_dispatch(q, k, v, cfg, spec, ctx, scale)
+    else:  # mask kind (training / ragged) or blockwise-with-0-blocks (causal)
+        lay = ctx.layout if ctx.use_block_mask else None
+        if ctx.impl == "dense":
+            mask = A.block_mask(
+                ctx.positions, ctx.positions,
+                q_blk=lay.block_ids if lay is not None else None,
+                kv_blk=lay.block_ids if lay is not None else None,
+                last_blk=lay.last_block_id if lay is not None else None,
+                window=window, chunk=chunk)
+            o = A.attention_ref(q, k, v, mask, scale,
+                                softcap=cfg.logit_softcap)
+        else:
+            mask_fn = A.causal_mask_fn(
+                ctx.positions, ctx.positions,
+                q_blk=lay.block_ids if lay is not None else None,
+                kv_blk=lay.block_ids if lay is not None else None,
+                last_blk=lay.last_block_id if lay is not None else None,
+                window=window, chunk=chunk)
+            o = A.flash_attention(q, k, v, mask_fn, scale,
+                                  kv_chunk=ctx.kv_chunk,
+                                  softcap=cfg.logit_softcap)
+    out = L.linear(p["wo"], o.reshape(B, S, H * hd))
+    collected = {"k": k, "v": v} if ctx.collect_kv else None
+    return out, new_cache, collected
+
+
+def _chunk_window(ctx: AttnCtx, chunk: int):
+    # decode within llama4 chunked layer: attend within the current chunk.
+    # window = (pos % chunk) + 1 is dynamic; we conservatively use chunk.
+    return chunk
+
+
+def _blockwise_dispatch(q, k, v, cfg, spec: LayerSpec, ctx: AttnCtx, scale):
+    """Structural block-attention for uniform blocks (+ chunked-layer combo)."""
+    B, S = q.shape[:2]
+    nb = ctx.num_blocks
+    chunk = cfg.attention_chunk if spec.chunked else 0
+    if not ctx.use_block_mask:
+        if chunk and S % chunk == 0 and S > chunk:
+            # full-attention mode on a chunked layer: chunk-diagonal
+            return A.blockwise_prefill(q, k, v, S // chunk, scale,
+                                       kv_chunk=ctx.kv_chunk,
+                                       softcap=cfg.logit_softcap,
+                                       final_global=False,
+                                       dense=ctx.impl == "dense")
+        pos = ctx.positions
+        if ctx.impl == "dense":
+            return A.attention_ref(q, k, v, A.block_mask(pos, pos), scale,
+                                   softcap=cfg.logit_softcap)
+        return A.flash_attention(q, k, v, A.causal_mask_fn(pos, pos), scale,
+                                 kv_chunk=ctx.kv_chunk,
+                                 softcap=cfg.logit_softcap)
+    dense = ctx.impl == "dense"
+    if chunk and S % chunk == 0 and S > chunk and (S // nb) <= chunk:
+        # block-attention ∧ chunked layer: within-block everywhere, and the
+        # final block's global pass is clipped to the last chunk (exact
+        # intersection when block_len | chunk | S).
+        L_blk = S // nb
+        within = A.blockwise_prefill(q, k, v, nb, scale, kv_chunk=ctx.kv_chunk,
+                                     softcap=cfg.logit_softcap,
+                                     final_global=False, dense=dense)
+        qf = q[:, S - L_blk:]
+        kc = k[:, S - chunk:]
+        vc = v[:, S - chunk:]
+        q_pos = jnp.broadcast_to(
+            jnp.arange(chunk - L_blk, chunk, dtype=jnp.int32), (B, L_blk))
+        kv_pos = jnp.broadcast_to(jnp.arange(chunk, dtype=jnp.int32), (B, chunk))
+        if dense:
+            fin = A.attention_ref(qf, kc, vc, A.block_mask(q_pos, kv_pos),
+                                  scale, softcap=cfg.logit_softcap)
+        else:
+            fin = A.flash_attention(qf, kc, vc, A.causal_mask_fn(q_pos, kv_pos),
+                                    scale, kv_chunk=ctx.kv_chunk,
+                                    softcap=cfg.logit_softcap)
+        return jnp.concatenate([within[:, : S - L_blk], fin], axis=1)
+    return A.blockwise_prefill(q, k, v, nb, scale, kv_chunk=ctx.kv_chunk,
+                               softcap=cfg.logit_softcap, final_global=True,
+                               dense=dense, fold_spec=ctx.fold_spec)
+
+
+# ---------------------------------------------------------------------------
+# Group body (one period of the layer schedule)
+# ---------------------------------------------------------------------------
+def _group_body(cfg: ModelConfig, specs_period: List[LayerSpec],
+                shared_params, ctx: AttnCtx, moe_group: int):
+    """Returns body(carry, xs) for lax.scan over groups."""
+
+    def body(carry, xs):
+        h, aux = carry
+        gp, caches, states = xs          # per-position params / caches / states
+        new_caches, new_states, collected = {}, {}, {}
+        for j, spec in enumerate(specs_period):
+            key = f"pos{j}"
+            p = gp.get(key, {})
+            if spec.mixer == ATTN:
+                out, nc, coll = _attn_sublayer(p["attn"], cfg, spec, h, ctx,
+                                               caches.get(key))
+                h = h + out
+                if nc is not None:
+                    new_caches[key] = nc
+                if coll is not None:
+                    collected[key] = coll
+            elif spec.mixer == SHARED_ATTN:
+                sp = shared_params
+                out, nc, coll = _attn_sublayer(sp["attn"], cfg, spec, h, ctx,
+                                               caches.get(key))
+                h = h + out
+                if nc is not None:
+                    new_caches[key] = nc
+                if coll is not None:
+                    collected[key] = coll
+                h = h + L.mlp_apply(sp["mlp"],
+                                    L.rmsnorm(sp["ln2"], h, cfg.norm_eps))
+            elif spec.mixer == MAMBA2:
+                x = L.rmsnorm(p["ln"], h, cfg.norm_eps)
+                st = states.get(key)
+                if ctx.kind == "decode" and x.shape[1] == 1:
+                    out, ns = M.mamba_step(p["mamba"], x, st, cfg.d_model, cfg.ssm)
+                    new_states[key] = ns
+                elif ctx.kind == "decode":      # multi-token cache fill
+                    out, ns = M.mamba_forward(p["mamba"], x, cfg.d_model,
+                                              cfg.ssm, initial_state=st,
+                                              return_state=True)
+                    new_states[key] = ns
+                elif st is not None or ctx.collect_kv:
+                    out, ns = M.mamba_forward(p["mamba"], x, cfg.d_model, cfg.ssm,
+                                              initial_state=st, return_state=True)
+                    new_states[key] = ns
+                else:
+                    out = M.mamba_forward(p["mamba"], x, cfg.d_model, cfg.ssm)
+                h = h + out
+            elif spec.mixer == MLSTM:
+                x = L.rmsnorm(p["ln"], h, cfg.norm_eps)
+                st = states.get(key)
+                if ctx.kind == "decode":
+                    out, ns = X.mlstm_step(p["mlstm"], x, st, cfg.d_model,
+                                           cfg.num_heads, cfg.xlstm)
+                    new_states[key] = ns
+                elif st is not None or ctx.collect_kv:
+                    out, ns = X.mlstm_forward(p["mlstm"], x, cfg.d_model,
+                                              cfg.num_heads, cfg.xlstm,
+                                              initial_state=st, return_state=True)
+                    new_states[key] = ns
+                else:
+                    out = X.mlstm_forward(p["mlstm"], x, cfg.d_model,
+                                          cfg.num_heads, cfg.xlstm)
+                h = h + out
+            elif spec.mixer == SLSTM:
+                x = L.rmsnorm(p["ln"], h, cfg.norm_eps)
+                st = states.get(key)
+                if ctx.kind == "decode":
+                    out, ns = X.slstm_step(p["slstm"], x, st, cfg.d_model,
+                                           cfg.num_heads)
+                    new_states[key] = ns
+                elif st is not None or ctx.collect_kv:
+                    out, ns = X.slstm_forward(p["slstm"], x, cfg.d_model,
+                                              cfg.num_heads, initial_state=st,
+                                              return_state=True)
+                    new_states[key] = ns
+                else:
+                    out = X.slstm_forward(p["slstm"], x, cfg.d_model,
+                                          cfg.num_heads)
+                h = h + out
+
+            if spec.ffn == FFN_DENSE:
+                h = h + L.mlp_apply(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps))
+            elif spec.ffn == FFN_MOE:
+                y, a = MOE.moe_apply(p["moe"],
+                                     L.rmsnorm(p["ln2"], h, cfg.norm_eps),
+                                     cfg.moe, group=moe_group)
+                h = h + y
+                aux = aux + a
+        return (h, aux), (new_caches, new_states, collected)
+
+    return body
+
+
+# ---------------------------------------------------------------------------
+# Public forward
+# ---------------------------------------------------------------------------
+def forward_hidden(
+    params, cfg: ModelConfig, h: jax.Array, ctx: AttnCtx,
+    caches: Optional[dict] = None,       # per-pos {"k","v"} stacked (G, ...)
+    states: Optional[dict] = None,       # per-pos recurrent states (G, ...)
+    remat: bool = False,
+    unroll: bool = False,                # dry-run: full FLOPs visibility
+):
+    """h: (B, S, d_model) embeddings -> final hidden + aux + caches/states/kv."""
+    specs = build_layer_specs(cfg)
+    period = find_period(specs)
+    groups = cfg.num_layers // period
+    S = h.shape[1]
+    g = cfg.moe.group_size if cfg.moe else 1024
+    moe_group = min(g, S) if S % min(g, S) == 0 else S
+    shared = params.get("shared_attn")
+
+    body = _group_body(cfg, specs[:period], shared, ctx, moe_group)
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["groups"], caches or {}, states or {})
+    (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), xs,
+                                unroll=groups if unroll else 1)
+    new_caches, new_states, collected = ys
+    return h, aux, new_caches, new_states, collected
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    return params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", h, w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def num_attn_positions(cfg: ModelConfig) -> List[str]:
+    """Keys of positions-in-group that carry a KV cache."""
+    specs = build_layer_specs(cfg)
+    period = find_period(specs)
+    return [f"pos{j}" for j in range(period)
+            if specs[j].mixer in (ATTN, SHARED_ATTN)]
+
+
+def recurrent_positions(cfg: ModelConfig) -> Dict[str, str]:
+    specs = build_layer_specs(cfg)
+    period = find_period(specs)
+    return {f"pos{j}": specs[j].mixer for j in range(period)
+            if specs[j].mixer in (MAMBA2, MLSTM, SLSTM)}
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                       dtype=jnp.bfloat16):
+    """Stacked (G, B, S, KV, D) caches + (G, ...) recurrent states."""
+    specs = build_layer_specs(cfg)
+    period = find_period(specs)
+    groups = cfg.num_layers // period
+    caches = {}
+    for key in num_attn_positions(cfg):
+        shape = (groups, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+        caches[key] = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    states = {}
+    for key, mixer in recurrent_positions(cfg).items():
+        if mixer == MAMBA2:
+            st = M.mamba_init_state(batch, cfg.d_model, cfg.ssm, dtype)
+        elif mixer == MLSTM:
+            st = X.mlstm_init_state(batch, cfg.d_model, cfg.num_heads,
+                                    cfg.xlstm, dtype)
+        else:
+            st = X.slstm_init_state(batch, cfg.d_model, cfg.num_heads)
+        states[key] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (groups,) + a.shape), st)
+    return caches, states

@@ -1,0 +1,64 @@
+"""LLaVA-NeXT-style VLM: stub vision frontend + mistral decoder backbone.
+
+Per the carve-out, ``input_specs`` provides precomputed patch embeddings
+(B, num_patches, d_vision). We implement the projector + language model.
+
+Block-attention synergy (DESIGN.md §4): each anyres tile's patch span is an
+independent block — tiles are encoded in parallel and their KV states are
+reusable across prompts that share tiles (e.g. the base thumbnail).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocks import BlockLayout
+from repro.core.config import ModelConfig
+from repro.models import transformer as T
+from repro.nn import layers as L
+
+D_VISION = 1024          # SigLIP/CLIP-large hidden size (stub frontend width)
+
+
+def init_params(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = T.init_params(k1, cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    params["projector"] = {
+        "w1": L.dense_init(k2, D_VISION, cfg.d_model, dtype),
+        "w2": L.dense_init(k3, cfg.d_model, cfg.d_model, dtype),
+    }
+    return params
+
+
+def project_patches(params, cfg: ModelConfig, patches: jax.Array) -> jax.Array:
+    """(B, P, D_VISION) -> (B, P, d_model); llava's 2-layer MLP projector."""
+    h = jax.nn.gelu(L.linear(params["projector"]["w1"],
+                             patches.astype(jnp.dtype(cfg.dtype))))
+    return L.linear(params["projector"]["w2"], h)
+
+
+def merge_inputs(params, cfg: ModelConfig, tokens: jax.Array,
+                 patches: jax.Array, num_tiles: int
+                 ) -> Tuple[jax.Array, jax.Array, BlockLayout]:
+    """Prepend projected patches to text embeddings.
+
+    Layout: each tile is a block; the full text span is the final block.
+    Returns (embeds (B, P+S, d), positions, layout).
+    """
+    B, S = tokens.shape
+    P = patches.shape[1]
+    assert P % num_tiles == 0, (P, num_tiles)
+    img = project_patches(params, cfg, patches)
+    txt = T.embed_tokens(params, cfg, tokens)
+    h = jnp.concatenate([img, txt], axis=1)
+    total = P + S
+    positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (B, total))
+    per_tile = P // num_tiles
+    tile_ids = jnp.repeat(jnp.arange(num_tiles, dtype=jnp.int32), per_tile)
+    text_ids = jnp.full((S,), num_tiles, jnp.int32)
+    ids = jnp.broadcast_to(jnp.concatenate([tile_ids, text_ids]), (B, total))
+    layout = BlockLayout(ids, jnp.full((B,), num_tiles, jnp.int32))
+    return h, positions, layout

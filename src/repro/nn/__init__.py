@@ -1,0 +1,13 @@
+"""Functional NN substrate (params = nested dicts of arrays)."""
+from repro.nn.layers import (  # noqa: F401
+    dense_init, embed_init, gelu_mlp_apply, gelu_mlp_init, linear,
+    mlp_apply, mlp_init, rmsnorm, rmsnorm_init, sinusoid_positions, swiglu,
+)
+from repro.nn.moe import moe_apply, moe_init  # noqa: F401
+from repro.nn.mamba import (  # noqa: F401
+    MambaState, mamba_forward, mamba_init, mamba_init_state, mamba_step,
+)
+from repro.nn.xlstm_layers import (  # noqa: F401
+    MLSTMState, SLSTMState, mlstm_forward, mlstm_init, mlstm_init_state,
+    mlstm_step, slstm_forward, slstm_init, slstm_init_state, slstm_step,
+)

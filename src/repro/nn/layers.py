@@ -1,0 +1,73 @@
+"""Minimal functional NN substrate: params are plain nested dicts of jnp arrays.
+
+Naming matters: partition rules (repro/launch/sharding.py) match on the
+'/'-joined path of each leaf, e.g. ``decoder/g3/attn/wq``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def linear(w, x):
+    return jnp.einsum("...i,io->...o", x, w)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(g, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(w_gate, w_up, w_down, x):
+    return linear(w_down, jax.nn.silu(linear(w_gate, x)) * linear(w_up, x))
+
+
+def mlp_init(key, d: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp_apply(p, x):
+    return swiglu(p["w_gate"], p["w_up"], p["w_down"], x)
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, d_ff, dtype),
+            "w_out": dense_init(k2, d_ff, d, dtype)}
+
+
+def gelu_mlp_apply(p, x):
+    return linear(p["w_out"], jax.nn.gelu(linear(p["w_in"], x)))
+
+
+def sinusoid_positions(max_len: int, d: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal position table (max_len, d)."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    tab = jnp.zeros((max_len, d), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(angle))
+    tab = tab.at[:, 1::2].set(jnp.cos(angle))
+    return tab.astype(dtype)

@@ -1,0 +1,177 @@
+"""Mamba2 (SSD) layer — zamba2's sequence mixer.
+
+Forward uses the chunked SSD algorithm (Dao & Gu 2024): quadratic
+attention-like compute inside chunks + a sequential inter-chunk state scan.
+This keeps prefill parallelisable on the MXU (the within-chunk einsums are
+dense matmuls) while the recurrent state stays O(nh * P * N).
+
+Block-attention note (DESIGN.md §4): the SSM state is order-dependent, so
+per-block KV-style reuse does not apply; ``mamba_forward`` accepts/returns the
+recurrent state so the serving engine can do *prefix*-granular reuse instead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import SSMConfig
+from repro.nn.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array        # (B, nh, N, P) recurrent state
+    conv: jax.Array       # (B, W-1, conv_channels) causal-conv tail
+
+
+def _dims(d_model: int, cfg: SSMConfig):
+    d_inner = cfg.expand * d_model
+    nh = cfg.num_heads or d_inner // cfg.head_dim
+    return d_inner, nh, cfg.head_dim, cfg.state_dim
+
+
+def mamba_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.bfloat16):
+    d_in, nh, P, N = _dims(d_model, cfg)
+    conv_ch = d_in + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # z (gate), x, B, C, dt head-biases all from one in_proj
+        "in_proj": dense_init(k1, d_model, 2 * d_in + 2 * N + nh, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),           # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -1.0, jnp.float32),    # softplus(-1) ~ 0.31
+        "norm": rmsnorm_init(d_in),
+        "out_proj": dense_init(k3, d_in, d_model, dtype),
+    }
+
+
+def _split_proj(p, u, d_model, cfg):
+    d_in, nh, P, N = _dims(d_model, cfg)
+    zxbcdt = jnp.einsum("...i,io->...o", u, p["in_proj"])
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(p, xbc, width: int, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv over (B, S, C). ``tail``: (B, width-1, C)."""
+    B, S, C = xbc.shape
+    if tail is None:
+        tail = jnp.zeros((B, width - 1, C), xbc.dtype)
+    padded = jnp.concatenate([tail, xbc], axis=1)          # (B, S+W-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for w in range(width):
+        out = out + padded[:, w:w + S].astype(jnp.float32) * \
+            p["conv_w"][w].astype(jnp.float32)
+    out = out + p["conv_b"].astype(jnp.float32)
+    new_tail = padded[:, S:]                               # last W-1 inputs
+    return jax.nn.silu(out).astype(xbc.dtype), new_tail
+
+
+def mamba_forward(
+    p, u: jax.Array, d_model: int, cfg: SSMConfig,
+    initial_state: Optional[MambaState] = None,
+    return_state: bool = False,
+):
+    """u: (B, S, d_model) -> (B, S, d_model) [, MambaState]."""
+    B, S, _ = u.shape
+    d_in, nh, P, N = _dims(d_model, cfg)
+    Q = min(cfg.chunk_size, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    z, x, Bm, Cm, dt = _split_proj(p, u, d_model, cfg)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_tail_in = initial_state.conv if initial_state is not None else None
+    xbc, conv_tail = _causal_conv(p, xbc, cfg.conv_width, conv_tail_in)
+    x, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    x = x.reshape(B, S, nh, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                       # (nh,)
+    dA = dt * A                                                     # log decay
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    # ---- chunked SSD ----
+    dAc = dA.reshape(B, nc, Q, nh)
+    lc = jnp.cumsum(dAc, axis=2)                                   # (B,nc,Q,nh)
+    dtx = (dt[..., None] * xf).reshape(B, nc, Q, nh, P)
+    Bc = Bm.reshape(B, nc, Q, N)
+    Cc = Cm.reshape(B, nc, Q, N)
+
+    # within-chunk (attention-like, causal, per-head decay)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                 # (B,nc,Q,Q)
+    li = lc[:, :, :, None, :]                                      # (B,nc,Q,1,nh)
+    lj = lc[:, :, None, :, :]                                      # (B,nc,1,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    M = scores[..., None] * decay                                  # (B,nc,Q,Q,nh)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, dtx)
+
+    # chunk summaries and inter-chunk recurrence
+    l_last = lc[:, :, -1:, :]                                      # (B,nc,1,nh)
+    chunk_states = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchnp", jnp.exp(l_last - lc), Bc, dtx)   # (B,nc,nh,N,P)
+    chunk_decay = jnp.exp(l_last[:, :, 0, :])                      # (B,nc,nh)
+
+    s0 = (initial_state.ssm.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((B, nh, N, P), jnp.float32))
+
+    def scan_body(h, inp):
+        s_c, g_c = inp                     # (B,nh,N,P), (B,nh)
+        h_out = h                          # state entering this chunk
+        h = h * g_c[..., None, None] + s_c
+        return h, h_out
+
+    xs = (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_in = jax.lax.scan(scan_body, s0, xs)
+    h_in = jnp.moveaxis(h_in, 0, 1)                                # (B,nc,nh,N,P)
+
+    y_off = jnp.einsum("bcin,bchnp,bcih->bcihp", Cc, h_in, jnp.exp(lc))
+    y = (y_diag + y_off).reshape(B, S, nh, P) + p["D"][None, None, :, None] * xf
+    y = y.reshape(B, S, d_in).astype(u.dtype)
+
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("...i,io->...o", y, p["out_proj"])
+    if return_state:
+        return out, MambaState(ssm=h_final.astype(jnp.float32), conv=conv_tail)
+    return out
+
+
+def mamba_step(p, u_t: jax.Array, state: MambaState, d_model: int,
+               cfg: SSMConfig) -> Tuple[jax.Array, MambaState]:
+    """Single decode step. u_t: (B, 1, d_model)."""
+    B = u_t.shape[0]
+    d_in, nh, P, N = _dims(d_model, cfg)
+    z, x, Bm, Cm, dt = _split_proj(p, u_t, d_model, cfg)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc, conv_tail = _causal_conv(p, xbc, cfg.conv_width, state.conv)
+    x, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    x = x.reshape(B, nh, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    g = jnp.exp(dt * (-jnp.exp(p["A_log"])))                           # (B,nh)
+    Bf = Bm[:, 0].astype(jnp.float32)                                  # (B,N)
+    Cf = Cm[:, 0].astype(jnp.float32)
+    h = state.ssm * g[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bf, x)
+    y = jnp.einsum("bn,bhnp->bhp", Cf, h) + p["D"][None, :, None] * x
+    y = y.reshape(B, 1, d_in).astype(u_t.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("...i,io->...o", y, p["out_proj"])
+    return out, MambaState(ssm=h, conv=conv_tail)
+
+
+def mamba_init_state(batch: int, d_model: int, cfg: SSMConfig,
+                     dtype=jnp.bfloat16) -> MambaState:
+    d_in, nh, P, N = _dims(d_model, cfg)
+    return MambaState(
+        ssm=jnp.zeros((batch, nh, N, P), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * N), dtype),
+    )

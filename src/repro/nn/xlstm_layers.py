@@ -1,0 +1,217 @@
+"""xLSTM layers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both use exponential gating with the max-stabiliser from the xLSTM paper.
+Forward is a time scan (`lax.scan`) — numerically exact; the chunkwise
+parallel mLSTM is a §Perf optimisation candidate (see EXPERIMENTS.md).
+
+Block-attention note: no KV, no positions — per-block reuse is inapplicable;
+the engine caches the recurrent state per prefix (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import XLSTMConfig
+from repro.nn.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B, H, dk, dv) matrix memory
+    n: jax.Array      # (B, H, dk) normaliser
+    m: jax.Array      # (B, H) stabiliser
+    conv: jax.Array   # (B, W-1, d_in) conv tail
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B, H, dh)
+    n: jax.Array      # (B, H, dh)
+    m: jax.Array      # (B, H, dh)
+    h: jax.Array      # (B, H, dh) recurrent output
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, d_model: int, num_heads: int, cfg: XLSTMConfig,
+               dtype=jnp.bfloat16):
+    d_in = int(cfg.proj_factor * d_model)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], d_model, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, d_in), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(ks[2], d_in, d_in, dtype),
+        "wk": dense_init(ks[3], d_in, d_in, dtype),
+        "wv": dense_init(ks[4], d_in, d_in, dtype),
+        "w_if": dense_init(ks[5], d_in, 2 * num_heads, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((num_heads,)),
+                                 jnp.full((num_heads,), 3.0)]).astype(jnp.float32),
+        "norm": rmsnorm_init(d_in),
+        "down_proj": dense_init(ks[6], d_in, d_model, dtype),
+    }
+
+
+def _conv_silu(p, x, width, tail=None):
+    B, S, C = x.shape
+    if tail is None:
+        tail = jnp.zeros((B, width - 1, C), x.dtype)
+    padded = jnp.concatenate([tail, x], axis=1)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for w in range(width):
+        out = out + padded[:, w:w + S].astype(jnp.float32) * \
+            p["conv_w"][w].astype(jnp.float32)
+    out = out + p["conv_b"].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype), padded[:, S:]
+
+
+def _mlstm_cell_scan(q, k, v, i_pre, f_pre, state):
+    """q,k,v: (B, S, H, dh) f32; i_pre/f_pre: (B, S, H) pre-activations."""
+    B, S, H, dh = q.shape
+    scale = dh ** -0.5
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        log_f = jax.nn.log_sigmoid(ft)                    # (B,H)
+        m_new = jnp.maximum(log_f + m, it)
+        f_act = jnp.exp(log_f + m - m_new)[..., None, None]
+        i_act = jnp.exp(it - m_new)[..., None, None]
+        C = f_act * C + i_act * (kt[..., :, None] * vt[..., None, :])
+        n = f_act[..., 0] * n + i_act[..., 0] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt * scale, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt * scale, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in
+               (q, k, v, i_pre, f_pre))
+    (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    return jnp.moveaxis(hs, 0, 1), C, n, m                 # (B,S,H,dh)
+
+
+def mlstm_forward(p, u, d_model: int, num_heads: int, cfg: XLSTMConfig,
+                  initial_state: Optional[MLSTMState] = None,
+                  return_state: bool = False):
+    B, S, _ = u.shape
+    d_in = int(cfg.proj_factor * d_model)
+    dh = d_in // num_heads
+    xz = jnp.einsum("...i,io->...o", u, p["up_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)
+    if initial_state is None:
+        initial_state = mlstm_init_state(B, d_model, num_heads, cfg, u.dtype)
+    xc, conv_tail = _conv_silu(p, x, cfg.conv_width, initial_state.conv)
+
+    def heads(t, w):
+        return jnp.einsum("...i,io->...o", t, w).reshape(B, S, num_heads, dh)
+
+    q = heads(xc, p["wq"]).astype(jnp.float32)
+    k = heads(xc, p["wk"]).astype(jnp.float32)
+    v = heads(x, p["wv"]).astype(jnp.float32)
+    gates = jnp.einsum("...i,io->...o", xc.astype(jnp.float32), p["w_if"]) \
+        + p["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)            # (B,S,H)
+
+    h, C, n, m = _mlstm_cell_scan(q, k, v, i_pre, f_pre, initial_state)
+    h = h.reshape(B, S, d_in).astype(u.dtype)
+    h = rmsnorm(p["norm"], h) * jax.nn.silu(z)
+    out = jnp.einsum("...i,io->...o", h, p["down_proj"])
+    if return_state:
+        return out, MLSTMState(C=C, n=n, m=m, conv=conv_tail)
+    return out
+
+
+def mlstm_step(p, u_t, state: MLSTMState, d_model: int, num_heads: int,
+               cfg: XLSTMConfig) -> Tuple[jax.Array, MLSTMState]:
+    out, new = mlstm_forward(p, u_t, d_model, num_heads, cfg,
+                             initial_state=state, return_state=True)
+    return out, new
+
+
+def mlstm_init_state(batch, d_model, num_heads, cfg: XLSTMConfig,
+                     dtype=jnp.bfloat16) -> MLSTMState:
+    d_in = int(cfg.proj_factor * d_model)
+    dh = d_in // num_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, num_heads, dh), jnp.float32),
+        m=jnp.full((batch, num_heads), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_in), dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, d_model: int, num_heads: int, dtype=jnp.bfloat16):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # i, f, z, o from input
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model, jnp.float32),
+        # block-diagonal recurrent weights per head: (H, dh, 4*dh)
+        "r_gates": (jax.random.normal(ks[1], (num_heads, dh, 4 * dh),
+                                      jnp.float32) / jnp.sqrt(dh)),
+        "b_gates": jnp.zeros((4 * d_model,), jnp.float32),
+        "norm": rmsnorm_init(d_model),
+        "out_proj": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def _slstm_cell_scan(wx, p, num_heads, state: SLSTMState):
+    """wx: (B, S, 4*d) input gate pre-activations."""
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    dh = d // num_heads
+
+    def step(carry, xs):
+        c, n, m, h = carry                                 # (B,H,dh) each
+        wx_t = xs                                          # (B, 4d)
+        rec = jnp.einsum("bhd,hdo->bho", h, p["r_gates"])  # (B,H,4dh)
+        pre = wx_t.reshape(B, num_heads, 4, dh) + \
+            rec.reshape(B, num_heads, 4, dh)
+        i_p, f_p, z_p, o_p = [pre[:, :, j] for j in range(4)]
+        log_f = jax.nn.log_sigmoid(f_p)
+        m_new = jnp.maximum(log_f + m, i_p)
+        i_act = jnp.exp(i_p - m_new)
+        f_act = jnp.exp(log_f + m - m_new)
+        c = f_act * c + i_act * jnp.tanh(z_p)
+        n = f_act * n + i_act
+        h = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    xs = jnp.moveaxis(wx, 1, 0)
+    (c, n, m, h_last), hs = jax.lax.scan(
+        step, (state.c, state.n, state.m, state.h), xs)
+    return jnp.moveaxis(hs, 0, 1), SLSTMState(c=c, n=n, m=m, h=h_last)
+
+
+def slstm_forward(p, u, d_model: int, num_heads: int,
+                  initial_state: Optional[SLSTMState] = None,
+                  return_state: bool = False):
+    B, S, _ = u.shape
+    if initial_state is None:
+        initial_state = slstm_init_state(B, d_model, num_heads)
+    wx = jnp.einsum("...i,io->...o", u.astype(jnp.float32), p["w_gates"]) \
+        + p["b_gates"]
+    hs, new_state = _slstm_cell_scan(wx, p, num_heads, initial_state)
+    h = hs.reshape(B, S, d_model).astype(u.dtype)
+    out = jnp.einsum("...i,io->...o", rmsnorm(p["norm"], h), p["out_proj"])
+    if return_state:
+        return out, new_state
+    return out
+
+
+def slstm_step(p, u_t, state: SLSTMState, d_model: int, num_heads: int):
+    out, new = slstm_forward(p, u_t, d_model, num_heads,
+                             initial_state=state, return_state=True)
+    return out, new
+
+
+def slstm_init_state(batch, d_model, num_heads) -> SLSTMState:
+    dh = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full_like(z, -1e30), h=z)

@@ -1,0 +1,8 @@
+"""Roofline: analytic FLOPs + HLO collective audit vs v5e peaks."""
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW, ICI_BW, PEAK_FLOPS, CollectiveStats, Roofline,
+    parse_collectives, roofline_terms,
+)
+from repro.roofline.flops import (  # noqa: F401
+    forward_flops, model_flops_6nd, step_bytes, step_flops,
+)

@@ -1,0 +1,140 @@
+"""Roofline analysis from the dry-run's compiled artifact (deliverable g).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step-per-chip:
+
+  compute    = FLOPs_per_chip / 197e12           (v5e bf16 peak)
+  memory     = HBM_bytes_per_chip / 819e9        (v5e HBM bandwidth)
+  collective = collective_bytes_per_chip / 50e9  (~ICI link bandwidth)
+
+Sources:
+  * FLOPs: analytic (repro.roofline.flops) — XLA cost_analysis counts loop
+    bodies once (verified), so the raw HLO number is reported but not used
+    as the compute term. Per-chip = total / chips (SPMD splits compute).
+  * HBM bytes: cost_analysis 'bytes accessed' (per-device) — an upper-ish
+    proxy that includes fusion-internal traffic; analytic min-bytes is also
+    reported.
+  * collective bytes: parsed from compiled HLO text; ops inside while-loop
+    bodies are multiplied by the layer-scan trip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (≈ aggregate per direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None or b == 0:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str, loop_trip_count: int = 1
+                      ) -> CollectiveStats:
+    """Sum collective result-shape bytes; all-reduce counts 2x (RS+AG ring).
+
+    Collectives inside while-body computations execute trip_count times —
+    we detect the enclosing computation and multiply.
+    """
+    bytes_by_op: Dict[str, float] = {}
+    count_by_op: Dict[str, int] = {}
+    in_body = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("%") and ls.endswith("{") and "(" in ls:
+            # computation header, e.g. "%while_body.123 (arg: ...) -> ... {"
+            in_body = bool(re.match(r"%[\w.]*(body|while|cond)", ls))
+            continue
+        if ls == "}":
+            continue
+        m = _COLL_RE.search(ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        if op == "all-reduce":
+            nbytes *= 2
+        mult = loop_trip_count if in_body else 1
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + nbytes * mult
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+    return CollectiveStats(bytes_by_op, count_by_op)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops: float
+    hlo_flops_raw: float
+    useful_ratio: float           # MODEL_FLOPS / analytic step FLOPs
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return dict(dataclasses.asdict(self), dominant=self.dominant)
+
+
+def roofline_terms(
+    analytic_flops_total: float,
+    hbm_bytes_per_chip: float,
+    coll_bytes_per_chip: float,
+    chips: int,
+    model_flops: float = 0.0,
+    hlo_flops_raw: float = 0.0,
+) -> Roofline:
+    fpc = analytic_flops_total / chips
+    return Roofline(
+        compute_s=fpc / PEAK_FLOPS,
+        memory_s=hbm_bytes_per_chip / HBM_BW,
+        collective_s=coll_bytes_per_chip / ICI_BW,
+        flops_per_chip=fpc,
+        hbm_bytes_per_chip=hbm_bytes_per_chip,
+        coll_bytes_per_chip=coll_bytes_per_chip,
+        model_flops=model_flops,
+        hlo_flops_raw=hlo_flops_raw,
+        useful_ratio=(model_flops / analytic_flops_total
+                      if analytic_flops_total else 0.0),
+    )

@@ -1,0 +1,175 @@
+"""Analytic FLOPs/bytes for the roofline.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts while-loop bodies
+ONCE (verified empirically in this container — a 10-iteration scan of a
+matmul reports 1 matmul's flops). Our models scan over layer groups, so the
+HLO number undercounts by ~num_groups. We therefore derive the compute term
+from closed-form per-layer math (validated against an unrolled compile for
+tulu3-8b × prefill_32k in EXPERIMENTS.md §Roofline), and report the raw
+cost_analysis value alongside.
+
+Conventions: 1 MAC = 2 FLOPs. Causal attention scores+AV = 4 * H*hd * Σ_q
+visible_kv(q). Train step = 3x forward (fwd + bwd); remat adds ~1 forward
+(reported separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.config import (
+    ATTN, FFN_DENSE, FFN_MOE, MAMBA2, MLSTM, SHARED_ATTN, SLSTM,
+    ModelConfig, ShapeConfig,
+)
+from repro.models.transformer import build_layer_specs
+
+
+def _attn_visible_sum(S: int, mode: str, num_blocks: int, window: int,
+                      chunk: int) -> float:
+    """Σ over queries of visible kv positions (the exact score-matrix area)."""
+    if mode == "block" and num_blocks > 1:
+        L = S // num_blocks
+        within = num_blocks * L * (L + 1) / 2
+        final_extra = L * (S - L)              # final block also sees prefix
+        area = within + final_extra
+    elif chunk:
+        nch = max(S // chunk, 1)
+        area = nch * chunk * (chunk + 1) / 2
+    else:
+        area = S * (S + 1) / 2
+    if window and not chunk:
+        full = S * (S + 1) / 2
+        capped = window * (window + 1) / 2 + (S - window) * window \
+            if S > window else full
+        area = min(area, capped)
+    return area
+
+
+def layer_flops(cfg: ModelConfig, spec, B: int, S: int, mode: str,
+                num_blocks: int, decode_kv: int = 0) -> float:
+    """Forward FLOPs of one layer over B sequences of S new tokens.
+
+    decode_kv > 0: decode step — attention runs against a cache that long.
+    """
+    d, hd, H, KV = cfg.d_model, cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    f = 0.0
+    if spec.mixer in (ATTN, SHARED_ATTN):
+        f += 2 * B * S * d * hd * (2 * H + 2 * KV)          # q,k,v,o proj
+        chunk = cfg.attention_chunk if spec.chunked else 0
+        if decode_kv:
+            vis = min(decode_kv, cfg.sliding_window or decode_kv,
+                      chunk or decode_kv)
+            f += 4 * B * S * H * hd * vis
+        else:
+            area = _attn_visible_sum(S, mode, num_blocks,
+                                     cfg.sliding_window, chunk)
+            f += 4 * B * H * hd * area
+        if spec.mixer == SHARED_ATTN:                        # zamba2 block MLP
+            f += 2 * B * S * 3 * d * cfg.d_ff
+    elif spec.mixer == MAMBA2:
+        s = cfg.ssm
+        din = s.expand * d
+        nh = s.num_heads or din // s.head_dim
+        N, P = s.state_dim, s.head_dim
+        Q = min(s.chunk_size, S)
+        f += 2 * B * S * d * (2 * din + 2 * N + nh)          # in_proj
+        f += 2 * B * S * din * d                             # out_proj
+        if decode_kv:
+            f += 2 * B * S * nh * N * P * 2                  # state upd + read
+        else:
+            nc = max(S // Q, 1)
+            f += 2 * B * nc * Q * Q * N                      # C·B scores
+            f += 2 * B * nc * Q * Q * nh * P                 # M @ dtx
+            f += 2 * B * S * N * nh * P * 2                  # states in/out
+    elif spec.mixer == MLSTM:
+        x = cfg.xlstm
+        din = int(x.proj_factor * d)
+        dh = din // cfg.num_heads
+        f += 2 * B * S * d * 2 * din + 2 * B * S * din * d   # up/down proj
+        f += 3 * 2 * B * S * din * din                       # q,k,v
+        f += 2 * B * S * cfg.num_heads * dh * dh * 3         # C upd + read
+    elif spec.mixer == SLSTM:
+        dh = d // cfg.num_heads
+        f += 2 * B * S * d * 4 * d                           # W gates
+        f += 2 * B * S * cfg.num_heads * dh * 4 * dh         # recurrent R
+        f += 2 * B * S * d * d                               # out_proj
+    if spec.ffn == FFN_DENSE:
+        f += 2 * B * S * 3 * d * cfg.d_ff
+    elif spec.ffn == FFN_MOE:
+        m = cfg.moe
+        f += 2 * B * S * d * m.num_experts                   # router
+        f += 2 * B * S * 3 * d * m.d_expert * m.experts_per_token \
+            * m.capacity_factor                              # routed (w/ slack)
+        f += 2 * B * S * 3 * d * m.d_shared * m.num_shared_experts
+    return f
+
+
+def forward_flops(cfg: ModelConfig, B: int, S: int, mode: str = "full",
+                  num_blocks: int = 1, decode_kv: int = 0,
+                  logits_positions: int = 0) -> float:
+    """Forward FLOPs for the decoder stack + lm head."""
+    specs = build_layer_specs(cfg)
+    f = sum(layer_flops(cfg, sp, B, S, mode, num_blocks, decode_kv)
+            for sp in specs)
+    n_logits = logits_positions or S
+    f += 2 * B * n_logits * cfg.d_model * cfg.vocab_size
+    if cfg.arch_type == "audio" and cfg.encoder:
+        e = cfg.encoder
+        F = cfg.frontend_tokens
+        per = (2 * B * F * 4 * e.d_model * e.d_model
+               + 4 * B * e.num_heads * (e.d_model // e.num_heads) * F * F
+               + 2 * B * F * 2 * e.d_model * e.d_ff)
+        f += e.num_layers * per
+        # decoder cross-attention (not in the unified stack)
+        f += cfg.num_layers * (2 * B * S * 2 * cfg.d_model * cfg.d_model
+                               + 4 * B * cfg.num_heads * cfg.head_dim * S * F)
+    return f
+
+
+def step_flops(cfg: ModelConfig, shape: ShapeConfig, block_mode: bool = True
+               ) -> Dict[str, float]:
+    """FLOPs of the lowered step for (arch × shape), fwd and total."""
+    B, S = shape.global_batch, shape.seq_len
+    mode = "block" if block_mode else "full"
+    if shape.kind == "train":
+        if cfg.arch_type == "vlm":
+            S_eff = S  # merged patches + text
+            fwd = forward_flops(cfg, B, S_eff, mode, shape.blocks)
+        else:
+            fwd = forward_flops(cfg, B, S, mode, shape.blocks)
+        return {"forward": fwd, "total": 3 * fwd, "remat_extra": fwd}
+    if shape.kind == "prefill":
+        fwd = forward_flops(cfg, B, S, mode, shape.blocks,
+                            logits_positions=1)
+        return {"forward": fwd, "total": fwd}
+    # decode: 1 token against a seq_len cache
+    fwd = forward_flops(cfg, B, 1, mode, 1, decode_kv=S, logits_positions=1)
+    return {"forward": fwd, "total": fwd}
+
+
+def model_flops_6nd(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS yardstick: 6·N(_active)·D for training steps (fwd+bwd),
+    2·N·D for inference steps (forward only) — like-for-like with the
+    lowered step, so useful_ratio ~1 means 'all compute is param math'."""
+    n = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = shape.global_batch          # one new token per sequence
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    per_token = 6.0 if shape.kind == "train" else 2.0
+    return per_token * n * tokens
+
+
+def step_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Minimum HBM traffic: params once + activations/KV streams (rough)."""
+    bpe = 2 if cfg.param_dtype == "bfloat16" else 4
+    params = cfg.param_count() * bpe
+    B, S = shape.global_batch, shape.seq_len
+    act = B * S * cfg.d_model * bpe * 2
+    if shape.kind == "decode":
+        kv_bytes = (sum(1 for m in cfg.layer_schedule
+                        if m in (ATTN, SHARED_ATTN))
+                    * 2 * B * S * cfg.num_kv_heads * cfg.head_dim * bpe)
+        act = B * cfg.d_model * bpe * 2 + kv_bytes
+    mult = 3 if shape.kind == "train" else 1
+    return params * mult + act

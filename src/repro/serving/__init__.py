@@ -1,0 +1,3 @@
+"""Serving: Block-attention engine (Fig. 2 pipeline) + request scheduler."""
+from repro.serving.engine import BlockAttentionEngine, GenerationResult  # noqa: F401
+from repro.serving.scheduler import Batch, Request, Scheduler  # noqa: F401

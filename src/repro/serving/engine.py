@@ -1,0 +1,307 @@
+"""Block-attention serving engine — the paper's Fig. 2 inference pipeline.
+
+Per request:
+  1. segment the prompt into blocks (passages + final query block);
+  2. for each non-final block, fetch its zero-based KV from the BlockKVStore
+     (content-addressed) or encode it independently on a miss;
+  3. re-encode cached keys to their in-prompt offsets (Eq. 3 — the fused
+     rope_shift kernel / jnp fallback);
+  4. assemble the decode KV cache and run the final block through the model
+     (it attends everything) -> first token;
+  5. autoregressive decode against the assembled cache.
+
+Recurrent/hybrid archs (zamba2, xlstm) get *prefix*-granular reuse instead
+(DESIGN.md §4): the full-prefix recurrent state is cached by prefix hash.
+
+The engine also exposes ``full_prefill`` — the vanilla (non-RAG-aware)
+baseline used by benchmarks to reproduce Table 3's TTFT comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.core.kv_cache import BlockKVStore, block_key
+from repro.core.rope import reencode_positions
+from repro.models import api, transformer as T
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, T_new)
+    ttft_s: float                 # wall time to first token
+    prefill_tokens_computed: int  # tokens actually encoded (cache misses)
+    prefill_tokens_total: int
+    decode_s: float = 0.0
+
+
+class BlockAttentionEngine:
+    def __init__(self, params, cfg: ModelConfig, *,
+                 max_seq: int = 4096,
+                 store_budget_bytes: int = 4 << 30,
+                 dtype=jnp.float32,
+                 reencode_positions: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.dtype = dtype
+        # False = the paper's "w/o-pos" ablation: cached zero-based keys are
+        # used at their new offsets WITHOUT Eq.-3 re-rotation.
+        self.reencode = reencode_positions
+        self.store = BlockKVStore(store_budget_bytes, model_tag=cfg.name)
+        self.prefix_store = BlockKVStore(store_budget_bytes,
+                                         model_tag=cfg.name + "/prefix")
+        self._is_recurrent = cfg.is_recurrent()
+
+        # ---- jitted model entry points -------------------------------
+        @functools.partial(jax.jit, static_argnames=())
+        def _encode_block(params, tokens):
+            """Independent block encode: positions zero-based, full attn
+            within the block (one block == plain causal)."""
+            batch = {"tokens": tokens}
+            _, collected, _ = api.prefill(params, cfg, batch,
+                                          block_mode=False)
+            return collected
+
+        @jax.jit
+        def _final_block_pass(params, tokens, caches, cache_len):
+            B, Tq = tokens.shape
+            positions = cache_len + jnp.arange(Tq, dtype=jnp.int32)
+            positions = jnp.broadcast_to(positions, (B, Tq))
+            ctx = T.AttnCtx(kind="decode", positions=positions,
+                            cache_len=cache_len)
+            h = T.embed_tokens(params, cfg, tokens)
+            h, _, new_caches, new_states, _ = T.forward_hidden(
+                params, cfg, h, ctx, caches=caches,
+                states=self._fresh_states(B) if self._is_recurrent else {})
+            logits = T.logits_from_hidden(params, cfg, h[:, -1:])
+            return logits, new_caches, new_states
+
+        @jax.jit
+        def _decode_one(params, tokens, caches, states, cache_len):
+            return api.decode_step(params, cfg, tokens, caches, states,
+                                   cache_len)
+
+        @jax.jit
+        def _full_prefix_pass(params, tokens, caches, states):
+            """Recurrent archs / vanilla baseline: run the whole prefix
+            through the model in decode-cache-filling mode."""
+            B, Tq = tokens.shape
+            positions = jnp.broadcast_to(
+                jnp.arange(Tq, dtype=jnp.int32), (B, Tq))
+            ctx = T.AttnCtx(kind="decode", positions=positions,
+                            cache_len=jnp.zeros((), jnp.int32))
+            h = T.embed_tokens(params, cfg, tokens)
+            h, _, new_caches, new_states, _ = T.forward_hidden(
+                params, cfg, h, ctx, caches=caches, states=states)
+            logits = T.logits_from_hidden(params, cfg, h[:, -1:])
+            return logits, new_caches, new_states
+
+        self._encode_block = _encode_block
+        self._final_block_pass = _final_block_pass
+        self._decode_one = _decode_one
+        self._full_prefix_pass = _full_prefix_pass
+
+    # ------------------------------------------------------------------
+    def _fresh_caches(self, batch: int):
+        caches, _ = T.init_decode_caches(self.cfg, batch, self.max_seq,
+                                         self.dtype)
+        return caches
+
+    def _fresh_states(self, batch: int):
+        _, states = T.init_decode_caches(self.cfg, batch, self.max_seq,
+                                         self.dtype)
+        return states
+
+    # ------------------------------------------------------------------
+    # Block path (attention archs)
+    # ------------------------------------------------------------------
+    def _get_block_kv(self, tokens: np.ndarray):
+        """Zero-based KV pytree for one block (cache or fresh encode)."""
+        ent = self.store.lookup(tokens)
+        if ent is not None:
+            return ent.kv, True
+        collected = self._encode_block(self.params,
+                                       jnp.asarray(tokens)[None, :])
+        # squeeze batch: {pos: {"k": (G, 1, L, KV, D)}} -> (G, L, KV, D)
+        kv = jax.tree.map(lambda a: a[:, 0], collected)
+        self.store.insert(tokens, kv)
+        return kv, False
+
+    def _assemble_cache(self, blocks: Sequence[np.ndarray], caches):
+        """Fetch + re-encode + write each block into the decode cache."""
+        offset = 0
+        computed = 0
+        for blk in blocks:
+            kv, hit = self._get_block_kv(blk)
+            if not hit:
+                computed += len(blk)
+            # paper Eq. 3: rotate zero-based keys to the block's offset
+            kv_shifted = {
+                pos: {
+                    "k": (reencode_positions(pkv["k"], offset, self.cfg)
+                          if self.reencode else pkv["k"]),
+                    "v": pkv["v"],
+                } for pos, pkv in kv.items()
+            }
+            for pos, pkv in kv_shifted.items():
+                # cache layout (G, B, Smax, KV, D); block kv (G, L, KV, D)
+                caches[pos] = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        caches[pos]["k"], pkv["k"][:, None].astype(self.dtype),
+                        offset, axis=2),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        caches[pos]["v"], pkv["v"][:, None].astype(self.dtype),
+                        offset, axis=2),
+                }
+            offset += len(blk)
+        return caches, offset, computed
+
+    # ------------------------------------------------------------------
+    def generate(self, blocks: Sequence[np.ndarray], max_new_tokens: int = 8,
+                 greedy: bool = True) -> GenerationResult:
+        """Single-request generation with block KV reuse (batch=1)."""
+        total = sum(len(b) for b in blocks)
+        assert total + max_new_tokens <= self.max_seq
+        t0 = time.perf_counter()
+        if self._is_recurrent:
+            return self._generate_prefix_path(blocks, max_new_tokens, t0)
+
+        caches = self._fresh_caches(1)
+        caches, offset, computed = self._assemble_cache(blocks[:-1], caches)
+        final = jnp.asarray(blocks[-1])[None, :]
+        logits, caches, states = self._final_block_pass(
+            self.params, final, caches, jnp.asarray(offset, jnp.int32))
+        first = int(jnp.argmax(logits[0, -1]))
+        ttft = time.perf_counter() - t0
+
+        toks = self._decode_loop(first, caches, states, total,
+                                 max_new_tokens)
+        return GenerationResult(
+            tokens=np.asarray([toks]), ttft_s=ttft,
+            prefill_tokens_computed=computed + len(blocks[-1]),
+            prefill_tokens_total=total,
+            decode_s=time.perf_counter() - t0 - ttft)
+
+    def _generate_prefix_path(self, blocks, max_new_tokens, t0):
+        """Recurrent archs: prefix-granular reuse (DESIGN.md §4)."""
+        prefix = np.concatenate(blocks[:-1]) if len(blocks) > 1 else \
+            np.zeros((0,), np.int32)
+        total = sum(len(b) for b in blocks)
+        ent = self.prefix_store.lookup(prefix) if len(prefix) else None
+        if ent is not None:
+            caches, states = jax.tree.map(jnp.copy, ent.kv)
+            computed = 0
+        else:
+            caches = self._fresh_caches(1)
+            states = self._fresh_states(1)
+            if len(prefix):
+                _, caches, states = self._full_prefix_pass(
+                    self.params, jnp.asarray(prefix)[None], caches, states)
+                self.prefix_store.insert(
+                    prefix, jax.tree.map(jnp.copy, (caches, states)))
+            computed = len(prefix)
+        final = jnp.asarray(blocks[-1])[None, :]
+        B, Tq = final.shape
+        positions = len(prefix) + jnp.arange(Tq, dtype=jnp.int32)
+        ctx_len = jnp.asarray(len(prefix), jnp.int32)
+        h = T.embed_tokens(self.params, self.cfg, final)
+        ctx = T.AttnCtx(kind="decode",
+                        positions=jnp.broadcast_to(positions, (B, Tq)),
+                        cache_len=ctx_len)
+        h, _, caches, states, _ = T.forward_hidden(
+            self.params, self.cfg, h, ctx, caches=caches, states=states)
+        logits = T.logits_from_hidden(self.params, self.cfg, h[:, -1:])
+        first = int(jnp.argmax(logits[0, -1]))
+        ttft = time.perf_counter() - t0
+        toks = self._decode_loop(first, caches, states, total,
+                                 max_new_tokens)
+        return GenerationResult(
+            tokens=np.asarray([toks]), ttft_s=ttft,
+            prefill_tokens_computed=computed + len(blocks[-1]),
+            prefill_tokens_total=total,
+            decode_s=time.perf_counter() - t0 - ttft)
+
+    def _decode_loop(self, first: int, caches, states, pos: int,
+                     max_new_tokens: int) -> List[int]:
+        toks = [first]
+        cur = first
+        for i in range(max_new_tokens - 1):
+            logits, caches, states = self._decode_one(
+                self.params, jnp.asarray([[cur]], jnp.int32), caches, states,
+                jnp.asarray(pos + i, jnp.int32))
+            cur = int(jnp.argmax(logits[0, -1]))
+            toks.append(cur)
+        return toks
+
+    # ------------------------------------------------------------------
+    # Batched serving (scheduler path)
+    # ------------------------------------------------------------------
+    def generate_batch(self, batch_blocks: Sequence[Sequence[np.ndarray]],
+                       max_new_tokens: int = 8) -> GenerationResult:
+        """Batched requests with equal (prefix_len, final_len) — the
+        scheduler guarantees shape compatibility; the store de-duplicates
+        shared passages ACROSS rows (the paper's cross-request reuse)."""
+        assert not self._is_recurrent, "use generate() for recurrent archs"
+        B = len(batch_blocks)
+        prefix_len = sum(len(b) for b in batch_blocks[0][:-1])
+        final_len = len(batch_blocks[0][-1])
+        total = prefix_len + final_len
+        t0 = time.perf_counter()
+        computed = 0
+        rows = []
+        for blocks in batch_blocks:
+            assert sum(len(b) for b in blocks[:-1]) == prefix_len
+            caches = self._fresh_caches(1)
+            caches, _, c = self._assemble_cache(blocks[:-1], caches)
+            computed += c
+            rows.append(caches)
+        caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *rows)
+        finals = jnp.stack([jnp.asarray(b[-1]) for b in batch_blocks])
+        logits, caches, states = self._final_block_pass(
+            self.params, finals, caches, jnp.asarray(prefix_len, jnp.int32))
+        firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        ttft = time.perf_counter() - t0
+
+        toks = [list(firsts)]
+        cur = jnp.asarray(firsts, jnp.int32)[:, None]
+        for i in range(max_new_tokens - 1):
+            logits, caches, states = self._decode_one(
+                self.params, cur, caches, states,
+                jnp.asarray(total + i, jnp.int32))
+            cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            toks.append(list(np.asarray(cur[:, 0])))
+        return GenerationResult(
+            tokens=np.asarray(toks).T, ttft_s=ttft,
+            prefill_tokens_computed=computed + B * final_len,
+            prefill_tokens_total=B * total,
+            decode_s=time.perf_counter() - t0 - ttft)
+
+    # ------------------------------------------------------------------
+    # Vanilla baseline (Table 3's TTFT-vanilla row)
+    # ------------------------------------------------------------------
+    def generate_vanilla(self, blocks: Sequence[np.ndarray],
+                         max_new_tokens: int = 8) -> GenerationResult:
+        """Full re-encode of the whole prompt (no reuse)."""
+        prompt = np.concatenate(blocks)
+        total = len(prompt)
+        t0 = time.perf_counter()
+        caches = self._fresh_caches(1)
+        states = self._fresh_states(1)
+        logits, caches, states = self._full_prefix_pass(
+            self.params, jnp.asarray(prompt)[None], caches, states)
+        first = int(jnp.argmax(logits[0, -1]))
+        ttft = time.perf_counter() - t0
+        toks = self._decode_loop(first, caches, states, total,
+                                 max_new_tokens)
+        return GenerationResult(
+            tokens=np.asarray([toks]), ttft_s=ttft,
+            prefill_tokens_computed=total, prefill_tokens_total=total,
+            decode_s=time.perf_counter() - t0 - ttft)

@@ -1,0 +1,82 @@
+"""Request scheduler: batches compatible requests for the engine.
+
+Serving real traffic needs batched decode; the Block-attention twist is that
+requests sharing passages also share cache entries, so the scheduler groups
+by (prefix_length, final_block_length) — rows in a batch then share one
+scalar ``cache_len`` (what keeps serve_step jit-static) — and the store
+de-duplicates the actual KV compute across them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    blocks: List[np.ndarray]          # passages + final query block
+    max_new_tokens: int = 8
+    arrived_s: float = 0.0
+
+    @property
+    def prefix_len(self) -> int:
+        return sum(len(b) for b in self.blocks[:-1])
+
+    @property
+    def final_len(self) -> int:
+        return len(self.blocks[-1])
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: List[Request]
+
+    @property
+    def shape_key(self) -> Tuple[int, int]:
+        r = self.requests[0]
+        return (r.prefix_len, r.final_len)
+
+
+class Scheduler:
+    """Greedy same-shape batching with a max batch size and max wait."""
+
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._queues: Dict[Tuple[int, int], List[Request]] = defaultdict(list)
+        self._next_rid = itertools.count()
+
+    def submit(self, blocks: Sequence[np.ndarray],
+               max_new_tokens: int = 8) -> int:
+        req = Request(rid=next(self._next_rid),
+                      blocks=[np.asarray(b, np.int32) for b in blocks],
+                      max_new_tokens=max_new_tokens,
+                      arrived_s=time.perf_counter())
+        self._queues[(req.prefix_len, req.final_len)].append(req)
+        return req.rid
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def next_batch(self) -> Optional[Batch]:
+        """Oldest-first batch of up to max_batch same-shape requests."""
+        best_key, best_age = None, -1.0
+        now = time.perf_counter()
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            age = now - q[0].arrived_s
+            ready = len(q) >= self.max_batch or age >= self.max_wait_s
+            if ready and age > best_age:
+                best_key, best_age = key, age
+        if best_key is None:
+            return None
+        q = self._queues[best_key]
+        batch, self._queues[best_key] = q[:self.max_batch], q[self.max_batch:]
+        return Batch(batch)

@@ -1,0 +1,6 @@
+"""Training substrate: AdamW, block fine-tune trainer, checkpoints."""
+from repro.training.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.training.optim import AdamState, adamw_update, init_opt_state  # noqa: F401
+from repro.training.trainer import (  # noqa: F401
+    Trainer, evaluate_accuracy, loss_fn, make_train_step,
+)

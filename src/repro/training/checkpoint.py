@@ -1,0 +1,62 @@
+"""Checkpointing: params/opt-state pytrees <-> npz + msgpack metadata."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    """Flatten in the SAME order as jax.tree.flatten (sorted dict keys)."""
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):            # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, params, step: int = 0,
+                    meta: Dict[str, Any] | None = None):
+    if not path.endswith(".npz"):
+        path += ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    # bf16 isn't npz-native: stash as uint16 views + dtype map
+    dtypes = {}
+    arrays = {}
+    for k, v in flat.items():
+        dtypes[k] = str(v.dtype)
+        arrays[k] = v.view(np.uint16) if v.dtype == jnp.bfloat16 else v
+    np.savez(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"step": step, "dtypes": dtypes, "meta": meta or {}}, f)
+
+
+def load_checkpoint(path: str, template) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shape/dtype source)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    with open((path if path.endswith(".npz") else path + ".npz")
+              + ".meta.json") as f:
+        meta = json.load(f)
+    flat_t = _flatten(template)
+    restored = {}
+    for k, tpl in flat_t.items():
+        arr = data[k]
+        if meta["dtypes"][k] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        restored[k] = jnp.asarray(arr)
+    leaves, treedef = jax.tree.flatten(template)
+    keys = list(_flatten(template).keys())
+    return treedef.unflatten([restored[k] for k in keys]), meta["step"]

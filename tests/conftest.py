@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 device;
+only launch/dryrun.py forces 512 host devices (in its own process)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_dense(**kw) -> ModelConfig:
+    base = dict(name="tiny-dense", arch_type="dense", num_layers=2,
+                d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                vocab_size=128, dtype="float32", param_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return tiny_dense()

@@ -1,0 +1,59 @@
+"""Spec-compliance: every assigned architecture's config matches the pool
+assignment EXACTLY (layers / d_model / heads / kv / d_ff / vocab / extras)."""
+import pytest
+
+from repro.configs import get_config
+
+ASSIGNED = {
+    # arch_id: (L, d_model, H, kv, d_ff, vocab)
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "minitron-8b":           (32, 4096, 32, 8, 16384, 256000),
+    "glm4-9b":               (40, 4096, 32, 2, 13696, 151552),
+    "chatglm3-6b":           (28, 4096, 32, 2, 13696, 65024),
+    "qwen3-14b":             (40, 5120, 40, 8, 17408, 151936),
+    "zamba2-2.7b":           (54, 2560, 32, 32, 10240, 32000),
+    "whisper-base":          (6, 512, 8, 8, 2048, 51865),
+    "xlstm-350m":            (24, 1024, 4, 4, 0, 50304),
+    "olmoe-1b-7b":           (16, 2048, 16, 16, 1024, 50304),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, ff, vocab = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == vocab
+    assert cfg.source, "missing provenance citation"
+
+
+def test_arch_type_extras():
+    moe = get_config("llama4-scout-17b-a16e").moe
+    assert moe.num_experts == 16 and moe.experts_per_token == 1
+    olmoe = get_config("olmoe-1b-7b").moe
+    assert olmoe.num_experts == 64 and olmoe.experts_per_token == 8
+    zamba = get_config("zamba2-2.7b")
+    assert zamba.ssm.state_dim == 64 and zamba.shared_attn_every == 6
+    assert get_config("qwen3-14b").qk_norm
+    assert get_config("chatglm3-6b").rope_interleaved
+    assert get_config("glm4-9b").rotary_pct == 0.5
+    x = get_config("xlstm-350m")
+    assert x.xlstm is not None and x.d_ff == 0
+    w = get_config("whisper-base")
+    assert w.encoder is not None and w.frontend == "audio_stub"
+    lv = get_config("llava-next-mistral-7b")
+    assert lv.frontend == "vision_stub" and lv.frontend_tokens == 2880
+
+
+def test_smoke_configs_reduced():
+    for arch in ASSIGNED:
+        s = get_config(arch, smoke=True)
+        assert s.num_layers <= 2
+        assert s.d_model <= 512
+        if s.moe:
+            assert s.moe.num_experts <= 4

@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 3e-5, jnp.bfloat16: 3e-2}
+
+
+def _qkv(key, B, S, H, KV, D, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (jax.random.normal(k1, (B, S, H, D), jnp.float32).astype(dtype),
+            jax.random.normal(k2, (B, S, KV, D), jnp.float32).astype(dtype),
+            jax.random.normal(k3, (B, S, KV, D), jnp.float32).astype(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D,nb", [
+    (1, 256, 4, 4, 64, 4),     # MHA
+    (2, 512, 8, 2, 64, 8),     # GQA 4:1
+    (1, 512, 8, 8, 128, 2),    # head_dim 128 (MXU-aligned)
+    (1, 1024, 4, 1, 64, 4),    # MQA
+])
+def test_block_attention_kernel_sweep(B, S, H, KV, D, nb, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, KV, D, dtype)
+    scale = D ** -0.5
+    got = ops.block_attention_prefill(q, k, v, nb, scale)
+    want = ref.block_attention_ref(q, k, v, nb, scale)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("q_offset", [0, 256])
+def test_causal_kernel_offset(dtype, q_offset):
+    B, S, H, KV, D = 1, 256, 4, 2, 64
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, S + q_offset, H, KV, D, dtype)
+    qq = q[:, q_offset:]
+    got = ops.causal_attention(qq, k, v, D ** -0.5, q_offset=q_offset)
+    want = ref.causal_attention_ref(qq, k, v, D ** -0.5, q_offset=q_offset)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cache_len,window", [
+    (512, 0), (300, 0), (512, 128), (100, 256),
+])
+def test_decode_kernel_sweep(dtype, cache_len, window):
+    B, S, H, KV, D = 2, 512, 8, 4, 64
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, S, H, KV, D, dtype)
+    q1 = q[:, -1:]
+    got = ops.decode_attention(q1, k, v, jnp.asarray(cache_len), D ** -0.5,
+                               window=window)
+    want = ref.decode_attention_ref(q1, k, v, jnp.full((B,), cache_len),
+                                    D ** -0.5, window=window)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rd,interleaved", [(64, False), (32, False),
+                                            (32, True)])
+@pytest.mark.parametrize("delta", [0, 1, 777, 100_000])
+def test_rope_shift_kernel_sweep(dtype, rd, interleaved, delta):
+    S, KV, D = 512, 4, 64
+    k = jax.random.normal(jax.random.PRNGKey(3), (S, KV, D),
+                          jnp.float32).astype(dtype)
+    got = ops.reencode_block_kv(k, delta, rotary_dim=rd, theta=1e4,
+                                interleaved=interleaved)
+    want = ref.rope_shift_ref(k, delta, rotary_dim=rd, theta=1e4,
+                              interleaved=interleaved)
+    # f32 angle precision scales with |delta * inv_freq| (~1e-2 at 1e5) —
+    # kernel and oracle compute sin/cos of large angles in different orders
+    atol = max(ATOL[dtype], 1e-4) if delta < 10_000 else 2e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=atol, rtol=1e-2)
+
+
+def test_kernel_consistent_with_core_blockwise():
+    """Kernel path == the pure-jnp structural path used by the models."""
+    from repro.core.attention import blockwise_prefill
+    B, S, H, KV, D, nb = 1, 256, 4, 2, 32, 4
+    q, k, v = _qkv(jax.random.PRNGKey(4), B, S, H, KV, D, jnp.float32)
+    got = ops.block_attention_prefill(q, k, v, nb, D ** -0.5)
+    want = blockwise_prefill(q, k, v, nb, D ** -0.5, kv_chunk=64)
+    np.testing.assert_allclose(got, want, atol=3e-5)

@@ -1,0 +1,73 @@
+"""BlockKVStore: content addressing, LRU eviction, stats."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kv_cache import BlockKVStore, block_key
+
+
+def _kv(nbytes_per_side=1024):
+    n = nbytes_per_side // 4
+    return {"k": jnp.zeros((n,), jnp.float32),
+            "v": jnp.zeros((n,), jnp.float32)}
+
+
+def test_content_addressing():
+    toks = np.array([1, 2, 3], np.int32)
+    assert block_key(toks) == block_key(toks.copy())
+    assert block_key(toks) != block_key(np.array([1, 2, 4], np.int32))
+    assert block_key(toks, "a") != block_key(toks, "b")   # model tag
+
+
+def test_hit_miss_stats():
+    store = BlockKVStore()
+    t = np.arange(8, dtype=np.int32)
+    assert store.lookup(t) is None
+    store.insert(t, _kv())
+    assert store.lookup(t) is not None
+    assert store.hits == 1 and store.misses == 1
+    assert store.hit_rate == 0.5
+
+
+def test_lru_eviction_under_budget():
+    store = BlockKVStore(budget_bytes=10 * 2048)   # fits ~10 entries
+    blocks = [np.full(4, i, np.int32) for i in range(20)]
+    for b in blocks:
+        store.insert(b, _kv())
+    assert store.nbytes <= store.budget_bytes
+    assert store.evictions == 10
+    # oldest evicted, newest retained
+    assert store.lookup(blocks[0]) is None
+    assert store.lookup(blocks[-1]) is not None
+
+
+def test_lru_touch_protects_entry():
+    store = BlockKVStore(budget_bytes=3 * 2048)
+    a, b, c, d = (np.full(4, i, np.int32) for i in range(4))
+    store.insert(a, _kv())
+    store.insert(b, _kv())
+    store.insert(c, _kv())
+    store.lookup(a)              # touch a -> b is now LRU
+    store.insert(d, _kv())       # evicts b
+    assert store.lookup(a) is not None
+    assert store.lookup(b) is None
+
+
+def test_reinsert_refreshes_bytes():
+    store = BlockKVStore()
+    t = np.arange(4, dtype=np.int32)
+    store.insert(t, _kv(1024))
+    n1 = store.nbytes
+    store.insert(t, _kv(1024))
+    assert store.nbytes == n1            # no double counting
+    assert len(store) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 100), min_size=1, max_size=8),
+                min_size=1, max_size=30))
+def test_store_never_exceeds_budget(token_lists):
+    store = BlockKVStore(budget_bytes=5 * 2048)
+    for toks in token_lists:
+        store.insert(np.asarray(toks, np.int32), _kv())
+        assert store.nbytes <= store.budget_bytes or len(store) <= 1

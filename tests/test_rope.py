@@ -1,0 +1,89 @@
+"""Position re-encoding (paper Eq. 1-3) correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.config import ModelConfig
+from repro.core.rope import apply_rope, reencode_positions, zero_base_positions
+
+
+def _cfg(**kw):
+    base = dict(name="t", arch_type="dense", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                            # llama full rotary
+    dict(rotary_pct=0.5),                              # glm partial
+    dict(rotary_pct=0.5, rope_interleaved=True),       # chatglm 2d
+    dict(rope_theta=500_000.0),                        # llama3
+])
+def test_reencode_equals_direct_encoding(kw):
+    """Eq. 3: rope(x, 0) rotated by delta == rope(x, delta)."""
+    cfg = _cfg(**kw)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 2, 16))
+    pos0 = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    k_zero = apply_rope(x, pos0, cfg)
+    # f32 angle precision degrades ~linearly in |delta| (sin of large args);
+    # same drift exists in production f32 RoPE and is model-benign.
+    for delta, atol in ((1, 1e-5), (17, 1e-5), (1000, 1e-4),
+                        (100_000, 1e-2)):
+        np.testing.assert_allclose(
+            reencode_positions(k_zero, delta, cfg),
+            apply_rope(x, pos0 + delta, cfg),
+            atol=atol)
+
+
+def test_zero_base_inverts_encoding():
+    """Eq. 2: counter-rotation recovers the zero-based keys."""
+    cfg = _cfg()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 16))
+    pos0 = jnp.arange(8)[None]
+    k_at_100 = apply_rope(x, pos0 + 100, cfg)
+    k_zeroed = zero_base_positions(k_at_100, 100, cfg)
+    np.testing.assert_allclose(k_zeroed, apply_rope(x, pos0, cfg), atol=2e-4)
+
+
+def test_rope_preserves_norm():
+    cfg = _cfg()
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 16))
+    y = apply_rope(x, jnp.arange(8)[None] + 1234, cfg)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_invariance():
+    """q·k depends only on relative distance — the property that makes
+    Eq.-3 reuse exact."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 2, 16))
+    def dot(shift):
+        qp = apply_rope(q, jnp.asarray([[10 + shift]]), cfg)
+        kp = apply_rope(k, jnp.asarray([[3 + shift]]), cfg)
+        return jnp.einsum("bshd,bshd->", qp, kp)
+    np.testing.assert_allclose(dot(0), dot(5000), rtol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(delta1=st.integers(0, 4096), delta2=st.integers(0, 4096),
+       pct=st.sampled_from([1.0, 0.5]), inter=st.booleans())
+def test_reencode_composes(delta1, delta2, pct, inter):
+    """Rotations compose additively: shift(shift(k, d1), d2) == shift(k, d1+d2)."""
+    cfg = _cfg(rotary_pct=pct, rope_interleaved=inter)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 2, 16))
+    a = reencode_positions(reencode_positions(x, delta1, cfg), delta2, cfg)
+    b = reencode_positions(x, delta1 + delta2, cfg)
+    np.testing.assert_allclose(a, b, atol=3e-4)
+
+
+def test_norope_passthrough():
+    cfg = _cfg(use_rope=False)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 4, 2, 16))
+    np.testing.assert_array_equal(reencode_positions(x, 99, cfg), x)

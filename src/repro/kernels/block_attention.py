@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 DEFAULT_TQ = 256
 DEFAULT_TK = 512
 NEG_INF = -1e30
@@ -127,7 +129,7 @@ def flash_causal(
             pltpu.VMEM((G, tq), jnp.float32),        # denominator l
             pltpu.VMEM((G, tq, D), jnp.float32),     # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

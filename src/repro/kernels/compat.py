@@ -1,0 +1,12 @@
+"""Version shims for jax.experimental.pallas.tpu API drift.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` (and back again across
+releases); kernels import the symbol from here so they run on whichever jax
+the container ships.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 DEFAULT_TS = 512
 
 
@@ -71,7 +73,7 @@ def rope_shift(
         ],
         out_specs=pl.BlockSpec((ts, KV, D), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((S, KV, D), k.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(delta, k)

@@ -1,11 +1,16 @@
 """Pallas TPU kernels for the Block-attention hot-spots.
 
-  block_attention — within-block + final-global flash prefill (grid-level
-                    tile skipping realises the paper's FLOPs reduction)
+  block_attention — flash prefill: ``flash_causal`` (uniform, grid-level
+                    tile skipping) + ``flash_block_ragged`` (ONE launch for
+                    variable-length blocks via a scalar-prefetched
+                    block-boundary map — DESIGN.md §1)
   decode_attention — single-token flash decode over the KV cache
   rope_shift      — fused position re-encoding of cached keys (paper Eq. 3)
+                    with a ragged per-row delta vector (one launch per
+                    fetched block set — DESIGN.md §2)
 
-ops.py = jit'd public wrappers; ref.py = pure-jnp oracles. Kernels are
-validated in interpret mode on CPU (TPU is the deploy target).
+ops.py = jit'd public wrappers; ref.py = pure-jnp oracles; compat.py =
+pallas API drift shims. Kernels are validated in interpret mode on CPU
+(TPU is the deploy target).
 """
 from repro.kernels import ops, ref  # noqa: F401

@@ -1,21 +1,32 @@
-"""Pallas TPU kernel: causal flash attention with GQA + query offset.
+"""Pallas TPU kernels: causal flash attention with GQA + the ragged
+Block-attention prefill.
 
-This single kernel realises both halves of Block-attention prefill
-(the paper's Fig. 1 mask) via *grid-level sparsity* instead of in-kernel
+``flash_causal`` realises both halves of *uniform* Block-attention prefill
+(the paper's Fig. 1 mask) via grid-level sparsity instead of in-kernel
 masking waste:
 
   * within-block passes — blocks are folded into the batch dimension by the
-    caller (``ops.block_attention_prefill``), so the KV grid only ever spans
-    one block: cross-block tiles are never visited. FLOPs scale with
-    Σ block_len² instead of S².
+    caller, so the KV grid only ever spans one block: cross-block tiles are
+    never visited. FLOPs scale with Σ block_len² instead of S².
   * final-block global pass — the same kernel with ``q_offset = S - L``:
     the query block attends the whole sequence causally.
+
+``flash_block_ragged`` is the serving hot path: ONE launch computes the
+whole Block-attention mask for *variable-length* blocks. The cumulative
+block boundaries arrive as a scalar-prefetched SMEM array; each grid step
+derives, from the boundaries alone,
+
+  * a per-tile liveness test (grid sparsity: a KV tile left of the query
+    tile's lowest block start, or right of the causal frontier, is skipped
+    with ``pl.when`` — the MXU does no work for it), and
+  * the exact per-row attention window ``[lo(q), q]`` where ``lo(q)`` is the
+    start of q's block, or 0 for final-block (and thus global) queries.
+
+No ``S % num_blocks == 0`` restriction, no separate final-block launch.
 
 Grid: (B*KV, num_q_tiles, num_kv_tiles); the KV dimension is the innermost
 (sequential) axis — running max / denominator / accumulator live in VMEM
 scratch across KV iterations (the canonical TPU flash-attention schedule).
-Fully-masked KV tiles (beyond the causal frontier) are skipped with
-``pl.when``: the MXU does no work for them.
 
 BlockSpec tiling (VMEM working set, bf16 in / f32 acc):
   q tile (1, G, TQ, D) + acc (G, TQ, D) f32 + k/v tiles (TK, D)
@@ -133,3 +144,135 @@ def flash_causal(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Ragged Block-attention prefill: one launch, scalar-prefetched block map
+# ---------------------------------------------------------------------------
+def _ragged_kernel(starts_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, nb: int, tq: int, tk: int,
+                   softcap: float):
+    """One (n, i, j) grid step of the ragged-block prefill.
+
+    ``starts_ref`` (SMEM, scalar-prefetched): (nb + 1,) cumulative block
+    boundaries with ``starts[0] == 0`` and ``starts[nb] == valid kv length``.
+    Row q attends [lo(q), q] with lo(q) = start of q's block, or 0 for rows
+    in the final block (the paper's global query block).
+    """
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    kv_len = starts_ref[nb]
+    final_start = starts_ref[nb - 1]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- tile liveness from the boundary scalars alone -------------------
+    # lo of the tile's FIRST row: the largest block start <= i*tq.  lo(q) is
+    # non-decreasing in q except in the final block where it drops to 0, so
+    # the tile-wide minimum is 0 whenever the tile overlaps the final block.
+    lo_first = jnp.int32(0)
+    for b in range(1, nb):
+        sb = starts_ref[b]
+        lo_first = jnp.where(i * tq >= sb, sb, lo_first)
+    q_hi = (i + 1) * tq - 1                       # causal frontier of the tile
+    tile_lo = jnp.where(q_hi >= final_start, 0, lo_first)
+    live = (j * tk <= jnp.minimum(q_hi, kv_len - 1)) & \
+        ((j + 1) * tk > tile_lo) & (i * tq < kv_len)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale              # (G, TQ, D)
+        k = k_ref[0].astype(jnp.float32)                      # (TK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, TQ, TK)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        # per-row window lower bound lo(q): VPU work on a (TQ, 1) column
+        q_pos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)
+        lo = jnp.zeros((tq, 1), jnp.int32)
+        for b in range(1, nb):
+            sb = starts_ref[b]
+            lo = jnp.where(q_pos >= sb, sb, lo)
+        lo = jnp.where(q_pos >= final_start, 0, lo)           # global final blk
+        kv_pos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        mask = (kv_pos <= q_pos) & (kv_pos >= lo) & (kv_pos < kv_len)
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_ref[...]                                   # (G, TQ)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, TQ, D)
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_block_ragged(
+    q: jax.Array,            # (N, G, Sp, D)   N = batch * kv_heads
+    k: jax.Array,            # (N, Sp, D)      Sp padded to tile multiples
+    v: jax.Array,            # (N, Sp, D)
+    starts: jax.Array,       # (nb + 1,) int32 cumulative block boundaries;
+                             # starts[nb] = valid length (<= Sp)
+    *,
+    scale: float,
+    tq: int = DEFAULT_TQ,
+    tk: int = DEFAULT_TK,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Whole ragged Block-attention prefill in ONE kernel launch.
+
+    Rows beyond ``starts[-1]`` (q padding) hold UNSPECIFIED values — zeros
+    when their whole tile is dead, unmasked attention over the real keys
+    when the tile straddles the valid boundary (their ``lo`` falls to 0
+    like final-block rows). Callers MUST slice the output back to the
+    valid length. Pad *keys* are always masked out via the boundary
+    scalars.
+    """
+    N, G, Sq, D = q.shape
+    Skv = k.shape[1]
+    nb = starts.shape[0] - 1
+    tq = min(tq, Sq)
+    tk = min(tk, Skv)
+    assert Sq % tq == 0 and Skv % tk == 0, (Sq, tq, Skv, tk)
+    grid = (N, Sq // tq, Skv // tk)
+
+    kernel = functools.partial(_ragged_kernel, scale=scale, nb=nb,
+                               tq=tq, tk=tk, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, tq, D), lambda n, i, j, starts: (n, 0, i, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, i, j, starts: (n, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, i, j, starts: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, tq, D),
+                               lambda n, i, j, starts: (n, 0, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, tq), jnp.float32),        # running max m
+            pltpu.VMEM((G, tq), jnp.float32),        # denominator l
+            pltpu.VMEM((G, tq, D), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, G, Sq, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(starts, q, k, v)

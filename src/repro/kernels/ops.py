@@ -12,11 +12,27 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.block_attention import flash_causal
+from repro.kernels.block_attention import flash_block_ragged, flash_causal
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.rope_shift import rope_shift
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _pad_seq(x, target: int, axis: int = 1):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 def _fold(q, k, v):
@@ -39,42 +55,106 @@ def _unfold(o, B, H, D):
         B, S, H, D)
 
 
+def block_attention_prefill(q, k, v, num_blocks: int = 0, scale: float = None,
+                            softcap: float = 0.0,
+                            interpret: bool = INTERPRET,
+                            block_lens=None):
+    """Block-attention prefill (paper Fig. 1).
+
+    Either ``num_blocks`` (uniform split; any remainder joins the final
+    block — no ``S % num_blocks == 0`` restriction) or ``block_lens`` (a
+    (nb,) int array / sequence of per-block lengths summing to S, ragged
+    RAG passages) selects the block map. Two dispatch strategies:
+
+    * uniform & divisible — blocks folded into the batch dim (the grid
+      never visits a cross-block tile) + one global final-block pass:
+      exact block-granular sparsity, FLOPs Σ block_len² + L_final·S;
+    * ragged / non-divisible — ONE ``flash_block_ragged`` launch: the
+      cumulative boundaries are scalar-prefetched into SMEM and drive
+      per-tile liveness plus the exact per-row mask. Tile sizes adapt to
+      the smallest host-known block length (floor 64) so grid sparsity
+      stays close to block-granular; blocks smaller than a tile still pay
+      masked-MAC waste within their tile (tile-granular, not row-granular,
+      sparsity — see DESIGN.md §1).
+    """
+    if scale is None:   # keyword-form callers must not silently get 1.0
+        raise TypeError("block_attention_prefill: scale is required")
+    if block_lens is not None and not isinstance(block_lens, jax.Array):
+        # host-side lens: catch a bad block map here, before tracing would
+        # silently mask the tail (device-array lens are the caller's
+        # contract — a sum check there would force a sync)
+        lens = tuple(int(l) for l in block_lens)
+        if sum(lens) != q.shape[1]:
+            raise ValueError(
+                f"block_lens sum {sum(lens)} != seq len {q.shape[1]}")
+        if len(set(lens)) == 1:           # uniform in disguise
+            return _block_attention_uniform(q, k, v, len(lens), scale,
+                                            softcap, interpret)
+        tile = min(256, max(64, _next_pow2(min(lens))))
+        return _block_attention_ragged(q, k, v, jnp.asarray(lens, jnp.int32),
+                                       scale, softcap, interpret, tile)
+    if block_lens is None:
+        assert num_blocks > 0, "need num_blocks or block_lens"
+        S = q.shape[1]
+        if S % num_blocks == 0:
+            return _block_attention_uniform(q, k, v, num_blocks, scale,
+                                            softcap, interpret)
+        L = S // num_blocks
+        lens = [L] * (num_blocks - 1) + [S - L * (num_blocks - 1)]
+        block_lens = jnp.asarray(lens, jnp.int32)
+        tile = min(256, max(64, _next_pow2(L)))
+    else:
+        tile = 256                        # traced lens: no host info to adapt
+    return _block_attention_ragged(q, k, v, block_lens, scale, softcap,
+                                   interpret, tile)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "num_blocks", "scale", "softcap", "interpret"))
-def block_attention_prefill(q, k, v, num_blocks: int, scale: float,
-                            softcap: float = 0.0,
-                            interpret: bool = INTERPRET):
-    """Block-attention prefill (paper Fig. 1) via two kernel launches.
-
-    1) within-block: blocks folded into batch — the grid never visits a
-       cross-block tile (that's the FLOPs reduction);
-    2) final block re-done globally with q_offset = S - L.
-    """
+def _block_attention_uniform(q, k, v, num_blocks, scale, softcap, interpret):
+    """Uniform-split fast path: blocks folded into batch (grid never visits
+    a cross-block tile) + one global final-block pass."""
     B, S, H, D = q.shape
     KV = k.shape[2]
     L = S // num_blocks
-    assert S % num_blocks == 0
 
-    # within-block: (B, nb, L, ...) folded to batch
     qb = q.reshape(B * num_blocks, L, H, D)
     kb = k.reshape(B * num_blocks, L, KV, D)
     vb = v.reshape(B * num_blocks, L, KV, D)
     qf, kf, vf = _fold(qb, kb, vb)
-    tq = min(256, L)
-    tk = min(512, L)
-    o_within = flash_causal(qf, kf, vf, scale=scale, tq=tq, tk=tk,
-                            softcap=softcap, interpret=interpret)
+    o_within = flash_causal(qf, kf, vf, scale=scale, tq=min(256, L),
+                            tk=min(512, L), softcap=softcap,
+                            interpret=interpret)
     o_within = _unfold(o_within, B * num_blocks, H, D).reshape(B, S, H, D)
     if num_blocks == 1:
         return o_within
 
-    # final block: global causal pass
     qf2, kf2, vf2 = _fold(q[:, S - L:], k, v)
     o_final = flash_causal(qf2, kf2, vf2, scale=scale, q_offset=S - L,
                            tq=min(256, L), tk=min(512, S), softcap=softcap,
                            interpret=interpret)
     o_final = _unfold(o_final, B, H, D)
     return jnp.concatenate([o_within[:, : S - L], o_final], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "softcap", "interpret", "tile"))
+def _block_attention_ragged(q, k, v, block_lens, scale, softcap, interpret,
+                            tile):
+    B, S, H, D = q.shape
+    block_lens = jnp.asarray(block_lens, jnp.int32)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(block_lens, dtype=jnp.int32)])
+
+    tq = min(tile, _next_pow2(S))
+    tk = min(max(tile, 512) if tile >= 256 else tile, _next_pow2(S))
+    qp = _pad_seq(q, -(-S // tq) * tq)
+    kp = _pad_seq(k, -(-S // tk) * tk)
+    vp = _pad_seq(v, -(-S // tk) * tk)
+    qf, kf, vf = _fold(qp, kp, vp)
+    o = flash_block_ragged(qf, kf, vf, starts, scale=scale, tq=tq, tk=tk,
+                           softcap=softcap, interpret=interpret)
+    return _unfold(o, B, H, D)[:, :S]
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -114,11 +194,33 @@ def reencode_block_kv(k, delta, rotary_dim: int, theta: float,
                       interleaved: bool = False, interpret: bool = INTERPRET):
     """Fused Eq.-3 re-rotation of cached zero-based keys to offset delta.
 
-    k: (..., S, KV, D) — leading dims (layers/groups) are vmapped.
+    k: (..., S, KV, D) — leading dims (layers/groups) fold into the kernel's
+    batch axis; one launch regardless of layer count.
     """
-    d = jnp.broadcast_to(jnp.asarray(delta, jnp.int32), (1, 1))
-    fn = functools.partial(rope_shift, rotary_dim=rotary_dim, theta=theta,
-                           interleaved=interleaved, interpret=interpret)
     flat = k.reshape((-1,) + k.shape[-3:])
-    out = jax.vmap(lambda kk: fn(kk, d))(flat)
+    d = jnp.broadcast_to(jnp.asarray(delta, jnp.int32).reshape(-1, 1),
+                         (flat.shape[0], 1))
+    out = rope_shift(flat, d, rotary_dim=rotary_dim, theta=theta,
+                     interleaved=interleaved, interpret=interpret)
+    return out.reshape(k.shape)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rotary_dim", "theta", "interleaved", "interpret"))
+def reencode_blocks_kv(k, deltas, rotary_dim: int, theta: float,
+                       interleaved: bool = False, interpret: bool = INTERPRET):
+    """Ragged-delta Eq.-3 re-rotation: block b shifts by its OWN offset.
+
+    k: (nb, ..., S, KV, D) stacked per-block zero-based keys (inner leading
+    dims — layers/groups — fold into the kernel's batch axis);
+    deltas: (nb,) int32 per-block target offsets. ONE kernel launch for the
+    whole fetched block set — the single-dispatch KV-assembly primitive.
+    """
+    nb = k.shape[0]
+    flat = k.reshape((nb, -1) + k.shape[-3:])         # (nb, M, S, KV, D)
+    M = flat.shape[1]
+    d = jnp.repeat(jnp.asarray(deltas, jnp.int32).reshape(nb), M)[:, None]
+    out = rope_shift(flat.reshape((nb * M,) + k.shape[-3:]), d,
+                     rotary_dim=rotary_dim, theta=theta,
+                     interleaved=interleaved, interpret=interpret)
     return out.reshape(k.shape)

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import attention as A
 from repro.core.blocks import uniform_layout
@@ -17,6 +18,20 @@ def block_attention_ref(q, k, v, num_blocks: int, scale: float,
     pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     mask = A.block_mask(pos, pos, lay.block_ids, lay.block_ids,
                         lay.last_block_id)
+    return A.attention_ref(q, k, v, mask, scale, softcap=softcap)
+
+
+def block_attention_ragged_ref(q, k, v, block_lens, scale: float,
+                               softcap: float = 0.0):
+    """Oracle for ops.block_attention_prefill with ragged ``block_lens``."""
+    B, S = q.shape[:2]
+    ids = np.concatenate([np.full(int(l), i, np.int32)
+                          for i, l in enumerate(block_lens)])
+    assert ids.shape[0] == S, (ids.shape, S)
+    jids = jnp.broadcast_to(jnp.asarray(ids), (B, S))
+    last = jnp.full((B,), len(block_lens) - 1, jnp.int32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = A.block_mask(pos, pos, jids, jids, last)
     return A.attention_ref(q, k, v, mask, scale, softcap=softcap)
 
 

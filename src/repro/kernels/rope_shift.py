@@ -1,14 +1,22 @@
 """Pallas TPU kernel: fused position re-encoding (paper Eq. 3).
 
-Rotates cached (zero-based) keys to a new block offset ``delta`` in one HBM
-round trip: k' = R(delta) @ k elementwise over (seq, kv_heads, head_dim).
-The rotation angle is constant across the block — cos/sin are computed once
-per tile from the scalar delta (VPU work, negligible) instead of materialising
-a positions array in HBM.
+Rotates cached (zero-based) keys to new offsets in one HBM round trip:
+k' = R(delta_b) @ k elementwise over (seq, kv_heads, head_dim). The delta
+operand is a *ragged per-row vector*: row ``b`` of a (B, S, KV, D) batch is
+rotated by its own ``delta[b]`` — this is what lets the serving engine
+re-encode every fetched block (each at a different prompt offset) in a
+single launch instead of one dispatch per block. The rotation angle is
+constant within a row — cos/sin are computed once per tile from the row's
+scalar delta (VPU work, negligible) instead of materialising a positions
+array in HBM.
 
-Grid: (num_seq_tiles,); block (TS, KV, D) in VMEM. Purely elementwise —
-HBM-bandwidth bound (2 * bytes(k) moved), which is exactly why fusing the
-zero-base + re-rotate of the naive two-pass formulation matters.
+Grid: (B, num_seq_tiles); block (1, TS, KV, D) in VMEM, delta in SMEM.
+Purely elementwise — HBM-bandwidth bound (2 * bytes(k) moved), which is
+exactly why fusing the zero-base + re-rotate of the naive two-pass
+formulation matters.
+
+The legacy single-sequence form — k (S, KV, D) with a (1, 1) scalar delta —
+is kept as a thin wrapper over the batched kernel.
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ DEFAULT_TS = 512
 
 def _rope_shift_kernel(delta_ref, k_ref, o_ref, *, rotary_dim: int,
                        theta: float, interleaved: bool):
-    k = k_ref[...]
+    k = k_ref[0]                                              # (TS, KV, D)
     delta = delta_ref[0, 0].astype(jnp.float32)
     rd = rotary_dim
     half = rd // 2
@@ -45,13 +53,14 @@ def _rope_shift_kernel(delta_ref, k_ref, o_ref, *, rotary_dim: int,
         x1, x2 = x[..., :half], x[..., half:]
         rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
                               axis=-1)
-    o_ref[...] = jnp.concatenate(
+    o_ref[0] = jnp.concatenate(
         [rot.astype(k.dtype), k[..., rd:]], axis=-1)
 
 
 def rope_shift(
-    k: jax.Array,            # (S, KV, D) zero-based cached keys
-    delta: jax.Array,        # (1, 1) int32 target offset
+    k: jax.Array,            # (B, S, KV, D) zero-based cached keys
+                             # (or legacy (S, KV, D) single sequence)
+    delta: jax.Array,        # (B, 1) int32 per-row offsets (legacy: (1, 1))
     *,
     rotary_dim: int,
     theta: float,
@@ -59,21 +68,33 @@ def rope_shift(
     ts: int = DEFAULT_TS,
     interpret: bool = True,
 ) -> jax.Array:
-    S, KV, D = k.shape
+    if k.ndim == 3:          # legacy single-sequence call
+        return rope_shift(k[None], jnp.reshape(delta, (1, 1)),
+                          rotary_dim=rotary_dim, theta=theta,
+                          interleaved=interleaved, ts=ts,
+                          interpret=interpret)[0]
+    B, S, KV, D = k.shape
+    delta = jnp.reshape(delta, (B, 1)).astype(jnp.int32)
     ts = min(ts, S)
-    assert S % ts == 0, (S, ts)
+    if S % ts:                   # ragged block length: pad to a tile
+        pad = ts - S % ts        # multiple (rotating zeros is free) and
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))   # slice back
+        return rope_shift(k, delta, rotary_dim=rotary_dim, theta=theta,
+                          interleaved=interleaved, ts=ts,
+                          interpret=interpret)[:, :S]
     kernel = functools.partial(_rope_shift_kernel, rotary_dim=rotary_dim,
                                theta=theta, interleaved=interleaved)
     return pl.pallas_call(
         kernel,
-        grid=(S // ts,),
+        grid=(B, S // ts),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
-            pl.BlockSpec((ts, KV, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, ts, KV, D), lambda b, i: (b, i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((ts, KV, D), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, KV, D), k.dtype),
+        out_specs=pl.BlockSpec((1, ts, KV, D), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, D), k.dtype),
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel",)),
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(delta, k)

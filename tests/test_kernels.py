@@ -33,6 +33,55 @@ def test_block_attention_kernel_sweep(B, S, H, KV, D, nb, dtype):
         atol=ATOL[dtype], rtol=1e-2)
 
 
+@pytest.mark.parametrize("lens", [
+    (48, 112, 25, 71),         # uneven RAG-ish passages + query
+    (17, 100, 3, 60, 76),      # crooked lengths, S=256
+    (256,),                    # single block == plain causal
+    (200, 56),                 # short final (query) block only edge
+    (5, 251),                  # final block is nearly everything
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_attention_ragged_lens(lens, dtype):
+    """One-launch ragged prefill == dense reference mask for uneven blocks."""
+    B, H, KV, D = 2, 4, 2, 64
+    S = sum(lens)
+    q, k, v = _qkv(jax.random.PRNGKey(7), B, S, H, KV, D, dtype)
+    scale = D ** -0.5
+    got = ops.block_attention_prefill(q, k, v, scale=scale,
+                                      block_lens=jnp.asarray(lens, jnp.int32))
+    want = ref.block_attention_ragged_ref(q, k, v, lens, scale)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("lens", [(256,), (64, 64, 64, 64)])
+def test_ragged_kernel_path_handles_uniform_and_single_block(lens):
+    """The one-launch ragged kernel itself (not the folded fast path the
+    public op prefers for uniform splits) must also be correct for a
+    single block and for uniform lens."""
+    from repro.kernels.ops import _block_attention_ragged
+    B, H, KV, D = 1, 4, 2, 64
+    S = sum(lens)
+    q, k, v = _qkv(jax.random.PRNGKey(12), B, S, H, KV, D, jnp.float32)
+    got = _block_attention_ragged(q, k, v, jnp.asarray(lens, jnp.int32),
+                                  D ** -0.5, 0.0, True, 64)
+    want = ref.block_attention_ragged_ref(q, k, v, lens, D ** -0.5)
+    np.testing.assert_allclose(got, want, atol=ATOL[jnp.float32], rtol=1e-2)
+
+
+def test_block_attention_no_divisibility_assert():
+    """num_blocks that doesn't divide S: remainder folds into the final
+    (global) block instead of raising."""
+    B, S, H, KV, D, nb = 1, 250, 4, 4, 32, 4      # 250 % 4 != 0
+    q, k, v = _qkv(jax.random.PRNGKey(8), B, S, H, KV, D, jnp.float32)
+    got = ops.block_attention_prefill(q, k, v, nb, D ** -0.5)
+    L = S // nb
+    lens = [L] * (nb - 1) + [S - L * (nb - 1)]
+    want = ref.block_attention_ragged_ref(q, k, v, lens, D ** -0.5)
+    np.testing.assert_allclose(got, want, atol=ATOL[jnp.float32], rtol=1e-2)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("q_offset", [0, 256])
 def test_causal_kernel_offset(dtype, q_offset):
@@ -81,6 +130,46 @@ def test_rope_shift_kernel_sweep(dtype, rd, interleaved, delta):
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32),
         atol=atol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rope_shift_ragged_delta_vector(dtype):
+    """Batched kernel with per-row deltas == per-row scalar oracle."""
+    B, S, KV, D, rd = 5, 64, 4, 64, 32
+    deltas = jnp.asarray([0, 64, 7, 777, 128], jnp.int32)
+    k = jax.random.normal(jax.random.PRNGKey(9), (B, S, KV, D),
+                          jnp.float32).astype(dtype)
+    got = ops.reencode_blocks_kv(k, deltas, rotary_dim=rd, theta=1e4)
+    want = jnp.stack([ref.rope_shift_ref(k[b], int(deltas[b]), rotary_dim=rd,
+                                         theta=1e4) for b in range(B)])
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=max(ATOL[dtype], 1e-4), rtol=1e-2)
+
+
+def test_rope_shift_non_tile_multiple_length():
+    """Block lengths that aren't a tile multiple (e.g. 600 > ts=512) must
+    pad-and-slice, not assert."""
+    S, KV, D, rd = 600, 2, 64, 64
+    k = jax.random.normal(jax.random.PRNGKey(11), (2, S, KV, D))
+    deltas = jnp.asarray([3, 500], jnp.int32)
+    got = ops.reencode_blocks_kv(k, deltas, rotary_dim=rd, theta=1e4)
+    want = jnp.stack([ref.rope_shift_ref(k[b], int(deltas[b]), rotary_dim=rd,
+                                         theta=1e4) for b in range(2)])
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-2)
+
+
+def test_rope_shift_ragged_with_layer_dims():
+    """(nb, G, S, KV, D) stacked block KV: inner dims fold, deltas stay
+    per-block."""
+    nb, G, S, KV, D, rd = 3, 2, 32, 2, 32, 32
+    deltas = jnp.asarray([0, 32, 64], jnp.int32)
+    k = jax.random.normal(jax.random.PRNGKey(10), (nb, G, S, KV, D))
+    got = ops.reencode_blocks_kv(k, deltas, rotary_dim=rd, theta=1e4)
+    for b in range(nb):
+        want_b = ops.reencode_block_kv(k[b], int(deltas[b]), rotary_dim=rd,
+                                       theta=1e4)
+        np.testing.assert_allclose(got[b], want_b, atol=1e-5, rtol=1e-5)
 
 
 def test_kernel_consistent_with_core_blockwise():

@@ -56,6 +56,18 @@ def cache_update(cache_k, cache_v, k_new, v_new, start):
     return cache_k, cache_v
 
 
+def cache_write_prefix(cache_k, cache_v, k_new, v_new):
+    """Scatter an assembled prefix into stacked decode-cache slabs.
+
+    cache_k/v: (G, B, Smax, KV, D); k_new/v_new: (G, B, P, KV, D) — ALL
+    rows and ALL layer groups land in one fused update per slab (the
+    single-dispatch KV-assembly write; the seed did this per block × per
+    layer group)."""
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, 0, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, 0, axis=2)
+    return cache_k, cache_v
+
+
 # ---------------------------------------------------------------------------
 # Cross-request block store (the paper's contribution)
 # ---------------------------------------------------------------------------

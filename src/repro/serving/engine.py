@@ -4,11 +4,23 @@ Per request:
   1. segment the prompt into blocks (passages + final query block);
   2. for each non-final block, fetch its zero-based KV from the BlockKVStore
      (content-addressed) or encode it independently on a miss;
-  3. re-encode cached keys to their in-prompt offsets (Eq. 3 — the fused
-     rope_shift kernel / jnp fallback);
-  4. assemble the decode KV cache and run the final block through the model
-     (it attends everything) -> first token;
-  5. autoregressive decode against the assembled cache.
+  3-4. ONE jitted assembly dispatch: concatenate the fetched blocks,
+     re-encode cached keys to their in-prompt offsets with a per-block
+     delta vector (Eq. 3), and scatter every layer group / batch row into
+     the decode cache in a single fused update (DESIGN.md §2);
+  5. the final block runs through the model (it attends everything)
+     -> first token;
+  6. autoregressive decode as ONE on-device ``lax.scan`` dispatch returning
+     all ``max_new_tokens`` at once (no per-token host sync).
+
+The warm path therefore costs three device dispatches per request —
+assembly, final-block pass, decode scan — independent of block count,
+layer count, and token count. The seed spent O(blocks × layer-groups)
+dispatches in assembly and O(tokens) in decode; see BENCH_ttft.json for
+the measured delta. The assembly rope runs as vectorised jnp inside the
+one jitted call; the numerically equivalent batched ``rope_shift``
+kernel (ragged per-block delta operand, ``ops.reencode_blocks_kv``) is
+validated but not yet wired in here — see ROADMAP open items.
 
 Recurrent/hybrid archs (zamba2, xlstm) get *prefix*-granular reuse instead
 (DESIGN.md §4): the full-prefix recurrent state is cached by prefix hash.
@@ -21,15 +33,15 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import ModelConfig
-from repro.core.kv_cache import BlockKVStore, block_key
-from repro.core.rope import reencode_positions
+from repro.core.kv_cache import BlockKVStore, cache_write_prefix
+from repro.core.rope import apply_rope
 from repro.models import api, transformer as T
 
 
@@ -85,11 +97,6 @@ class BlockAttentionEngine:
             return logits, new_caches, new_states
 
         @jax.jit
-        def _decode_one(params, tokens, caches, states, cache_len):
-            return api.decode_step(params, cfg, tokens, caches, states,
-                                   cache_len)
-
-        @jax.jit
         def _full_prefix_pass(params, tokens, caches, states):
             """Recurrent archs / vanilla baseline: run the whole prefix
             through the model in decode-cache-filling mode."""
@@ -104,10 +111,72 @@ class BlockAttentionEngine:
             logits = T.logits_from_hidden(params, cfg, h[:, -1:])
             return logits, new_caches, new_states
 
+        @functools.partial(jax.jit, static_argnames=("lens",))
+        def _assemble(kv_rows, caches, lens):
+            """Single-dispatch KV assembly (tentpole path).
+
+            kv_rows: per batch row, the tuple of fetched zero-based block
+            KV pytrees {pos: {"k","v": (G, L_b, KV, D)}}; ``lens`` is the
+            static per-block length tuple (shared across rows — the
+            scheduler groups by it). For every cache position: concatenate
+            blocks, rotate keys by the per-block delta vector (Eq. 3,
+            expanded per token at trace time since lens are static), and
+            write all rows/groups with one fused cache update. Everything
+            below is ONE XLA computation — zero per-block or per-layer
+            Python dispatch on the warm path.
+            """
+            starts = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+            # per-token delta vector: token t of block b shifts by starts[b]
+            pos_vec = jnp.asarray(np.repeat(starts[:-1], lens), jnp.int32)
+            out = dict(caches)
+            for pos_key in kv_rows[0][0]:
+                knew, vnew = [], []
+                for row in kv_rows:
+                    kcat = jnp.concatenate(
+                        [blk[pos_key]["k"] for blk in row], axis=1)
+                    vcat = jnp.concatenate(
+                        [blk[pos_key]["v"] for blk in row], axis=1)
+                    if self.reencode:
+                        # paper Eq. 3 — additive RoPE composition
+                        # (ops.reencode_blocks_kv is the kernel twin of
+                        # this step, not yet wired in: ROADMAP open item)
+                        kcat = apply_rope(kcat, pos_vec, cfg)
+                    knew.append(kcat)
+                    vnew.append(vcat)
+                knew = jnp.stack(knew, axis=1).astype(self.dtype)
+                vnew = jnp.stack(vnew, axis=1).astype(self.dtype)
+                ck, cv = cache_write_prefix(
+                    out[pos_key]["k"], out[pos_key]["v"], knew, vnew)
+                out[pos_key] = {"k": ck, "v": cv}
+            return out
+
+        @functools.partial(jax.jit, static_argnames=("steps",))
+        def _decode_scan(params, first, caches, states, start_len, steps):
+            """Greedy decode as ONE on-device scan: feeds back the argmax
+            without a host round trip, returns all tokens at once.
+
+            ``start_len`` bookkeeping: when step i runs, the cache holds
+            ``start_len + i`` tokens; decode_step writes the incoming token
+            at index start_len + i (== its position) and attends
+            [0, start_len + i] inclusive — see DESIGN.md §3 for the
+            cache_len conventions audit.
+            """
+            def body(carry, i):
+                cur, caches, states = carry
+                logits, caches, states = api.decode_step(
+                    params, cfg, cur[:, None], caches, states,
+                    start_len + i)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return (nxt, caches, states), nxt
+            _, rest = jax.lax.scan(body, (first, caches, states),
+                                   jnp.arange(steps, dtype=jnp.int32))
+            return rest                                   # (steps, B)
+
         self._encode_block = _encode_block
         self._final_block_pass = _final_block_pass
-        self._decode_one = _decode_one
         self._full_prefix_pass = _full_prefix_pass
+        self._assemble = _assemble
+        self._decode_scan = _decode_scan
 
     # ------------------------------------------------------------------
     def _fresh_caches(self, batch: int):
@@ -135,34 +204,28 @@ class BlockAttentionEngine:
         self.store.insert(tokens, kv)
         return kv, False
 
-    def _assemble_cache(self, blocks: Sequence[np.ndarray], caches):
-        """Fetch + re-encode + write each block into the decode cache."""
-        offset = 0
-        computed = 0
+    def _fetch_blocks(self, blocks: Sequence[np.ndarray]):
+        """Store lookups (host hash-table work only on the warm path);
+        misses encode on device. Returns (kv pytrees, tokens computed)."""
+        kv_list, computed = [], 0
         for blk in blocks:
             kv, hit = self._get_block_kv(blk)
             if not hit:
                 computed += len(blk)
-            # paper Eq. 3: rotate zero-based keys to the block's offset
-            kv_shifted = {
-                pos: {
-                    "k": (reencode_positions(pkv["k"], offset, self.cfg)
-                          if self.reencode else pkv["k"]),
-                    "v": pkv["v"],
-                } for pos, pkv in kv.items()
-            }
-            for pos, pkv in kv_shifted.items():
-                # cache layout (G, B, Smax, KV, D); block kv (G, L, KV, D)
-                caches[pos] = {
-                    "k": jax.lax.dynamic_update_slice_in_dim(
-                        caches[pos]["k"], pkv["k"][:, None].astype(self.dtype),
-                        offset, axis=2),
-                    "v": jax.lax.dynamic_update_slice_in_dim(
-                        caches[pos]["v"], pkv["v"][:, None].astype(self.dtype),
-                        offset, axis=2),
-                }
-            offset += len(blk)
-        return caches, offset, computed
+            kv_list.append(kv)
+        return tuple(kv_list), computed
+
+    def _decode_tokens(self, first, caches, states, pos: int,
+                       max_new_tokens: int) -> np.ndarray:
+        """first token(s) (B,) + one fused scan for the rest -> (B, T)."""
+        first = jnp.asarray(first, jnp.int32)
+        if max_new_tokens <= 1:
+            return np.asarray(first)[:, None]
+        rest = self._decode_scan(self.params, first, caches, states,
+                                 jnp.asarray(pos, jnp.int32),
+                                 steps=max_new_tokens - 1)
+        return np.concatenate(
+            [np.asarray(first)[:, None], np.asarray(rest).T], axis=1)
 
     # ------------------------------------------------------------------
     def generate(self, blocks: Sequence[np.ndarray], max_new_tokens: int = 8,
@@ -175,17 +238,23 @@ class BlockAttentionEngine:
             return self._generate_prefix_path(blocks, max_new_tokens, t0)
 
         caches = self._fresh_caches(1)
-        caches, offset, computed = self._assemble_cache(blocks[:-1], caches)
+        computed = 0
+        offset = 0
+        if len(blocks) > 1:
+            kv_list, computed = self._fetch_blocks(blocks[:-1])
+            lens = tuple(len(b) for b in blocks[:-1])
+            caches = self._assemble((kv_list,), caches, lens=lens)
+            offset = sum(lens)
         final = jnp.asarray(blocks[-1])[None, :]
         logits, caches, states = self._final_block_pass(
             self.params, final, caches, jnp.asarray(offset, jnp.int32))
         first = int(jnp.argmax(logits[0, -1]))
         ttft = time.perf_counter() - t0
 
-        toks = self._decode_loop(first, caches, states, total,
-                                 max_new_tokens)
+        toks = self._decode_tokens(np.asarray([first]), caches, states,
+                                   total, max_new_tokens)
         return GenerationResult(
-            tokens=np.asarray([toks]), ttft_s=ttft,
+            tokens=toks, ttft_s=ttft,
             prefill_tokens_computed=computed + len(blocks[-1]),
             prefill_tokens_total=total,
             decode_s=time.perf_counter() - t0 - ttft)
@@ -221,48 +290,41 @@ class BlockAttentionEngine:
         logits = T.logits_from_hidden(self.params, self.cfg, h[:, -1:])
         first = int(jnp.argmax(logits[0, -1]))
         ttft = time.perf_counter() - t0
-        toks = self._decode_loop(first, caches, states, total,
-                                 max_new_tokens)
+        toks = self._decode_tokens(np.asarray([first]), caches, states,
+                                   total, max_new_tokens)
         return GenerationResult(
-            tokens=np.asarray([toks]), ttft_s=ttft,
+            tokens=toks, ttft_s=ttft,
             prefill_tokens_computed=computed + len(blocks[-1]),
             prefill_tokens_total=total,
             decode_s=time.perf_counter() - t0 - ttft)
-
-    def _decode_loop(self, first: int, caches, states, pos: int,
-                     max_new_tokens: int) -> List[int]:
-        toks = [first]
-        cur = first
-        for i in range(max_new_tokens - 1):
-            logits, caches, states = self._decode_one(
-                self.params, jnp.asarray([[cur]], jnp.int32), caches, states,
-                jnp.asarray(pos + i, jnp.int32))
-            cur = int(jnp.argmax(logits[0, -1]))
-            toks.append(cur)
-        return toks
 
     # ------------------------------------------------------------------
     # Batched serving (scheduler path)
     # ------------------------------------------------------------------
     def generate_batch(self, batch_blocks: Sequence[Sequence[np.ndarray]],
                        max_new_tokens: int = 8) -> GenerationResult:
-        """Batched requests with equal (prefix_len, final_len) — the
-        scheduler guarantees shape compatibility; the store de-duplicates
-        shared passages ACROSS rows (the paper's cross-request reuse)."""
+        """Batched requests with equal per-block lengths — the scheduler
+        groups by the block-length signature; the store de-duplicates
+        shared passages ACROSS rows (the paper's cross-request reuse).
+        """
         assert not self._is_recurrent, "use generate() for recurrent archs"
         B = len(batch_blocks)
-        prefix_len = sum(len(b) for b in batch_blocks[0][:-1])
+        lens = tuple(len(b) for b in batch_blocks[0][:-1])
         final_len = len(batch_blocks[0][-1])
+        prefix_len = sum(lens)
         total = prefix_len + final_len
         t0 = time.perf_counter()
         computed = 0
         rows = []
         for blocks in batch_blocks:
-            assert sum(len(b) for b in blocks[:-1]) == prefix_len
-            caches = self._fresh_caches(1)
-            caches, _, c = self._assemble_cache(blocks[:-1], caches)
+            assert tuple(len(b) for b in blocks[:-1]) == lens
+            assert len(blocks[-1]) == final_len
+            caches_row = self._fresh_caches(1)
+            kv_list, c = self._fetch_blocks(blocks[:-1])
             computed += c
-            rows.append(caches)
+            if lens:
+                caches_row = self._assemble((kv_list,), caches_row, lens=lens)
+            rows.append(caches_row)
         caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *rows)
         finals = jnp.stack([jnp.asarray(b[-1]) for b in batch_blocks])
         logits, caches, states = self._final_block_pass(
@@ -270,16 +332,10 @@ class BlockAttentionEngine:
         firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         ttft = time.perf_counter() - t0
 
-        toks = [list(firsts)]
-        cur = jnp.asarray(firsts, jnp.int32)[:, None]
-        for i in range(max_new_tokens - 1):
-            logits, caches, states = self._decode_one(
-                self.params, cur, caches, states,
-                jnp.asarray(total + i, jnp.int32))
-            cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            toks.append(list(np.asarray(cur[:, 0])))
+        toks = self._decode_tokens(firsts, caches, states, total,
+                                   max_new_tokens)
         return GenerationResult(
-            tokens=np.asarray(toks).T, ttft_s=ttft,
+            tokens=toks, ttft_s=ttft,
             prefill_tokens_computed=computed + B * final_len,
             prefill_tokens_total=B * total,
             decode_s=time.perf_counter() - t0 - ttft)
@@ -299,9 +355,9 @@ class BlockAttentionEngine:
             self.params, jnp.asarray(prompt)[None], caches, states)
         first = int(jnp.argmax(logits[0, -1]))
         ttft = time.perf_counter() - t0
-        toks = self._decode_loop(first, caches, states, total,
-                                 max_new_tokens)
+        toks = self._decode_tokens(np.asarray([first]), caches, states,
+                                   total, max_new_tokens)
         return GenerationResult(
-            tokens=np.asarray([toks]), ttft_s=ttft,
+            tokens=toks, ttft_s=ttft,
             prefill_tokens_computed=total, prefill_tokens_total=total,
             decode_s=time.perf_counter() - t0 - ttft)

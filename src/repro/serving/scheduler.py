@@ -2,8 +2,10 @@
 
 Serving real traffic needs batched decode; the Block-attention twist is that
 requests sharing passages also share cache entries, so the scheduler groups
-by (prefix_length, final_block_length) — rows in a batch then share one
-scalar ``cache_len`` (what keeps serve_step jit-static) — and the store
+by the full per-block length signature ``(len(b_0), ..., len(b_last))`` —
+rows in a batch then share one scalar ``cache_len`` (what keeps serve_step
+jit-static) AND one static ``lens`` tuple (what keeps the engine's fused
+single-dispatch KV assembly at one compile per signature) — and the store
 de-duplicates the actual KV compute across them.
 """
 from __future__ import annotations
@@ -32,15 +34,20 @@ class Request:
     def final_len(self) -> int:
         return len(self.blocks[-1])
 
+    @property
+    def lens_key(self) -> Tuple[int, ...]:
+        """Per-block length signature: the batching AND jit-compile key for
+        the engine's shape-specialised fused assembly."""
+        return tuple(len(b) for b in self.blocks)
+
 
 @dataclasses.dataclass
 class Batch:
     requests: List[Request]
 
     @property
-    def shape_key(self) -> Tuple[int, int]:
-        r = self.requests[0]
-        return (r.prefix_len, r.final_len)
+    def shape_key(self) -> Tuple[int, ...]:
+        return self.requests[0].lens_key
 
 
 class Scheduler:
@@ -49,7 +56,7 @@ class Scheduler:
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
-        self._queues: Dict[Tuple[int, int], List[Request]] = defaultdict(list)
+        self._queues: Dict[Tuple[int, ...], List[Request]] = defaultdict(list)
         self._next_rid = itertools.count()
 
     def submit(self, blocks: Sequence[np.ndarray],
@@ -58,7 +65,7 @@ class Scheduler:
                       blocks=[np.asarray(b, np.int32) for b in blocks],
                       max_new_tokens=max_new_tokens,
                       arrived_s=time.perf_counter())
-        self._queues[(req.prefix_len, req.final_len)].append(req)
+        self._queues[req.lens_key].append(req)
         return req.rid
 
     def pending(self) -> int:

@@ -114,6 +114,50 @@ def test_batched_serving_matches_single(setup):
         np.concatenate([r.tokens for r in r_single], axis=0))
 
 
+def test_scan_decode_bitwise_matches_python_loop(setup):
+    """The fused lax.scan greedy decode must reproduce the seed's
+    host-synced Python loop token-for-token."""
+    cfg, params, blocks = setup
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    res = eng.generate_vanilla(blocks, max_new_tokens=6)
+
+    # seed decode loop: per-token jitted decode_step + int(argmax) host sync
+    prompt = np.concatenate(blocks)
+    caches = eng._fresh_caches(1)
+    states = eng._fresh_states(1)
+    logits, caches, states = eng._full_prefix_pass(
+        params, jnp.asarray(prompt)[None], caches, states)
+    step = jax.jit(lambda tok, c, s, n: api.decode_step(
+        params, cfg, tok, c, s, n))
+    cur = int(jnp.argmax(logits[0, -1]))
+    toks = [cur]
+    for i in range(5):
+        lg, caches, states = step(jnp.asarray([[cur]], jnp.int32), caches,
+                                  states, jnp.asarray(len(prompt) + i,
+                                                      jnp.int32))
+        cur = int(jnp.argmax(lg[0, -1]))
+        toks.append(cur)
+    np.testing.assert_array_equal(res.tokens[0], toks)
+
+
+def test_decode_cache_len_parity_vs_full_attention(setup):
+    """cache_len bookkeeping audit: a 3-step greedy decode must agree with
+    re-running the full-attention reference over prompt + generated tokens
+    at every step (an off-by-one in the write offset / attended length
+    diverges from step 2 on)."""
+    cfg, params, blocks = setup
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    res = eng.generate_vanilla(blocks, max_new_tokens=3)
+    seq = list(np.concatenate(blocks))
+    for t in range(3):
+        lg, _ = api.forward_logits(
+            params, cfg, {"tokens": jnp.asarray(seq)[None]},
+            block_mode=False)
+        nxt = int(jnp.argmax(lg[0, -1]))
+        assert nxt == int(res.tokens[0, t]), f"diverged at decode step {t}"
+        seq.append(nxt)
+
+
 def test_recurrent_prefix_reuse():
     cfg = ModelConfig(name="tiny-h", arch_type="hybrid", num_layers=2,
                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,

@@ -306,26 +306,32 @@ class BlockAttentionEngine:
         """Batched requests with equal per-block lengths — the scheduler
         groups by the block-length signature; the store de-duplicates
         shared passages ACROSS rows (the paper's cross-request reuse).
-        """
+
+        The decode cache is allocated ONCE at batch width B; every row is
+        scattered into it by the same single assembly dispatch (the seed
+        built B single-row caches and concatenated them)."""
         assert not self._is_recurrent, "use generate() for recurrent archs"
         B = len(batch_blocks)
         lens = tuple(len(b) for b in batch_blocks[0][:-1])
         final_len = len(batch_blocks[0][-1])
         prefix_len = sum(lens)
         total = prefix_len + final_len
+        # same cache-overflow guard as generate(): past max_seq the scan
+        # decode's clamped writes would silently corrupt the last slot
+        assert total + max_new_tokens <= self.max_seq, \
+            (total, max_new_tokens, self.max_seq)
         t0 = time.perf_counter()
         computed = 0
-        rows = []
+        caches = self._fresh_caches(B)
+        kv_rows = []
         for blocks in batch_blocks:
             assert tuple(len(b) for b in blocks[:-1]) == lens
             assert len(blocks[-1]) == final_len
-            caches_row = self._fresh_caches(1)
             kv_list, c = self._fetch_blocks(blocks[:-1])
             computed += c
-            if lens:
-                caches_row = self._assemble((kv_list,), caches_row, lens=lens)
-            rows.append(caches_row)
-        caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *rows)
+            kv_rows.append(kv_list)
+        if lens:
+            caches = self._assemble(tuple(kv_rows), caches, lens=lens)
         finals = jnp.stack([jnp.asarray(b[-1]) for b in batch_blocks])
         logits, caches, states = self._final_block_pass(
             self.params, finals, caches, jnp.asarray(prefix_len, jnp.int32))

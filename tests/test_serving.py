@@ -114,6 +114,46 @@ def test_batched_serving_matches_single(setup):
         np.concatenate([r.tokens for r in r_single], axis=0))
 
 
+def test_generate_batch_single_cache_allocation(setup):
+    """Regression (fused-assembly PR): the batch path must allocate the
+    decode cache ONCE at width B — no per-row full-size caches, no
+    concatenate — and the assembled tree must look exactly like a fresh
+    width-B cache."""
+    cfg, params, blocks = setup
+    rng = np.random.default_rng(11)
+    other = [rng.integers(5, cfg.vocab_size, 16).astype(np.int32)
+             for _ in range(3)]
+    other.append(rng.integers(5, cfg.vocab_size, 8).astype(np.int32))
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+
+    alloc_widths = []
+    orig_fresh = eng._fresh_caches
+    eng._fresh_caches = lambda b: (alloc_widths.append(b), orig_fresh(b))[1]
+    captured = {}
+    orig_assemble = eng._assemble
+
+    def spy(kv_rows, caches, lens):
+        out = orig_assemble(kv_rows, caches, lens=lens)
+        captured["caches"] = out
+        return out
+
+    eng._assemble = spy
+    r_batch = eng.generate_batch([blocks, other], 3)
+    assert alloc_widths == [2], alloc_widths     # one allocation, width B
+
+    want = orig_fresh(2)
+    assert jax.tree.structure(captured["caches"]) == jax.tree.structure(want)
+    assert jax.tree.map(jnp.shape, captured["caches"]) == \
+        jax.tree.map(jnp.shape, want)
+
+    # values equal to seed behaviour: batch rows == independent requests
+    eng2 = BlockAttentionEngine(params, cfg, max_seq=128)
+    r_single = [eng2.generate(blocks, 3), eng2.generate(other, 3)]
+    np.testing.assert_array_equal(
+        r_batch.tokens,
+        np.concatenate([r.tokens for r in r_single], axis=0))
+
+
 def test_scan_decode_bitwise_matches_python_loop(setup):
     """The fused lax.scan greedy decode must reproduce the seed's
     host-synced Python loop token-for-token."""

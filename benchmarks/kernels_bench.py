@@ -28,10 +28,10 @@ def _time(fn, *args, repeats=3):
     return float(np.median(ts)) * 1e6
 
 
-def run(emit=print):
+def run(emit=print, sizes=None):
     B, H, KV, D = 1, 8, 8, 64
     key = jax.random.PRNGKey(0)
-    for S, nb in [(1024, 8), (4096, 16)]:
+    for S, nb in sizes or [(1024, 8), (4096, 16)]:
         q = jax.random.normal(key, (B, S, H, D), jnp.float32)
         k = jax.random.normal(key, (B, S, KV, D), jnp.float32)
         v = jax.random.normal(key, (B, S, KV, D), jnp.float32)

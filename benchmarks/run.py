@@ -6,11 +6,18 @@
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
 
+``--smoke`` runs every section at tiny lengths with 1 repeat — a CI-speed
+end-to-end exercise of the benchmark harness (also driven by the
+``bench``-marked pytest in tests/test_benchmarks.py).
+
 Prints ``name,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
 
 import argparse
+
+SMOKE_LENGTHS = [50, 178]          # 178 = 2 blocks + query: warm path real
+SMOKE_KERNEL_SIZES = [(256, 4)]
 
 
 def main() -> None:
@@ -20,19 +27,29 @@ def main() -> None:
                     choices=["ttft", "cache", "kernels"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny lengths, 1 repeat (CI-speed harness check)")
+    ap.add_argument("--json", default=None,
+                    help="write the ttft section to this JSON path")
     args = ap.parse_args()
+    if args.smoke:
+        args.lengths = SMOKE_LENGTHS
+        args.repeats = 1
 
     print("name,us_per_call,derived")
     if "ttft" in args.sections:
         from benchmarks import ttft
-        ttft.run(args.lengths, repeats=3,
+        ttft.run(args.lengths, repeats=args.repeats, json_path=args.json,
                  emit=lambda s: None if s.startswith("name,") else print(s))
     if "cache" in args.sections:
         from benchmarks import cache
-        cache.run()
+        cache.run(**({"n_requests": 6, "pool": 6, "passages_per_req": 3}
+                     if args.smoke else {}))
     if "kernels" in args.sections:
         from benchmarks import kernels_bench
-        kernels_bench.run()
+        kernels_bench.run(
+            sizes=SMOKE_KERNEL_SIZES if args.smoke else None)
 
 
 if __name__ == "__main__":

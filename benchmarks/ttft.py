@@ -9,13 +9,17 @@ Wall-clock runs a small-but-real model on CPU; the FLOPs columns are
 analytic (exact mask-area math) for BOTH the CPU model and the paper's 8B
 config — the 8B FLOPs column is directly comparable to Table 3's.
 
-CSV: name,us_per_call,derived
+CSV: name,us_per_call,derived. With ``json_path`` set, the same numbers are
+also written as BENCH_ttft.json — the committed perf-trajectory baseline
+future PRs compare against.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,11 +42,13 @@ def bench_model() -> ModelConfig:
         dtype="float32", param_dtype="float32")
 
 
-def run(total_lengths: List[int], repeats: int = 3, emit=print):
-    cfg = bench_model()
+def run(total_lengths: List[int], repeats: int = 3, emit=print,
+        json_path: Optional[str] = None, cfg: Optional[ModelConfig] = None):
+    cfg = cfg or bench_model()
     params = api.model_init(jax.random.PRNGKey(0), cfg)
     cfg8b = get_config("tulu3-8b")
     rng = np.random.default_rng(0)
+    results = {}
 
     emit("name,us_per_call,derived")
     for total in total_lengths:
@@ -87,6 +93,14 @@ def run(total_lengths: List[int], repeats: int = 3, emit=print):
                               logits_positions=1) \
             + 4 * QUERY_LEN * prefix * cfg8b.num_heads * cfg8b.head_dim \
             * cfg8b.num_layers
+        results[str(total)] = {
+            "ttft_vanilla_us": round(ttft_v),
+            "ttft_block_warm_us": round(ttft_b),
+            "reduction_pct": round(red, 1),
+            "num_blocks": n_blocks,
+            "flops_tft_vanilla": fl_v,
+            "flops_tft_block": fl_b,
+        }
         emit(f"ttft_vanilla_{total},{ttft_v:.0f},")
         emit(f"ttft_block_{total},{ttft_b:.0f},reduction={red:.1f}%")
         emit(f"flops_tft_vanilla_{total},,{fl_v:.3e}")
@@ -96,14 +110,35 @@ def run(total_lengths: List[int], repeats: int = 3, emit=print):
         emit(f"flops_tft_8b_block_{total},,{fl8_b:.3e} "
              f"(reduction={100 * (1 - fl8_b / fl8_v):.1f}%)")
 
+    if json_path:
+        payload = {
+            "benchmark": "ttft",
+            "protocol": {
+                "model": cfg.name, "block_len": BLOCK_LEN,
+                "query_len": QUERY_LEN, "repeats": repeats,
+                "backend": jax.default_backend(),
+                "machine": platform.machine(),
+                "note": "CPU/interpret wall clock; warm = block KV cached "
+                        "(paper footnote-4 protocol)",
+            },
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        emit(f"# wrote {json_path}")
+    return results
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048, 4096])
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default=None,
+                    help="also write results as JSON (e.g. BENCH_ttft.json)")
     args = ap.parse_args()
-    run(args.lengths, args.repeats)
+    run(args.lengths, args.repeats, json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,54 @@
+"""Benchmark harness: smoke mode + BENCH_ttft.json emission.
+
+The subprocess end-to-end run is ``bench``-marked (deselected by default,
+`pytest -m bench` to run); the JSON-contract test uses a micro model so it
+stays tier-1 fast.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.config import ModelConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_ttft_json_contract(tmp_path):
+    """ttft.run writes the BENCH_ttft.json schema future PRs compare on."""
+    from benchmarks import ttft
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=256, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_ttft.json"
+    lines = []
+    res = ttft.run([50, 562], repeats=2, emit=lines.append,
+                   json_path=str(path), cfg=micro)
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "ttft"
+    assert set(res) == {"50", "562"}
+    for row in payload["results"].values():
+        assert {"ttft_vanilla_us", "ttft_block_warm_us",
+                "reduction_pct"} <= set(row)
+    # 562 = 8 cached blocks + 50-token query: warm block TTFT must win
+    assert payload["results"]["562"]["ttft_block_warm_us"] < \
+        payload["results"]["562"]["ttft_vanilla_us"]
+    assert any(line.startswith("ttft_block_562,") for line in lines)
+
+
+@pytest.mark.bench
+def test_run_smoke_mode():
+    """`benchmarks/run.py --smoke` exercises every section end to end."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ttft_block_178," in out.stdout
+    assert "cache_shared_pool_request," in out.stdout
+    assert "attn_block_S256_nb4," in out.stdout

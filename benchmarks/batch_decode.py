@@ -1,0 +1,182 @@
+"""Mixed-shape batched decode throughput (paged per-row batch decode).
+
+The workload the paper's cross-request reuse (Fig. 2, Table 3) actually
+meets in serving: a stream of RAG requests whose retrieved passage sets
+have DIFFERENT length signatures, drawing passages from a shared pool.
+Before the paged batch path, mixed signatures either waited out
+``max_wait_s`` and ran at batch=1 or recompiled per exact signature;
+now the scheduler's padded-length buckets batch them together and the
+engine runs one assembly, one final pass, one decode scan per batch
+(DESIGN.md §5).
+
+Protocol (CPU/interpret wall clock, same machine class as BENCH_ttft):
+the SAME mixed request set is served twice from a warm block store and
+warm jit caches —
+
+  * ``batch1``: one request at a time through ``generate()`` (what exact
+    same-shape grouping degenerates to on ragged traffic);
+  * ``batched``: through ``Scheduler`` buckets + ``generate_batch``.
+
+Reported throughput is end-to-end generated tokens/s (prefill reuse +
+decode). The committed baseline lives in BENCH_batch_decode.json; perf
+PRs compare against it (ROADMAP perf-trajectory item).
+
+CSV: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine, pow2_bucket
+from repro.serving.scheduler import Scheduler
+
+PASSAGE_LENS = (48, 64, 96)     # ragged retrieved-passage lengths
+QUERY_LENS = (28, 40, 50)       # ragged user-input lengths
+
+
+def bench_model() -> ModelConfig:
+    return ModelConfig(
+        name="bench-20m", arch_type="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=8, d_ff=768, vocab_size=4096,
+        dtype="float32", param_dtype="float32")
+
+
+def make_traffic(rng, n_requests: int, pool_size: int,
+                 passages_per_req: int,
+                 passage_lens=PASSAGE_LENS, query_lens=QUERY_LENS,
+                 vocab: int = 4096):
+    """Mixed-signature requests over a shared passage pool."""
+    pool = [rng.integers(5, vocab, int(passage_lens[i % len(passage_lens)]))
+            .astype(np.int32) for i in range(pool_size)]
+    reqs = []
+    for r in range(n_requests):
+        n = max(passages_per_req - r % 2, 1)
+        idx = rng.choice(pool_size, n, replace=False)
+        blocks = [pool[i] for i in idx]
+        blocks.append(rng.integers(5, vocab,
+                                   int(query_lens[r % len(query_lens)]))
+                      .astype(np.int32))
+        reqs.append(blocks)
+    return reqs
+
+
+def _serve_batched(engine, reqs, max_batch: int, max_new: int):
+    sched = Scheduler(max_batch=max_batch, max_wait_s=0.0)
+    for blocks in reqs:
+        sched.submit(blocks, max_new)
+    batches = 0
+    while sched.pending():
+        batch = sched.next_batch()
+        engine.generate_batch([r.blocks for r in batch.requests], max_new)
+        batches += 1
+    return batches
+
+
+def _serve_batch1(engine, reqs, max_new: int):
+    for blocks in reqs:
+        engine.generate(blocks, max_new)
+
+
+def run(n_requests: int = 12, pool_size: int = 8, passages_per_req: int = 3,
+        max_batch: int = 4, max_new: int = 16, repeats: int = 3,
+        emit=print, json_path: Optional[str] = None,
+        cfg: Optional[ModelConfig] = None,
+        passage_lens=PASSAGE_LENS, query_lens=QUERY_LENS):
+    cfg = cfg or bench_model()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = make_traffic(rng, n_requests, pool_size, passages_per_req,
+                        passage_lens, query_lens, vocab=cfg.vocab_size)
+    max_prefix = max(sum(len(b) for b in blocks[:-1]) for blocks in reqs)
+    max_final = max(len(blocks[-1]) for blocks in reqs)
+    max_seq = pow2_bucket(max_prefix) + pow2_bucket(max_final) + max_new + 8
+    engine = BlockAttentionEngine(params, cfg, max_seq=max_seq)
+
+    # warm: fill the block store and compile every bucket + the batch=1 path
+    _serve_batch1(engine, reqs, max_new)
+    n_batches = _serve_batched(engine, reqs, max_batch, max_new)
+
+    tokens_total = n_requests * max_new
+    t1 = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _serve_batch1(engine, reqs, max_new)
+        t1.append(time.perf_counter() - t0)
+    tb = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _serve_batched(engine, reqs, max_batch, max_new)
+        tb.append(time.perf_counter() - t0)
+
+    s1 = float(np.median(t1))
+    sb = float(np.median(tb))
+    tps1 = tokens_total / s1
+    tpsb = tokens_total / sb
+    results = {
+        "requests": n_requests,
+        "signatures": len({tuple(len(b) for b in blocks)
+                           for blocks in reqs}),
+        "batches": n_batches,
+        "max_batch": max_batch,
+        "max_new_tokens": max_new,
+        "batch1_tokens_per_s": round(tps1, 2),
+        "batched_tokens_per_s": round(tpsb, 2),
+        "speedup": round(tpsb / tps1, 3),
+        "batch1_wall_s": round(s1, 4),
+        "batched_wall_s": round(sb, 4),
+    }
+    emit(f"batch_decode_batch1,{s1 * 1e6 / n_requests:.0f},"
+         f"{tps1:.1f} tok/s")
+    emit(f"batch_decode_mixed,{sb * 1e6 / n_requests:.0f},"
+         f"{tpsb:.1f} tok/s (speedup={tpsb / tps1:.2f}x, "
+         f"{n_batches} batches over "
+         f"{results['signatures']} signatures)")
+
+    if json_path:
+        payload = {
+            "benchmark": "batch_decode",
+            "protocol": {
+                "model": cfg.name, "passage_lens": list(passage_lens),
+                "query_lens": list(query_lens),
+                "passages_per_req": passages_per_req,
+                "pool_size": pool_size, "repeats": repeats,
+                "backend": jax.default_backend(),
+                "machine": platform.machine(),
+                "note": "CPU/interpret wall clock; warm store + warm jit; "
+                        "same mixed-signature traffic both ways",
+            },
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        emit(f"# wrote {json_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--pool", type=int, default=8)
+    ap.add_argument("--passages", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default=None,
+                    help="write results (e.g. BENCH_batch_decode.json)")
+    args = ap.parse_args()
+    run(args.requests, args.pool, args.passages, args.batch,
+        args.max_new_tokens, args.repeats, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

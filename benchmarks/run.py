@@ -3,6 +3,7 @@
   Table 3  -> ttft (TTFT + FLOPs-TFT vs total length)
   §2.5     -> cache (hit rate / reuse / eviction)
   Fig. 1   -> kernels_bench (block vs full attention geometry)
+  Fig. 2 serving -> batch_decode (mixed-shape batched vs batch=1 tokens/s)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
 
@@ -23,8 +24,8 @@ SMOKE_KERNEL_SIZES = [(256, 4)]
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
-                    default=["ttft", "cache", "kernels"],
-                    choices=["ttft", "cache", "kernels"])
+                    default=["ttft", "cache", "kernels", "batch"],
+                    choices=["ttft", "cache", "kernels", "batch"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -50,6 +51,13 @@ def main() -> None:
         from benchmarks import kernels_bench
         kernels_bench.run(
             sizes=SMOKE_KERNEL_SIZES if args.smoke else None)
+    if "batch" in args.sections:
+        from benchmarks import batch_decode
+        batch_decode.run(**({"n_requests": 6, "pool_size": 4,
+                             "passages_per_req": 2, "max_new": 4,
+                             "repeats": 1, "passage_lens": (16, 24),
+                             "query_lens": (8, 12)}
+                            if args.smoke else {}))
 
 
 if __name__ == "__main__":

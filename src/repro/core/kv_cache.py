@@ -48,12 +48,21 @@ class DecodeKVCache(NamedTuple):
 def cache_update(cache_k, cache_v, k_new, v_new, start):
     """Write (B, S_new, KV, D) into per-layer cache slabs at ``start``.
 
-    ``start`` is a scalar (all batch rows aligned — the engine pads to a
-    common length, which is also what keeps this jit-static-friendly).
+    ``start`` is either a scalar (all batch rows aligned — the legacy
+    shared-length batch) or a (B,) int32 vector (paged per-row batch
+    decode, DESIGN.md §5): row ``b`` lands at its OWN ``start[b]`` via a
+    batched per-row scatter — one fused update, no host loop.
     """
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, start, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, start, axis=1)
-    return cache_k, cache_v
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, start,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, start,
+                                                      axis=1)
+        return cache_k, cache_v
+    row_write = jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0))
+    return row_write(cache_k, k_new, start), row_write(cache_v, v_new, start)
 
 
 def cache_write_prefix(cache_k, cache_v, k_new, v_new):

@@ -4,7 +4,9 @@
                     tile skipping) + ``flash_block_ragged`` (ONE launch for
                     variable-length blocks via a scalar-prefetched
                     block-boundary map — DESIGN.md §1)
-  decode_attention — single-token flash decode over the KV cache
+  decode_attention — single-token flash decode over the KV cache with a
+                    per-row length vector: ragged batches skip tiles past
+                    each row's own valid length (DESIGN.md §5)
   rope_shift      — fused position re-encoding of cached keys (paper Eq. 3)
                     with a ragged per-row delta vector (one launch per
                     fetched block set — DESIGN.md §2)

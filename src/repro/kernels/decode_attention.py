@@ -1,9 +1,19 @@
 """Pallas TPU kernel: single-step (decode) flash attention over a KV cache.
 
-One new token per sequence attends ``cache_len`` cached KV entries.
+One new token per sequence attends its row's valid cache prefix.
 Grid: (B*KV, num_kv_tiles) with the KV axis sequential; scratch accumulators
-carry the online softmax. The dynamic valid length arrives as a scalar-ish
-(1,1) int32 operand (portable across interpret/TPU without scalar prefetch).
+carry the online softmax. The dynamic valid length arrives as a **per-row**
+(N,) int32 scalar-prefetched operand, used twice:
+
+  * the k/v ``index_map`` clamps tiles past the row's length (and below its
+    window) to the nearest live tile — an already-resident block, so the
+    TPU pipeline elides the DMA and the HBM cache stream scales with
+    ``Σ_b cache_len_b``, not ``B · max_len`` (the paged per-row
+    batch-decode contract, DESIGN.md §5);
+  * ``pl.when`` skips the MXU/VPU work of those dead grid steps.
+
+A scalar / (1,)-shaped operand broadcasts to all rows (the legacy shared
+-length form).
 
 An optional sliding ``window`` restricts attention to the trailing positions —
 the long_500k dense-arch variant.
@@ -28,9 +38,10 @@ DEFAULT_TK = 512
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                    *, scale: float, tk: int, window: int, softcap: float):
+    n = pl.program_id(0)
     j = pl.program_id(1)
     nkv = pl.num_programs(1)
-    cache_len = len_ref[0, 0]               # tokens valid in cache (incl. new)
+    cache_len = len_ref[n]          # THIS row's valid length (incl. new token)
 
     @pl.when(j == 0)
     def _init():
@@ -39,6 +50,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     lo = jnp.maximum(cache_len - window, 0) if window else 0
+    # per-row grid sparsity: dead tiles do no MXU work (their k/v DMAs were
+    # already elided by the clamped index_map below)
     live = (j * tk < cache_len) & ((j + 1) * tk > lo)
 
     @pl.when(live)
@@ -75,7 +88,8 @@ def flash_decode(
     q: jax.Array,            # (N, G, D)  N = batch * kv_heads
     k_cache: jax.Array,      # (N, Skv, D)
     v_cache: jax.Array,      # (N, Skv, D)
-    cache_len: jax.Array,    # (1, 1) int32 — valid length incl. the new token
+    cache_len: jax.Array,    # (N,) int32 per-row valid length incl. the new
+                             # token; scalar-ish shapes broadcast to all rows
     *,
     scale: float,
     window: int = 0,
@@ -86,27 +100,44 @@ def flash_decode(
     N, G, D = q.shape
     Skv = k_cache.shape[1]
     tk = min(tk, Skv)
+    # ops.decode_attention pads the cache view to a tile multiple; direct
+    # callers with an odd Skv must do the same (padded tail is masked dead).
     assert Skv % tk == 0, (Skv, tk)
+    cache_len = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (N,))
     grid = (N, Skv // tk)
     kernel = functools.partial(_decode_kernel, scale=scale, tk=tk,
                                window=window, softcap=softcap)
-    return pl.pallas_call(
-        kernel,
+
+    def kv_index(n, j, lens):
+        # clamp dead tiles onto the nearest live one: the block is already
+        # resident, so the pipeline skips the copy — per-row HBM sparsity
+        last = jnp.maximum(jax.lax.div(lens[n] - 1, tk), 0)
+        jj = jnp.minimum(j, last)
+        if window:
+            lo_tile = jnp.maximum(lens[n] - window, 0) // tk
+            jj = jnp.maximum(jj, jnp.minimum(lo_tile, last))
+        return (n, jj, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda n, j: (0, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, G, D), lambda n, j: (n, 0, 0)),
-            pl.BlockSpec((1, tk, D), lambda n, j: (n, j, 0)),
-            pl.BlockSpec((1, tk, D), lambda n, j: (n, j, 0)),
+            pl.BlockSpec((1, G, D), lambda n, j, lens: (n, 0, 0)),
+            pl.BlockSpec((1, tk, D), kv_index),
+            pl.BlockSpec((1, tk, D), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, G, D), lambda n, j: (n, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, G, D), q.dtype),
+        out_specs=pl.BlockSpec((1, G, D), lambda n, j, lens: (n, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G, D), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, G, D), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

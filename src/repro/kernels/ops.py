@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.block_attention import flash_block_ragged, flash_causal
+from repro.kernels.decode_attention import DEFAULT_TK as DEFAULT_DECODE_TK
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.rope_shift import rope_shift
 
@@ -175,15 +176,24 @@ def causal_attention(q, k, v, scale: float, q_offset: int = 0,
 def decode_attention(q, k_cache, v_cache, cache_len, scale: float,
                      window: int = 0, softcap: float = 0.0,
                      interpret: bool = INTERPRET):
-    """Single-token decode. q (B,1,H,D); cache_len scalar int32 (incl. new)."""
+    """Single-token decode. q (B,1,H,D); cache_len int32 incl. the new token —
+    a scalar (shared length) or a (B,) per-row vector (paged ragged batch)."""
     B, _, H, D = q.shape
-    KV = k_cache.shape[2]
+    Skv, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     qf = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
-    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, -1, D)
-    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, -1, D)
-    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (1, 1))
-    o = flash_decode(qf, kf, vf, cl, scale=scale, window=window,
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, Skv, D)
+    tk = min(DEFAULT_DECODE_TK, Skv)
+    pad = (-Skv) % tk
+    if pad:   # odd max_seq: pad the cache view to a tile multiple — the
+        kf = _pad_seq(kf, Skv + pad)      # padded tail sits past every row's
+        vf = _pad_seq(vf, Skv + pad)      # cache_len, so it is masked dead
+    # per-row length vector: row b's KV-head rows all mask at cache_len[b]
+    cl = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (B,))
+    cl = jnp.repeat(cl, KV)                                  # (B*KV,)
+    o = flash_decode(qf, kf, vf, cl, scale=scale, window=window, tk=tk,
                      softcap=softcap, interpret=interpret)
     return o.reshape(B, KV, G, D).reshape(B, 1, H, D)
 

@@ -20,14 +20,23 @@ from repro.serving.scheduler import Scheduler
 
 
 def make_request_stream(rng, num_requests, passages_per_req, passage_len,
-                        query_len, shared_pool, vocab):
-    """Requests draw passages from a shared pool — the RAG reuse pattern."""
-    pool = [rng.integers(5, vocab, passage_len).astype(np.int32)
-            for _ in range(shared_pool)]
-    for _ in range(num_requests):
-        idx = rng.choice(shared_pool, passages_per_req, replace=False)
+                        query_len, shared_pool, vocab, mixed=False):
+    """Requests draw passages from a shared pool — the RAG reuse pattern.
+
+    ``mixed`` draws ragged passage/query lengths (real RAG traffic): the
+    scheduler's padded-length buckets and the engine's paged per-row batch
+    decode then batch the differing signatures together (DESIGN.md §5).
+    """
+    plens = ([max(passage_len // 2, 1), passage_len,
+              passage_len + passage_len // 2] if mixed else [passage_len])
+    pool = [rng.integers(5, vocab, int(plens[i % len(plens)]))
+            .astype(np.int32) for i in range(shared_pool)]
+    for r in range(num_requests):
+        n = passages_per_req - (r % 2 if mixed else 0)
+        idx = rng.choice(shared_pool, max(n, 1), replace=False)
         blocks = [pool[i] for i in idx]
-        blocks.append(rng.integers(5, vocab, query_len).astype(np.int32))
+        qlen = query_len - (r % 3 if mixed else 0)
+        blocks.append(rng.integers(5, vocab, max(qlen, 1)).astype(np.int32))
         yield blocks
 
 
@@ -42,12 +51,24 @@ def main():
     ap.add_argument("--shared-pool", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--mixed", action="store_true",
+                    help="ragged passage/query lengths (paged batch path)")
+    ap.add_argument("--pad-batch", action="store_true",
+                    help="pad partial bucket flushes up to --batch width so "
+                         "every batch hits the one full-width compile per "
+                         "bucket (costs duplicated-row compute; worth it "
+                         "when compile stalls dominate, e.g. on TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params = api.model_init(jax.random.PRNGKey(args.seed), cfg)
-    max_seq = (args.passages * args.passage_len + args.query_len
+    # +passage_len//2 headroom: mixed traffic draws up to 1.5x passages, and
+    # the paged engine pads prefixes/finals up to the next power of two
+    from repro.serving.scheduler import pow2_bucket
+    max_prefix = args.passages * (args.passage_len + args.passage_len // 2
+                                  if args.mixed else args.passage_len)
+    max_seq = (pow2_bucket(max_prefix) + pow2_bucket(args.query_len)
                + args.max_new_tokens + 8)
     engine = BlockAttentionEngine(params, cfg, max_seq=max_seq)
     sched = Scheduler(max_batch=args.batch)
@@ -55,7 +76,7 @@ def main():
     rng = np.random.default_rng(args.seed)
     stream = list(make_request_stream(
         rng, args.requests, args.passages, args.passage_len,
-        args.query_len, args.shared_pool, cfg.vocab_size))
+        args.query_len, args.shared_pool, cfg.vocab_size, mixed=args.mixed))
     for blocks in stream:
         sched.submit(blocks, args.max_new_tokens)
 
@@ -66,20 +87,27 @@ def main():
         batch = sched.next_batch()
         if batch is None:
             break
-        if use_batched and len(batch.requests) > 1:
-            res = engine.generate_batch(
-                [r.blocks for r in batch.requests], args.max_new_tokens)
+        if use_batched:
+            # singletons too: generate_batch's bucket-padded shapes reuse
+            # the bucket compile, where generate() would jit-specialise on
+            # the exact signature (one compile per distinct shape)
+            results = [(len(batch.requests), engine.generate_batch(
+                [r.blocks for r in batch.requests], args.max_new_tokens,
+                pad_batch_to=args.batch if args.pad_batch else 0))]
         else:
-            res = engine.generate(batch.requests[0].blocks,
-                                  args.max_new_tokens)
+            # recurrent archs have no batched path: serve EVERY request of
+            # the bucket individually (prefix-granular reuse still applies)
+            results = [(1, engine.generate(r.blocks, args.max_new_tokens))
+                       for r in batch.requests]
         done += len(batch.requests)
-        print(json.dumps({
-            "batch": len(batch.requests), "ttft_s": round(res.ttft_s, 4),
-            "computed_tokens": res.prefill_tokens_computed,
-            "total_tokens": res.prefill_tokens_total,
-            "reuse_frac": round(1 - res.prefill_tokens_computed
-                                / max(res.prefill_tokens_total, 1), 3),
-        }), flush=True)
+        for bsz, res in results:
+            print(json.dumps({
+                "batch": bsz, "ttft_s": round(res.ttft_s, 4),
+                "computed_tokens": res.prefill_tokens_computed,
+                "total_tokens": res.prefill_tokens_total,
+                "reuse_frac": round(1 - res.prefill_tokens_computed
+                                    / max(res.prefill_tokens_total, 1), 3),
+            }), flush=True)
     wall = time.perf_counter() - t0
     print(json.dumps({
         "requests": done, "wall_s": round(wall, 2),

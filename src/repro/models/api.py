@@ -136,7 +136,9 @@ def decode_step(
 ) -> Tuple[jax.Array, dict, dict]:
     """One serve step: tokens (B, T) -> (logits (B,T,V), caches, states).
 
-    ``cache_len``: scalar int32, tokens already in the cache (write offset).
+    ``cache_len``: int32 tokens already in the cache (write offset) — a
+    scalar (all rows aligned) or a (B,) per-row vector (paged ragged batch:
+    row ``b`` writes at ``cache_len[b]`` and attends ``[0, cache_len[b]]``).
     """
     if cfg.arch_type == "audio":
         logits, cache = encdec.decode_step(
@@ -144,7 +146,9 @@ def decode_step(
         return logits, cache, {}
 
     B, Tq = tokens.shape
-    positions = cache_len + jnp.arange(Tq, dtype=jnp.int32)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    positions = (jnp.reshape(cache_len, (-1, 1))
+                 + jnp.arange(Tq, dtype=jnp.int32)[None, :])
     positions = jnp.broadcast_to(positions, (B, Tq))
     ctx = T.AttnCtx(kind="decode", positions=positions, cache_len=cache_len)
     h = T.embed_tokens(params, cfg, tokens)

@@ -152,7 +152,8 @@ class AttnCtx:
     positions: jax.Array                      # (B, S)
     layout: Optional[BlockLayout] = None      # mask kind: block ids
     num_blocks: int = 0                       # blockwise kind (0 = causal full)
-    cache_len: Optional[jax.Array] = None     # decode: scalar — len before write
+    cache_len: Optional[jax.Array] = None     # decode: len before write —
+                                              # scalar or (B,) per-row (paged)
     kv_chunk: int = 512
     collect_kv: bool = False                  # prefill: return per-layer KV
     use_block_mask: bool = True               # False -> plain causal (full mode)

@@ -15,12 +15,24 @@ Per request:
 
 The warm path therefore costs three device dispatches per request —
 assembly, final-block pass, decode scan — independent of block count,
-layer count, and token count. The seed spent O(blocks × layer-groups)
-dispatches in assembly and O(tokens) in decode; see BENCH_ttft.json for
-the measured delta. The assembly rope runs as vectorised jnp inside the
-one jitted call; the numerically equivalent batched ``rope_shift``
-kernel (ragged per-block delta operand, ``ops.reencode_blocks_kv``) is
-validated but not yet wired in here — see ROADMAP open items.
+layer count, and token count.
+
+Batched serving is **paged per-row** (DESIGN.md §5): ``generate_batch``
+accepts requests with *different* block-length signatures in one call.
+Every stage is per-row-length aware — a ``(B,)`` ``cache_len`` vector
+drives per-row cache scatters, per-row attention masks and per-row
+first-token extraction — and shapes are padded to power-of-two buckets
+so each traffic bucket compiles ONCE ever instead of once per exact
+signature. (The model decode path uses the dense jnp
+``core.attention.decode_attention``; ``kernels.flash_decode`` is its
+TPU kernel twin honouring the same per-row contract with per-row tile
+skipping, parity-tested but not dispatched from the model layers.)
+
+On TPU the assembly rope runs as the batched ``rope_shift`` kernel
+(``ops.reencode_blocks_kv``, ragged per-block delta operand); on
+CPU/interpret the numerically equivalent vectorised jnp rope inside the
+same jitted call is faster. ``rope_backend`` selects ("auto" picks by
+``jax.default_backend()``; the REPRO_ASSEMBLE_ROPE env var overrides).
 
 Recurrent/hybrid archs (zamba2, xlstm) get *prefix*-granular reuse instead
 (DESIGN.md §4): the full-prefix recurrent state is cached by prefix hash.
@@ -32,8 +44,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
-from typing import Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +55,11 @@ import numpy as np
 from repro.core.config import ModelConfig
 from repro.core.kv_cache import BlockKVStore, cache_write_prefix
 from repro.core.rope import apply_rope
+from repro.kernels import ops
 from repro.models import api, transformer as T
+# single source of truth: the scheduler's bucket key and the engine's
+# padded shapes MUST round identically for bucket == compile-key to hold
+from repro.serving.scheduler import pow2_bucket
 
 
 @dataclasses.dataclass
@@ -59,7 +76,8 @@ class BlockAttentionEngine:
                  max_seq: int = 4096,
                  store_budget_bytes: int = 4 << 30,
                  dtype=jnp.float32,
-                 reencode_positions: bool = True):
+                 reencode_positions: bool = True,
+                 rope_backend: str = "auto"):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
@@ -71,6 +89,16 @@ class BlockAttentionEngine:
         self.prefix_store = BlockKVStore(store_budget_bytes,
                                          model_tag=cfg.name + "/prefix")
         self._is_recurrent = cfg.is_recurrent()
+        if rope_backend == "auto":
+            # env only replaces the default — an explicit argument wins
+            rope_backend = os.environ.get("REPRO_ASSEMBLE_ROPE", "auto")
+        if rope_backend == "auto":
+            rope_backend = ("kernel" if jax.default_backend() == "tpu"
+                            else "jnp")
+        assert rope_backend in ("kernel", "jnp"), rope_backend
+        # the rope_shift kernel only exists for rotary archs
+        self._rope_kernel = (rope_backend == "kernel" and cfg.use_rope
+                             and cfg.rotary_dim > 0)
 
         # ---- jitted model entry points -------------------------------
         @functools.partial(jax.jit, static_argnames=())
@@ -83,17 +111,30 @@ class BlockAttentionEngine:
             return collected
 
         @jax.jit
-        def _final_block_pass(params, tokens, caches, cache_len):
+        def _final_block_pass(params, tokens, caches, cache_len, last_idx):
+            """Final (query) block through the model in cache-filling mode.
+
+            ``cache_len``: (B,) per-row prefix lengths (row b's query tokens
+            sit at positions cache_len[b] + t and are written there);
+            ``last_idx``: (B,) index of each row's TRUE last query token —
+            right-padded final blocks gather their first-token logits from
+            there, not from the padded tail.
+            """
             B, Tq = tokens.shape
-            positions = cache_len + jnp.arange(Tq, dtype=jnp.int32)
-            positions = jnp.broadcast_to(positions, (B, Tq))
+            cache_len = jnp.broadcast_to(
+                jnp.asarray(cache_len, jnp.int32), (B,))
+            positions = (cache_len[:, None]
+                         + jnp.arange(Tq, dtype=jnp.int32)[None, :])
             ctx = T.AttnCtx(kind="decode", positions=positions,
                             cache_len=cache_len)
             h = T.embed_tokens(params, cfg, tokens)
             h, _, new_caches, new_states, _ = T.forward_hidden(
                 params, cfg, h, ctx, caches=caches,
                 states=self._fresh_states(B) if self._is_recurrent else {})
-            logits = T.logits_from_hidden(params, cfg, h[:, -1:])
+            h_last = jnp.take_along_axis(
+                h, jnp.reshape(jnp.asarray(last_idx, jnp.int32), (B, 1, 1)),
+                axis=1)
+            logits = T.logits_from_hidden(params, cfg, h_last)
             return logits, new_caches, new_states
 
         @jax.jit
@@ -113,34 +154,57 @@ class BlockAttentionEngine:
 
         @functools.partial(jax.jit, static_argnames=("lens",))
         def _assemble(kv_rows, caches, lens):
-            """Single-dispatch KV assembly (tentpole path).
+            """Single-dispatch KV assembly, shared static signature.
 
             kv_rows: per batch row, the tuple of fetched zero-based block
             KV pytrees {pos: {"k","v": (G, L_b, KV, D)}}; ``lens`` is the
-            static per-block length tuple (shared across rows — the
-            scheduler groups by it). For every cache position: concatenate
-            blocks, rotate keys by the per-block delta vector (Eq. 3,
-            expanded per token at trace time since lens are static), and
-            write all rows/groups with one fused cache update. Everything
-            below is ONE XLA computation — zero per-block or per-layer
-            Python dispatch on the warm path.
+            static per-block length tuple (shared across rows). For every
+            cache position: concatenate blocks, rotate keys by the
+            per-block delta vector (Eq. 3), and write all rows/groups with
+            one fused cache update. Everything below is ONE XLA
+            computation — zero per-block or per-layer Python dispatch on
+            the warm path. The Eq.-3 rotation is either the batched
+            ``rope_shift`` kernel (TPU: one launch for the whole fetched
+            block set) or the equivalent vectorised jnp rope (CPU).
             """
+            B = len(kv_rows)
+            nb = len(lens)
             starts = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
             # per-token delta vector: token t of block b shifts by starts[b]
             pos_vec = jnp.asarray(np.repeat(starts[:-1], lens), jnp.int32)
+            use_kernel = self.reencode and self._rope_kernel
+            if use_kernel:
+                L_max = int(max(lens))
+                deltas = jnp.asarray(np.tile(starts[:-1], B), jnp.int32)
             out = dict(caches)
             for pos_key in kv_rows[0][0]:
                 knew, vnew = [], []
-                for row in kv_rows:
-                    kcat = jnp.concatenate(
-                        [blk[pos_key]["k"] for blk in row], axis=1)
+                if use_kernel:
+                    # pad blocks to L_max and stack (rows x blocks) into the
+                    # kernel's batch axis: ONE rope_shift launch re-encodes
+                    # every fetched block at its own delta (ragged operand)
+                    stacked = jnp.stack(
+                        [jnp.pad(blk[pos_key]["k"],
+                                 ((0, 0), (0, L_max - blk[pos_key]["k"]
+                                           .shape[1]), (0, 0), (0, 0)))
+                         for row in kv_rows for blk in row])
+                    rot = ops.reencode_blocks_kv(
+                        stacked, deltas, rotary_dim=cfg.rotary_dim,
+                        theta=cfg.rope_theta,
+                        interleaved=cfg.rope_interleaved)
+                for r, row in enumerate(kv_rows):
+                    if use_kernel:
+                        kcat = jnp.concatenate(
+                            [rot[r * nb + b][:, :lens[b]]
+                             for b in range(nb)], axis=1)
+                    else:
+                        kcat = jnp.concatenate(
+                            [blk[pos_key]["k"] for blk in row], axis=1)
+                        if self.reencode:
+                            # paper Eq. 3 — additive RoPE composition
+                            kcat = apply_rope(kcat, pos_vec, cfg)
                     vcat = jnp.concatenate(
                         [blk[pos_key]["v"] for blk in row], axis=1)
-                    if self.reencode:
-                        # paper Eq. 3 — additive RoPE composition
-                        # (ops.reencode_blocks_kv is the kernel twin of
-                        # this step, not yet wired in: ROADMAP open item)
-                        kcat = apply_rope(kcat, pos_vec, cfg)
                     knew.append(kcat)
                     vnew.append(vcat)
                 knew = jnp.stack(knew, axis=1).astype(self.dtype)
@@ -150,16 +214,46 @@ class BlockAttentionEngine:
                 out[pos_key] = {"k": ck, "v": cv}
             return out
 
+        @jax.jit
+        def _assemble_paged(flat, caches, idx, pos_vec, valid):
+            """Paged KV assembly for MIXED-shape batches (DESIGN.md §5).
+
+            flat: {pos: {"k","v": (G, S_flat, KV, D)}} — every fetched
+            block of every row concatenated end to end (+ zero tail to the
+            bucket size S_flat = B * P_pad); idx (B, P_pad) gathers each
+            row's tokens back out of the flat stream; pos_vec (B, P_pad)
+            carries each token's Eq.-3 delta (its block's start offset in
+            its row's prompt); valid (B, P_pad) masks the right-padding
+            dead. Gather -> mask -> rope -> fused cache scatter is ONE XLA
+            computation whose compile key is the (B, P_pad) bucket — NOT
+            the exact ragged signature, so mixed traffic shapes share one
+            compile per bucket.
+            """
+            out = dict(caches)
+            m = valid[None, :, :, None, None]
+            for pos_key, kv in flat.items():
+                k = jnp.where(m, kv["k"][:, idx], 0)   # (G, B, P_pad, KV, D)
+                v = jnp.where(m, kv["v"][:, idx], 0)
+                if self.reencode:
+                    k = apply_rope(k, pos_vec, cfg)
+                ck, cv = cache_write_prefix(
+                    out[pos_key]["k"], out[pos_key]["v"],
+                    k.astype(self.dtype), v.astype(self.dtype))
+                out[pos_key] = {"k": ck, "v": cv}
+            return out
+
         @functools.partial(jax.jit, static_argnames=("steps",))
         def _decode_scan(params, first, caches, states, start_len, steps):
             """Greedy decode as ONE on-device scan: feeds back the argmax
             without a host round trip, returns all tokens at once.
 
-            ``start_len`` bookkeeping: when step i runs, the cache holds
-            ``start_len + i`` tokens; decode_step writes the incoming token
-            at index start_len + i (== its position) and attends
-            [0, start_len + i] inclusive — see DESIGN.md §3 for the
-            cache_len conventions audit.
+            ``start_len`` bookkeeping: a (B,) per-row vector — when step i
+            runs, row b's cache holds ``start_len[b] + i`` tokens;
+            decode_step writes row b's incoming token at index
+            start_len[b] + i (== its position) and attends
+            [0, start_len[b] + i] inclusive — see DESIGN.md §3/§5 for the
+            cache_len conventions audit. A scalar start_len is the aligned
+            special case.
             """
             def body(carry, i):
                 cur, caches, states = carry
@@ -176,6 +270,7 @@ class BlockAttentionEngine:
         self._final_block_pass = _final_block_pass
         self._full_prefix_pass = _full_prefix_pass
         self._assemble = _assemble
+        self._assemble_paged = _assemble_paged
         self._decode_scan = _decode_scan
 
     # ------------------------------------------------------------------
@@ -215,9 +310,58 @@ class BlockAttentionEngine:
             kv_list.append(kv)
         return tuple(kv_list), computed
 
-    def _decode_tokens(self, first, caches, states, pos: int,
+    def _flatten_rows(self, kv_rows, prefix_lens: List[List[int]],
+                      P_pad: int):
+        """Ragged rows -> the paged assembly operands.
+
+        Concatenates every fetched block of every row end to end into one
+        flat KV stream per cache position (ONE device concat per slab —
+        physical block shapes are ragged, so this is the only per-batch
+        shape-specialised op; its compile is a single XLA concatenate) and
+        builds the host-side gather indices / Eq.-3 delta vector / valid
+        mask that let the bucket-compiled ``_assemble_paged`` pack rows
+        back out at fixed (B, P_pad) shapes.
+        """
+        B = len(kv_rows)
+        S_flat = B * P_pad
+        row_starts = np.zeros(B + 1, np.int64)
+        for r, ls in enumerate(prefix_lens):
+            row_starts[r + 1] = row_starts[r] + sum(ls)
+        total = int(row_starts[-1])
+
+        idx = np.zeros((B, P_pad), np.int32)
+        pos_vec = np.zeros((B, P_pad), np.int32)
+        valid = np.zeros((B, P_pad), bool)
+        for r, ls in enumerate(prefix_lens):
+            P_r = sum(ls)
+            idx[r, :P_r] = row_starts[r] + np.arange(P_r)
+            starts = np.concatenate([[0], np.cumsum(ls)]).astype(np.int32)
+            if P_r:
+                pos_vec[r, :P_r] = np.repeat(starts[:-1], ls)
+            valid[r, :P_r] = True
+
+        template = next(row[0] for row in kv_rows if row)
+        flat = {}
+        for pos_key in template:
+            parts_k = [blk[pos_key]["k"] for row in kv_rows for blk in row]
+            parts_v = [blk[pos_key]["v"] for row in kv_rows for blk in row]
+            G, _, KV, D = parts_k[0].shape
+            if total < S_flat:
+                tail = jnp.zeros((G, S_flat - total, KV, D),
+                                 parts_k[0].dtype)
+                parts_k.append(tail)
+                parts_v.append(tail)
+            flat[pos_key] = {"k": jnp.concatenate(parts_k, axis=1),
+                             "v": jnp.concatenate(parts_v, axis=1)}
+        return (flat, jnp.asarray(idx), jnp.asarray(pos_vec),
+                jnp.asarray(valid))
+
+    def _decode_tokens(self, first, caches, states, pos,
                        max_new_tokens: int) -> np.ndarray:
-        """first token(s) (B,) + one fused scan for the rest -> (B, T)."""
+        """first token(s) (B,) + one fused scan for the rest -> (B, T).
+
+        ``pos``: tokens already in the cache per row — int or (B,) array.
+        """
         first = jnp.asarray(first, jnp.int32)
         if max_new_tokens <= 1:
             return np.asarray(first)[:, None]
@@ -247,7 +391,9 @@ class BlockAttentionEngine:
             offset = sum(lens)
         final = jnp.asarray(blocks[-1])[None, :]
         logits, caches, states = self._final_block_pass(
-            self.params, final, caches, jnp.asarray(offset, jnp.int32))
+            self.params, final, caches,
+            jnp.full((1,), offset, jnp.int32),
+            jnp.full((1,), len(blocks[-1]) - 1, jnp.int32))
         first = int(jnp.argmax(logits[0, -1]))
         ttft = time.perf_counter() - t0
 
@@ -301,40 +447,125 @@ class BlockAttentionEngine:
     # ------------------------------------------------------------------
     # Batched serving (scheduler path)
     # ------------------------------------------------------------------
-    def generate_batch(self, batch_blocks: Sequence[Sequence[np.ndarray]],
-                       max_new_tokens: int = 8) -> GenerationResult:
-        """Batched requests with equal per-block lengths — the scheduler
-        groups by the block-length signature; the store de-duplicates
-        shared passages ACROSS rows (the paper's cross-request reuse).
+    def _shared_final_pad(self, max_prefix: int, max_final: int) -> int:
+        """Shared right-padded final-block width for a group of rows:
+        pow2-bucketed, dropping to the minimal width when the pow2 padding
+        would overflow max_seq (tight fit — costs one extra compile)."""
+        F_pad = pow2_bucket(max_final)
+        if max_prefix + F_pad > self.max_seq:
+            F_pad = max_final
+        return F_pad
 
-        The decode cache is allocated ONCE at batch width B; every row is
-        scattered into it by the same single assembly dispatch (the seed
-        built B single-row caches and concatenated them)."""
+    def _coservable_groups(self, P: np.ndarray, F: np.ndarray):
+        """Order-preserving greedy partition into groups whose max prefix
+        plus shared padded final width fits max_seq. Normal traffic stays
+        one group; only tight-fit mixes near max_seq (a long-prefix row
+        batched with another row's long final) split — each request
+        individually satisfies total + max_new <= max_seq, so singleton
+        groups always fit."""
+        groups, cur = [], []
+        for r in range(len(P)):
+            cand = cur + [r]
+            mp = int(P[cand].max())
+            if cur and mp + self._shared_final_pad(
+                    mp, int(F[cand].max())) > self.max_seq:
+                groups.append(cur)
+                cur = [r]
+            else:
+                cur = cand
+        groups.append(cur)
+        return groups
+
+    def generate_batch(self, batch_blocks: Sequence[Sequence[np.ndarray]],
+                       max_new_tokens: int = 8,
+                       pad_batch_to: int = 0) -> GenerationResult:
+        """Paged per-row batched requests (DESIGN.md §5): rows may have
+        DIFFERENT block-length signatures — different passage lengths,
+        different block counts, different query lengths. One assembly, one
+        final-block pass, one decode scan for the whole ragged batch; the
+        store still de-duplicates shared passages ACROSS rows (the paper's
+        cross-request reuse).
+
+        Shapes are padded to power-of-two buckets (prefixes to P_pad,
+        final blocks right-padded to F_pad) so every batch drawn from a
+        scheduler bucket reuses ONE compile. Per-row ``cache_len`` vectors
+        keep padding dead: each row writes at and attends exactly its own
+        lengths, so greedy tokens are identical to per-request
+        ``generate()``. ``pad_batch_to`` optionally rounds the batch WIDTH
+        up by repeating row 0 (outputs sliced off) so partial bucket
+        flushes also hit the full-width compile.
+
+        Tight fits near max_seq where one row's prefix plus another row's
+        padded final cannot share the cache split into co-servable
+        sub-batches (order-preserving; timings sum) instead of failing —
+        every request individually sized by total + max_new <= max_seq is
+        served.
+        """
         assert not self._is_recurrent, "use generate() for recurrent archs"
+        B0 = len(batch_blocks)
+        if pad_batch_to > B0:
+            batch_blocks = list(batch_blocks) + \
+                [batch_blocks[0]] * (pad_batch_to - B0)
+        P = np.asarray([sum(len(b) for b in blocks[:-1])
+                        for blocks in batch_blocks], np.int32)
+        F = np.asarray([len(blocks[-1]) for blocks in batch_blocks],
+                       np.int32)
+        # normal traffic: ONE group -> one assembly / final pass / scan
+        parts = [self._generate_batch_group(
+            [batch_blocks[i] for i in g], max_new_tokens)
+            for g in self._coservable_groups(P, F)]
+        # dup rows (pad_batch_to) don't count: their blocks are all store
+        # hits (row 0 fetched first), so only their finals/totals back out
+        return GenerationResult(
+            tokens=np.concatenate([p.tokens for p in parts], axis=0)[:B0],
+            ttft_s=sum(p.ttft_s for p in parts),
+            prefill_tokens_computed=sum(p.prefill_tokens_computed
+                                        for p in parts) - int(F[B0:].sum()),
+            prefill_tokens_total=sum(p.prefill_tokens_total
+                                     for p in parts)
+            - int((P + F)[B0:].sum()),
+            decode_s=sum(p.decode_s for p in parts))
+
+    def _generate_batch_group(self, batch_blocks, max_new_tokens: int):
+        """One co-servable ragged group: the actual paged batch dispatches
+        (one assembly, one final pass, one decode scan)."""
         B = len(batch_blocks)
-        lens = tuple(len(b) for b in batch_blocks[0][:-1])
-        final_len = len(batch_blocks[0][-1])
-        prefix_len = sum(lens)
-        total = prefix_len + final_len
-        # same cache-overflow guard as generate(): past max_seq the scan
-        # decode's clamped writes would silently corrupt the last slot
-        assert total + max_new_tokens <= self.max_seq, \
-            (total, max_new_tokens, self.max_seq)
+        prefix_lens = [[len(b) for b in blocks[:-1]]
+                       for blocks in batch_blocks]
+        P = np.asarray([sum(ls) for ls in prefix_lens], np.int32)
+        F = np.asarray([len(blocks[-1]) for blocks in batch_blocks],
+                       np.int32)
+        total = P + F
+        P_pad = min(pow2_bucket(int(P.max())), self.max_seq) if P.max() \
+            else 0
+        F_pad = self._shared_final_pad(int(P.max()), int(F.max()))
+        # overflow guards: the final pass writes F_pad padded tokens at each
+        # row's prefix, and past max_seq the scan decode's clamped writes
+        # would silently corrupt the last slot
+        assert int(P.max()) <= P_pad, (P_pad, int(P.max()), self.max_seq)
+        assert int((P + F_pad).max()) <= self.max_seq, \
+            ("ragged batch needs row prefix + padded final <= max_seq",
+             P.tolist(), F_pad, self.max_seq)
+        assert int(total.max()) + max_new_tokens <= self.max_seq, \
+            (total.tolist(), max_new_tokens, self.max_seq)
         t0 = time.perf_counter()
         computed = 0
         caches = self._fresh_caches(B)
         kv_rows = []
         for blocks in batch_blocks:
-            assert tuple(len(b) for b in blocks[:-1]) == lens
-            assert len(blocks[-1]) == final_len
             kv_list, c = self._fetch_blocks(blocks[:-1])
             computed += c
             kv_rows.append(kv_list)
-        if lens:
-            caches = self._assemble(tuple(kv_rows), caches, lens=lens)
-        finals = jnp.stack([jnp.asarray(b[-1]) for b in batch_blocks])
+        if P_pad:
+            flat, idx, pos_vec, valid = self._flatten_rows(
+                kv_rows, prefix_lens, P_pad)
+            caches = self._assemble_paged(flat, caches, idx, pos_vec, valid)
+        finals = np.zeros((B, F_pad), np.int32)
+        for r, blocks in enumerate(batch_blocks):
+            finals[r, :F[r]] = blocks[-1]
         logits, caches, states = self._final_block_pass(
-            self.params, finals, caches, jnp.asarray(prefix_len, jnp.int32))
+            self.params, jnp.asarray(finals), caches,
+            jnp.asarray(P), jnp.asarray(F - 1))
         firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         ttft = time.perf_counter() - t0
 
@@ -342,8 +573,8 @@ class BlockAttentionEngine:
                                    max_new_tokens)
         return GenerationResult(
             tokens=toks, ttft_s=ttft,
-            prefill_tokens_computed=computed + B * final_len,
-            prefill_tokens_total=B * total,
+            prefill_tokens_computed=computed + int(F.sum()),
+            prefill_tokens_total=int(total.sum()),
             decode_s=time.perf_counter() - t0 - ttft)
 
     # ------------------------------------------------------------------

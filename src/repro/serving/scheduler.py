@@ -1,12 +1,16 @@
 """Request scheduler: batches compatible requests for the engine.
 
 Serving real traffic needs batched decode; the Block-attention twist is that
-requests sharing passages also share cache entries, so the scheduler groups
-by the full per-block length signature ``(len(b_0), ..., len(b_last))`` —
-rows in a batch then share one scalar ``cache_len`` (what keeps serve_step
-jit-static) AND one static ``lens`` tuple (what keeps the engine's fused
-single-dispatch KV assembly at one compile per signature) — and the store
-de-duplicates the actual KV compute across them.
+requests sharing passages also share cache entries, so batching is the
+multiplier on the store's cross-request reuse. Real RAG traffic is ragged —
+every retrieved passage set has a different length signature — so exact
+same-shape grouping would run almost everything at batch=1. Instead the
+scheduler groups by **padded-length bucket**: the power-of-two buckets of
+(total prefix length, final/query length). The engine's paged per-row batch
+decode (DESIGN.md §5) handles arbitrary signature mixes inside a bucket via
+per-row ``cache_len`` vectors, and pads shapes to exactly these bucket
+sizes — so each bucket compiles ONCE ever, and mixed-shape requests batch
+together instead of waiting out ``max_wait_s`` at batch=1.
 """
 from __future__ import annotations
 
@@ -17,6 +21,11 @@ from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (>= 1): the padded-length bucket."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -36,9 +45,16 @@ class Request:
 
     @property
     def lens_key(self) -> Tuple[int, ...]:
-        """Per-block length signature: the batching AND jit-compile key for
-        the engine's shape-specialised fused assembly."""
+        """Exact per-block length signature (kept for introspection; no
+        longer the batching key)."""
         return tuple(len(b) for b in self.blocks)
+
+    @property
+    def bucket_key(self) -> Tuple[int, int]:
+        """Padded-length bucket: the batching AND jit-compile key of the
+        engine's paged batch path. Any signature mix inside one bucket
+        pads to the same (P_pad, F_pad) shapes -> one compile ever."""
+        return (pow2_bucket(self.prefix_len), pow2_bucket(self.final_len))
 
 
 @dataclasses.dataclass
@@ -46,17 +62,17 @@ class Batch:
     requests: List[Request]
 
     @property
-    def shape_key(self) -> Tuple[int, ...]:
-        return self.requests[0].lens_key
+    def shape_key(self) -> Tuple[int, int]:
+        return self.requests[0].bucket_key
 
 
 class Scheduler:
-    """Greedy same-shape batching with a max batch size and max wait."""
+    """Greedy bucketed batching with a max batch size and max wait."""
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
-        self._queues: Dict[Tuple[int, ...], List[Request]] = defaultdict(list)
+        self._queues: Dict[Tuple[int, int], List[Request]] = defaultdict(list)
         self._next_rid = itertools.count()
 
     def submit(self, blocks: Sequence[np.ndarray],
@@ -65,25 +81,34 @@ class Scheduler:
                       blocks=[np.asarray(b, np.int32) for b in blocks],
                       max_new_tokens=max_new_tokens,
                       arrived_s=time.perf_counter())
-        self._queues[req.lens_key].append(req)
+        self._queues[req.bucket_key].append(req)
         return req.rid
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
     def next_batch(self) -> Optional[Batch]:
-        """Oldest-first batch of up to max_batch same-shape requests."""
-        best_key, best_age = None, -1.0
+        """Oldest-first batch of up to max_batch same-bucket requests.
+
+        A bucket is ready when it is full (>= max_batch) or its oldest
+        request has waited >= max_wait_s; with ``max_wait_s == 0`` every
+        non-empty bucket is ready, so the queue ALWAYS drains — a partial
+        bucket is flushed immediately instead of starving behind fuller
+        ones. Ties break on the oldest rid (submission order), which makes
+        the drain order deterministic (wall-clock ages often compare equal
+        at perf_counter resolution).
+        """
         now = time.perf_counter()
+        ready: List[Tuple[int, Tuple[int, int]]] = []
+        for key in [k for k, q in self._queues.items() if not q]:
+            del self._queues[key]        # drop stale bucket keys
         for key, q in self._queues.items():
-            if not q:
-                continue
-            age = now - q[0].arrived_s
-            ready = len(q) >= self.max_batch or age >= self.max_wait_s
-            if ready and age > best_age:
-                best_key, best_age = key, age
-        if best_key is None:
+            if (len(q) >= self.max_batch
+                    or now - q[0].arrived_s >= self.max_wait_s):
+                ready.append((q[0].rid, key))
+        if not ready:
             return None
+        best_key = min(ready)[1]
         q = self._queues[best_key]
         batch, self._queues[best_key] = q[:self.max_batch], q[self.max_batch:]
         return Batch(batch)

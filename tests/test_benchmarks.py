@@ -40,6 +40,47 @@ def test_ttft_json_contract(tmp_path):
 
 
 @pytest.mark.bench
+def test_batch_decode_json_contract(tmp_path):
+    """batch_decode.run writes the BENCH_batch_decode.json schema future
+    perf PRs compare on — and batched throughput must beat batch=1 on the
+    same mixed-signature traffic (the paged-batch acceptance bar)."""
+    from benchmarks import batch_decode
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=256, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_batch_decode.json"
+    lines = []
+    res = batch_decode.run(n_requests=6, pool_size=4, passages_per_req=2,
+                           max_new=4, repeats=1, emit=lines.append,
+                           json_path=str(path), cfg=micro,
+                           passage_lens=(16, 24), query_lens=(8, 12))
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "batch_decode"
+    assert {"batch1_tokens_per_s", "batched_tokens_per_s", "speedup",
+            "batches", "signatures", "requests"} <= set(payload["results"])
+    assert payload["results"]["signatures"] > 1          # genuinely mixed
+    assert payload["results"]["batches"] < res["requests"]
+    # NOTE: no strict throughput assert here — a single repeat on a micro
+    # workload is wall-clock noise; the committed full-size baseline test
+    # below holds the batched > batch1 bar
+    assert res["batched_tokens_per_s"] > 0 and res["batch1_tokens_per_s"] > 0
+    assert any(line.startswith("batch_decode_mixed,") for line in lines)
+
+
+def test_batch_decode_committed_baseline_schema():
+    """The committed BENCH_batch_decode.json satisfies the acceptance bar:
+    batched tokens/s strictly above the batch=1 same-traffic baseline."""
+    payload = json.loads(
+        open(os.path.join(REPO, "BENCH_batch_decode.json")).read())
+    assert payload["benchmark"] == "batch_decode"
+    r = payload["results"]
+    assert r["batched_tokens_per_s"] > r["batch1_tokens_per_s"]
+    assert r["speedup"] > 1.0
+    assert r["signatures"] > 1 and r["batches"] < r["requests"]
+
+
+@pytest.mark.bench
 def test_run_smoke_mode():
     """`benchmarks/run.py --smoke` exercises every section end to end."""
     env = dict(os.environ)
@@ -52,3 +93,4 @@ def test_run_smoke_mode():
     assert "ttft_block_178," in out.stdout
     assert "cache_shared_pool_request," in out.stdout
     assert "attn_block_S256_nb4," in out.stdout
+    assert "batch_decode_mixed," in out.stdout

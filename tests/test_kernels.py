@@ -113,6 +113,47 @@ def test_decode_kernel_sweep(dtype, cache_len, window):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("lens,window", [
+    ((512, 100, 307), 0),        # ragged rows incl. full + crooked
+    ((1, 512, 256), 0),          # one row attends a single slot
+    ((300, 512, 64), 128),       # ragged + sliding window
+])
+def test_decode_kernel_per_row_lengths(dtype, lens, window):
+    """Paged batch decode: each (b, kv) grid row masks against ITS row's
+    valid length — a (B,) vector operand, not one shared scalar."""
+    B, S, H, KV, D = len(lens), 512, 8, 4, 64
+    q, k, v = _qkv(jax.random.PRNGKey(5), B, S, H, KV, D, dtype)
+    q1 = q[:, -1:]
+    cl = jnp.asarray(lens, jnp.int32)
+    got = ops.decode_attention(q1, k, v, cl, D ** -0.5, window=window)
+    want = ref.decode_attention_ref(q1, k, v, cl, D ** -0.5, window=window)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=ATOL[dtype], rtol=1e-2)
+    # per-row == row-at-a-time with the scalar form
+    for b, l in enumerate(lens):
+        got_b = ops.decode_attention(q1[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                     jnp.asarray(l), D ** -0.5,
+                                     window=window)
+        np.testing.assert_allclose(
+            got[b].astype(jnp.float32), got_b[0].astype(jnp.float32),
+            atol=ATOL[dtype], rtol=1e-2)
+
+
+@pytest.mark.parametrize("S", [513, 300, 63, 1023])
+def test_decode_kernel_odd_cache_length(S):
+    """Skv that isn't a tile multiple must pad-and-mask, not crash — odd
+    max_seq values reach the engine's decode path directly."""
+    B, H, KV, D = 2, 4, 2, 64
+    q, k, v = _qkv(jax.random.PRNGKey(6), B, S, H, KV, D, jnp.float32)
+    q1 = q[:, -1:]
+    cl = jnp.asarray([S, max(S // 3, 1)], jnp.int32)
+    got = ops.decode_attention(q1, k, v, cl, D ** -0.5)
+    want = ref.decode_attention_ref(q1, k, v, cl, D ** -0.5)
+    np.testing.assert_allclose(got, want, atol=ATOL[jnp.float32], rtol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("rd,interleaved", [(64, False), (32, False),
                                             (32, True)])
 @pytest.mark.parametrize("delta", [0, 1, 777, 100_000])

@@ -7,7 +7,7 @@ import pytest
 from repro.core.config import ModelConfig, SSMConfig
 from repro.models import api
 from repro.serving.engine import BlockAttentionEngine
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import Request, Scheduler
 
 from conftest import tiny_dense
 
@@ -117,8 +117,8 @@ def test_batched_serving_matches_single(setup):
 def test_generate_batch_single_cache_allocation(setup):
     """Regression (fused-assembly PR): the batch path must allocate the
     decode cache ONCE at width B — no per-row full-size caches, no
-    concatenate — and the assembled tree must look exactly like a fresh
-    width-B cache."""
+    concatenate — and the one paged assembly dispatch must return a tree
+    shaped exactly like a fresh width-B cache."""
     cfg, params, blocks = setup
     rng = np.random.default_rng(11)
     other = [rng.integers(5, cfg.vocab_size, 16).astype(np.int32)
@@ -130,16 +130,19 @@ def test_generate_batch_single_cache_allocation(setup):
     orig_fresh = eng._fresh_caches
     eng._fresh_caches = lambda b: (alloc_widths.append(b), orig_fresh(b))[1]
     captured = {}
-    orig_assemble = eng._assemble
+    orig_assemble = eng._assemble_paged
 
-    def spy(kv_rows, caches, lens):
-        out = orig_assemble(kv_rows, caches, lens=lens)
+    def spy(flat, caches, idx, pos_vec, valid):
+        out = orig_assemble(flat, caches, idx, pos_vec, valid)
+        captured.setdefault("calls", 0)
+        captured["calls"] += 1
         captured["caches"] = out
         return out
 
-    eng._assemble = spy
+    eng._assemble_paged = spy
     r_batch = eng.generate_batch([blocks, other], 3)
     assert alloc_widths == [2], alloc_widths     # one allocation, width B
+    assert captured["calls"] == 1                # ONE assembly dispatch
 
     want = orig_fresh(2)
     assert jax.tree.structure(captured["caches"]) == jax.tree.structure(want)
@@ -152,6 +155,130 @@ def test_generate_batch_single_cache_allocation(setup):
     np.testing.assert_array_equal(
         r_batch.tokens,
         np.concatenate([r.tokens for r in r_single], axis=0))
+
+
+def test_mixed_shape_batch_matches_single(setup):
+    """THE paged-batch invariant (DESIGN.md §5): requests with different
+    block-length signatures — different passage lengths, block counts AND
+    query lengths — run through ONE generate_batch call and produce greedy
+    tokens identical to independent generate() calls."""
+    cfg, params, blocks = setup
+    rng = np.random.default_rng(23)
+
+    def mk(lens):
+        return [rng.integers(5, cfg.vocab_size, l).astype(np.int32)
+                for l in lens]
+
+    reqs = [blocks,                   # (16, 16, 16, 8)
+            mk([12, 20, 24, 10]),     # ragged lens, same block count
+            mk([16, 6]),              # fewer blocks, short query
+            mk([30])]                 # no prefix at all (query only)
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    singles = [eng.generate(r, 4) for r in reqs]
+
+    eng2 = BlockAttentionEngine(params, cfg, max_seq=128)
+    calls = {"assemble": 0, "final": 0, "scan": 0}
+    orig_a, orig_f, orig_s = (eng2._assemble_paged, eng2._final_block_pass,
+                              eng2._decode_scan)
+    eng2._assemble_paged = \
+        lambda *a, **k: (calls.__setitem__("assemble",
+                                           calls["assemble"] + 1),
+                         orig_a(*a, **k))[1]
+    eng2._final_block_pass = \
+        lambda *a, **k: (calls.__setitem__("final", calls["final"] + 1),
+                         orig_f(*a, **k))[1]
+    eng2._decode_scan = \
+        lambda *a, **k: (calls.__setitem__("scan", calls["scan"] + 1),
+                         orig_s(*a, **k))[1]
+    r_batch = eng2.generate_batch(reqs, 4)
+    assert calls == {"assemble": 1, "final": 1, "scan": 1}, calls
+    np.testing.assert_array_equal(
+        r_batch.tokens, np.concatenate([r.tokens for r in singles], axis=0))
+
+
+def test_generate_batch_width_padding(setup):
+    """pad_batch_to rounds the batch width up (dummy rows = row 0) without
+    changing the returned tokens — partial bucket flushes reuse the
+    full-width compile."""
+    cfg, params, blocks = setup
+    rng = np.random.default_rng(29)
+    other = [rng.integers(5, cfg.vocab_size, 12).astype(np.int32)
+             for _ in range(2)]
+    other.append(rng.integers(5, cfg.vocab_size, 8).astype(np.int32))
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    want = eng.generate_batch([blocks, other], 3)
+    eng2 = BlockAttentionEngine(params, cfg, max_seq=128)
+    got = eng2.generate_batch([blocks, other], 3, pad_batch_to=4)
+    assert got.tokens.shape == want.tokens.shape == (2, 3)
+    np.testing.assert_array_equal(got.tokens, want.tokens)
+
+
+def test_generate_batch_tight_fit_near_max_seq(setup):
+    """Capacity contract: traffic sized by the per-request
+    ``total + max_new_tokens <= max_seq`` rule must still serve when the
+    pow2-padded final width would overflow max_seq — the engine drops to
+    the minimal shared final width instead of asserting."""
+    cfg, params, blocks = setup
+    rng = np.random.default_rng(31)
+
+    def mk(lens):
+        return [rng.integers(5, cfg.vocab_size, l).astype(np.int32)
+                for l in lens]
+
+    a = mk([35, 35, 48])      # prefix 70 + final 48: pow2(48)=64 overflows
+    b = mk([30, 20])
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    singles = [eng.generate(a, 4), eng.generate(b, 4)]
+    eng2 = BlockAttentionEngine(params, cfg, max_seq=128)
+    r = eng2.generate_batch([a, b], 4)
+    np.testing.assert_array_equal(
+        r.tokens, np.concatenate([s.tokens for s in singles], axis=0))
+
+
+def test_generate_batch_splits_unservable_row_mix(setup):
+    """Cross-row capacity: a same-bucket batch where one row's prefix plus
+    ANOTHER row's padded final overflows max_seq cannot share one padded
+    cache — generate_batch must split into co-servable sub-batches (and
+    still return tokens identical to independent generate()), not crash."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(37)
+
+    def mk(lens):
+        return [rng.integers(5, cfg.vocab_size, l).astype(np.int32)
+                for l in lens]
+
+    a = mk([60, 60, 17])      # prefix 120; fits only with final width <= 30
+    b = mk([70, 32])          # final 32: cannot co-pad with row a's prefix
+    eng = BlockAttentionEngine(params, cfg, max_seq=150)
+    singles = [eng.generate(a, 5), eng.generate(b, 5)]
+    eng2 = BlockAttentionEngine(params, cfg, max_seq=150)
+    groups = eng2._coservable_groups(np.asarray([120, 70]),
+                                     np.asarray([17, 32]))
+    assert groups == [[0], [1]]
+    r = eng2.generate_batch([a, b], 5)
+    np.testing.assert_array_equal(
+        r.tokens, np.concatenate([s.tokens for s in singles], axis=0))
+    assert r.prefill_tokens_total == (120 + 17) + (70 + 32)
+
+
+def test_assemble_rope_kernel_backend_parity(setup):
+    """The batched rope_shift kernel wired into _assemble (TPU backend
+    switch, forced on here under interpret) must reproduce the jnp-rope
+    branch token-for-token — including reordered cached blocks (Eq. 3)."""
+    cfg, params, blocks = setup
+    eng_jnp = BlockAttentionEngine(params, cfg, max_seq=128,
+                                   rope_backend="jnp")
+    eng_ker = BlockAttentionEngine(params, cfg, max_seq=128,
+                                   rope_backend="kernel")
+    assert eng_ker._rope_kernel and not eng_jnp._rope_kernel
+    r_j = eng_jnp.generate(blocks, 4)
+    r_k = eng_ker.generate(blocks, 4)
+    np.testing.assert_array_equal(r_j.tokens, r_k.tokens)
+    swapped = [blocks[2], blocks[0], blocks[1], blocks[3]]
+    r_j2 = eng_jnp.generate(swapped, 4)
+    r_k2 = eng_ker.generate(swapped, 4)
+    assert r_k2.prefill_tokens_computed == len(blocks[-1])   # warm reuse
+    np.testing.assert_array_equal(r_j2.tokens, r_k2.tokens)
 
 
 def test_scan_decode_bitwise_matches_python_loop(setup):
@@ -228,3 +355,43 @@ def test_scheduler_same_shape_batching():
     assert len(batch2.requests) == 1
     assert batch2.requests[0].prefix_len == 48
     assert sched.next_batch() is None
+
+
+def test_scheduler_buckets_mix_signatures():
+    """Two DIFFERENT block-length signatures whose padded lengths coincide
+    land in one bucket — and therefore in ONE batch (the paged-batch
+    operating point; exact-signature grouping would run them at batch=1)."""
+    sched = Scheduler(max_batch=4, max_wait_s=0.0)
+    a = [np.arange(16, dtype=np.int32)] * 2 + [np.arange(8, dtype=np.int32)]
+    b = [np.arange(12, dtype=np.int32), np.arange(20, dtype=np.int32),
+         np.arange(7, dtype=np.int32)]
+    assert Request(0, [np.asarray(x) for x in a]).lens_key != \
+        Request(0, [np.asarray(x) for x in b]).lens_key
+    sched.submit(a); sched.submit(b)
+    batch = sched.next_batch()
+    assert len(batch.requests) == 2              # mixed shapes, one batch
+    assert batch.shape_key == (32, 8)            # pow2(prefix), pow2(final)
+    assert {tuple(len(x) for x in r.blocks) for r in batch.requests} == \
+        {(16, 16, 8), (12, 20, 7)}
+    assert sched.next_batch() is None
+
+
+def test_scheduler_zero_wait_drains_partial_buckets():
+    """max_wait_s == 0 must ALWAYS drain: partially-filled buckets flush
+    immediately and deterministically (oldest submission first), never
+    starving behind other buckets or returning None with work pending."""
+    sched = Scheduler(max_batch=8, max_wait_s=0.0)
+    small = [np.arange(4, dtype=np.int32), np.arange(4, dtype=np.int32)]
+    big = [np.arange(64, dtype=np.int32), np.arange(4, dtype=np.int32)]
+    sched.submit(small)          # rid 0, bucket (4, 4)
+    sched.submit(big)            # rid 1, bucket (64, 4)
+    sched.submit(small)          # rid 2, bucket (4, 4)
+    seen = []
+    while sched.pending():
+        batch = sched.next_batch()
+        assert batch is not None, "zero-wait scheduler returned None " \
+                                  "with requests pending"
+        seen.append([r.rid for r in batch.requests])
+    assert seen == [[0, 2], [1]]                 # oldest-rid bucket first
+    assert sched.next_batch() is None
+    assert sched._queues == {}                   # stale bucket keys dropped

@@ -4,6 +4,7 @@
   §2.5     -> cache (hit rate / reuse / eviction)
   Fig. 1   -> kernels_bench (block vs full attention geometry)
   Fig. 2 serving -> batch_decode (mixed-shape batched vs batch=1 tokens/s)
+  §2.3 training  -> train_step (masked vs structural ragged block training)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
 
@@ -24,8 +25,8 @@ SMOKE_KERNEL_SIZES = [(256, 4)]
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
-                    default=["ttft", "cache", "kernels", "batch"],
-                    choices=["ttft", "cache", "kernels", "batch"])
+                    default=["ttft", "cache", "kernels", "batch", "train"],
+                    choices=["ttft", "cache", "kernels", "batch", "train"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -58,6 +59,12 @@ def main() -> None:
                              "repeats": 1, "passage_lens": (16, 24),
                              "query_lens": (8, 12)}
                             if args.smoke else {}))
+    if "train" in args.sections:
+        from benchmarks import train_step
+        train_step.run([168] if args.smoke else [512, 2048],
+                       repeats=args.repeats,
+                       emit=lambda s: None if s.startswith("name,")
+                       else print(s))
 
 
 if __name__ == "__main__":

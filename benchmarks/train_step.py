@@ -1,0 +1,143 @@
+"""Masked vs structural-ragged train-step wall clock (ISSUE 3 acceptance).
+
+The paper's block fine-tuning (§2.3) runs every block-mode batch through the
+Block-attention pattern. Two implementations exist:
+
+  * masked      — flash attention with the realised Block-attention mask:
+                  O(S²) score work regardless of block structure;
+  * structural  — the ragged gather/scatter decomposition
+                  (``core.attention.ragged_blockwise_prefill``, routed by a
+                  host-built ``BlockLayout``): Σ block_len² + L_final·S.
+
+Protocol mirrors BENCH_ttft.json: small-but-real model, CPU/interpret wall
+clock, variable-passage-length synthetic RAG batches (ragged per-row block
+lengths — the regime the structural path exists for), median of ``repeats``
+jit-warm steps. CSV: name,us_per_call,derived. With ``json_path`` the same
+numbers land in BENCH_train_step.json — the committed perf-trajectory
+baseline future PRs compare against.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.config import ModelConfig, TrainConfig
+from repro.data.synthetic import RagTaskConfig, build_batch
+from repro.training import optim
+from repro.training.trainer import batch_layout, make_train_step
+
+NUM_PASSAGES = 10       # paper: 10 retrieved passages
+QUERIES = 16            # -> 48-token query block
+BATCH = 2
+
+
+def bench_model() -> ModelConfig:
+    # attention-heavy small model: the attention/FFN FLOPs ratio at S=2048
+    # is what decides masked vs structural, so keep d_ff modest
+    return ModelConfig(
+        name="bench-train-20m", arch_type="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=8, d_ff=512, vocab_size=512,
+        dtype="float32", param_dtype="float32")
+
+
+def task_for_length(total: int) -> RagTaskConfig:
+    """Variable-passage RAG task whose sample_len is (close to) ``total``."""
+    q_len = 3 * QUERIES
+    p_len = max((total - q_len) // NUM_PASSAGES, 8)
+    return RagTaskConfig(num_passages=NUM_PASSAGES, passage_len=p_len,
+                         queries_per_sample=QUERIES, vocab_size=512,
+                         num_keys=96, num_values=96,
+                         variable_passage_len=True)
+
+
+def _median_us(fn, repeats: int) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run(total_lengths: List[int], repeats: int = 3, emit=print,
+        json_path: Optional[str] = None, cfg: Optional[ModelConfig] = None):
+    cfg = cfg or bench_model()
+    tcfg = TrainConfig(learning_rate=1e-3, batch_size=BATCH)
+    results = {}
+
+    emit("name,us_per_call,derived")
+    for total in total_lengths:
+        task = task_for_length(total)
+        S = task.sample_len
+        rng = np.random.default_rng(0)
+        batch = build_batch(rng, task, BATCH)
+        layout = batch_layout(batch, block_mode=True)
+        jbatch = {k: np.asarray(v) for k, v in batch.items()
+                  if k in ("tokens", "labels", "block_ids", "last_block")}
+
+        from repro.models import api
+        params = api.model_init(jax.random.PRNGKey(0), cfg)
+        opt = optim.init_opt_state(params)
+        step = make_train_step(cfg, tcfg, block_mode=True)
+
+        # masked path: no layout -> block_ids mask fallback; structural:
+        # the same batch + the host-built BlockLayout. Warm both compiles.
+        step(params, opt, jbatch)[2]["loss"].block_until_ready()
+        step(params, opt, jbatch, layout)[2]["loss"].block_until_ready()
+
+        t_mask = _median_us(lambda: step(params, opt, jbatch)[2]["loss"],
+                            repeats)
+        t_struct = _median_us(
+            lambda: step(params, opt, jbatch, layout)[2]["loss"], repeats)
+        speedup = t_mask / t_struct
+        results[str(S)] = {
+            "masked_us": round(t_mask),
+            "structural_us": round(t_struct),
+            "speedup": round(speedup, 2),
+            "num_blocks": NUM_PASSAGES + 1,
+            "max_block_len": layout.max_block_len,
+        }
+        emit(f"train_step_masked_{S},{t_mask:.0f},")
+        emit(f"train_step_struct_{S},{t_struct:.0f},speedup={speedup:.2f}x")
+
+    if json_path:
+        payload = {
+            "benchmark": "train_step",
+            "protocol": {
+                "model": cfg.name, "batch": BATCH,
+                "num_passages": NUM_PASSAGES, "query_len": 3 * QUERIES,
+                "variable_passage_len": True, "repeats": repeats,
+                "backend": jax.default_backend(),
+                "machine": platform.machine(),
+                "note": "CPU/interpret wall clock; masked = block_ids flash "
+                        "mask path, structural = BlockLayout ragged "
+                        "gather/scatter path (same batch, same loss)",
+            },
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        emit(f"# wrote {json_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lengths", type=int, nargs="+", default=[512, 2048])
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default=None,
+                    help="also write results as JSON (BENCH_train_step.json)")
+    args = ap.parse_args()
+    run(args.lengths, args.repeats, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

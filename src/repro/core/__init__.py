@@ -15,12 +15,13 @@ from repro.core.config import (  # noqa: F401
     TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
 )
 from repro.core.blocks import (  # noqa: F401
-    BlockLayout, SegmentationRules, full_attention_layout, uniform_layout,
-    layout_from_lengths, rag_blocks, segment_tokens,
+    BlockLayout, SegmentationRules, from_row_lens, full_attention_layout,
+    layout_from_lengths, rag_blocks, ragged_layout, segment_tokens,
+    uniform_layout,
 )
 from repro.core.attention import (  # noqa: F401
     attention_ref, block_mask, blockwise_prefill, decode_attention,
-    flash_attention, causal_mask_fn,
+    flash_attention, causal_mask_fn, ragged_blockwise_prefill,
 )
 from repro.core.rope import apply_rope, reencode_positions, zero_base_positions  # noqa: F401
 from repro.core.kv_cache import BlockKVStore, DecodeKVCache, block_key, cache_update  # noqa: F401

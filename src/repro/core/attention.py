@@ -15,6 +15,15 @@ Three interchangeable implementations (all numerically cross-checked in tests):
                               global pass. The O(S^2) -> O(S*L + S*L) FLOPs
                               reduction is visible to XLA cost analysis, which
                               is what the roofline reads.
+  * ``ragged_blockwise_prefill`` — the same structural decomposition for
+                              PER-ROW ragged block lengths (a batched
+                              ``BlockLayout``): non-final blocks are gathered
+                              into a padded (B·(nb−1), L_pad) fold, the final
+                              block runs one (B, F_pad, S) global pass, and
+                              outputs scatter back. FLOPs
+                              Σ block_len² + L_final·S — the training-time
+                              twin of the ragged Pallas kernel, and fully
+                              differentiable (gather/scatter + softmax only).
 
 Conventions: q (B, Sq, H, D); k/v (B, Skv, KV, D); GQA via head grouping.
 Softmax in f32 regardless of input dtype.
@@ -227,6 +236,125 @@ def blockwise_prefill(
             qf, k, v, causal_mask_fn(q_pos, kv_pos), scale,
             kv_chunk=kv_chunk, softcap=softcap)
     return jnp.concatenate([out[:, : S - L], out_final], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Structural blockwise prefill (per-row ragged blocks, via BlockLayout)
+# ---------------------------------------------------------------------------
+def _structural_mask(q_pos, q_valid, kv_pos, kv_valid, window: int, chunk: int):
+    """Causal ∧ valid ∧ window ∧ chunk from GLOBAL positions — (B, Sq, Skv).
+
+    Built inline rather than via ``block_mask``: the block structure is
+    already realised by the gather, so the structural path never touches the
+    O(S²) mask helpers and these masks only span the small gathered tiles.
+    """
+    m = (kv_pos[:, None, :] <= q_pos[:, :, None]) \
+        & q_valid[:, :, None] & kv_valid[:, None, :]
+    if window:
+        m &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if chunk:
+        m &= (kv_pos[:, None, :] // chunk) == (q_pos[:, :, None] // chunk)
+    return m
+
+
+def _precomputed_mask_fn(mask, kv_chunk: int):
+    """Adapt a fully materialised (B, Sq, Skv) mask to flash_attention's
+    chunk-sliced ``mask_fn(start, length)`` protocol.
+
+    The tail pad to the chunk-aligned length happens ONCE at closure
+    creation — ``fn`` runs inside flash_attention's fori_loop body, where
+    a per-chunk pad would re-copy the whole mask every iteration."""
+    pad = (-mask.shape[2]) % kv_chunk
+    if pad:
+        mask = jnp.pad(mask, ((0, 0), (0, 0), (0, pad)))
+
+    def fn(start, length):
+        return jax.lax.dynamic_slice_in_dim(mask, start, length, axis=2)
+    return fn
+
+
+def _masked(q, k, v, mask, scale, kv_chunk, softcap, dense):
+    if dense:
+        return attention_ref(q, k, v, mask, scale, softcap=softcap)
+    kv_chunk = min(kv_chunk, k.shape[1])   # flash_attention's own clamp —
+    # mirrored here so the pre-padded mask aligns with its chunk grid
+    return flash_attention(q, k, v, _precomputed_mask_fn(mask, kv_chunk),
+                           scale, kv_chunk=kv_chunk, softcap=softcap)
+
+
+def ragged_blockwise_prefill(
+    q, k, v,
+    layout,                  # BlockLayout with starts + static pads
+    scale: float,
+    kv_chunk: int = 512,
+    softcap: float = 0.0,
+    dense: bool = False,
+    window: int = 0,
+    chunk: int = 0,
+):
+    """Block-attention over PER-ROW ragged blocks — the structural form.
+
+    ``layout`` is a batched ``BlockLayout``: ``starts`` (B, nb+1) carries the
+    runtime boundaries; ``max_block_len`` / ``max_final_len`` are the static
+    pad widths the gather folds to. Non-final blocks are gathered into a
+    (B·(nb−1), L_pad) batch fold and run local attention (FLOPs
+    Σ block_len² ≤ B·(nb−1)·L_pad² instead of B·S²); the final (query) block
+    runs one (B, F_pad, S) global causal pass; outputs scatter back by the
+    same indices. ``window`` / ``chunk`` apply exactly as in ``block_mask``
+    (global-position semantics). Fully differentiable — the training twin of
+    the ragged Pallas kernel.
+    """
+    B, S, H, D = q.shape
+    nb = layout.num_blocks
+    assert nb > 0 and layout.starts is not None, "need a structural layout"
+    starts = jnp.broadcast_to(
+        jnp.asarray(layout.row_starts(), jnp.int32), (B, nb + 1))
+
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    kv_valid = jnp.ones((B, S), bool)
+    if nb == 1:   # single block: everything is the (global) final block
+        mask = _structural_mask(kv_pos, kv_valid, kv_pos, kv_valid,
+                                window, chunk)
+        return _masked(q, k, v, mask, scale, kv_chunk, softcap, dense)
+
+    # ---- within-block passes: non-final blocks gathered into the batch ----
+    nnf = nb - 1
+    L = layout.max_block_len
+    off = jnp.arange(L, dtype=jnp.int32)
+    blk_start = starts[:, :nnf]                          # (B, nnf)
+    blk_len = starts[:, 1:nb] - blk_start                # (B, nnf)
+    g_pos = blk_start[:, :, None] + off[None, None]      # (B, nnf, L) global
+    g_valid = off[None, None] < blk_len[:, :, None]
+    g_idx = jnp.minimum(g_pos, S - 1).reshape(B, nnf * L)
+
+    def gather(x):
+        out = jnp.take_along_axis(x, g_idx[:, :, None, None], axis=1)
+        return out.reshape(B * nnf, L, *x.shape[2:])
+
+    qb, kb, vb = gather(q), gather(k), gather(v)
+    posf = g_pos.reshape(B * nnf, L)
+    validf = g_valid.reshape(B * nnf, L)
+    mask_w = _structural_mask(posf, validf, posf, validf, window, chunk)
+    o_within = _masked(qb, kb, vb, mask_w, scale, min(kv_chunk, L),
+                       softcap, dense)
+    o_within = o_within.reshape(B, nnf * L, H, D)
+    out = jnp.zeros_like(q)
+    out = out.at[jnp.arange(B)[:, None], g_idx].add(
+        jnp.where(validf.reshape(B, nnf * L)[:, :, None, None], o_within, 0))
+
+    # ---- final block: one global causal pass over the full sequence ----
+    F = layout.max_final_len
+    f_off = jnp.arange(F, dtype=jnp.int32)
+    f_start = starts[:, nb - 1]
+    f_len = starts[:, nb] - f_start
+    f_pos = f_start[:, None] + f_off[None]               # (B, F)
+    f_valid = f_off[None] < f_len[:, None]
+    f_idx = jnp.minimum(f_pos, S - 1)
+    qf = jnp.take_along_axis(q, f_idx[:, :, None, None], axis=1)
+    mask_f = _structural_mask(f_pos, f_valid, kv_pos, kv_valid, window, chunk)
+    o_final = _masked(qf, k, v, mask_f, scale, kv_chunk, softcap, dense)
+    return out.at[jnp.arange(B)[:, None], f_idx].add(
+        jnp.where(f_valid[:, :, None, None], o_final, 0))
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,33 @@
-"""Block segmentation (paper §2.2, §3.1).
+"""Block segmentation (paper §2.2, §3.1) — the first-class ``BlockLayout``.
 
-A ``BlockLayout`` carries everything the attention layers need to realise the
-Block-attention mask for one sequence:
+A ``BlockLayout`` is a registered pytree and the SINGLE source of truth for
+block structure across the stack (DESIGN.md §6): training, prefill, the
+kernels and the serving engine all consume the same object.
 
-  * ``block_ids`` — per-token block index, non-decreasing, int32 ``(seq,)``
-  * ``num_blocks`` — static upper bound on the number of blocks
-  * ``last_block_id`` — id of the final (query) block, which attends globally
+Dynamic children (traced through jit):
+  * ``block_ids``      — per-token block index, non-decreasing, int32
+                         ``(seq,)`` / ``(batch, seq)``; may be ``None`` for
+                         bookkeeping-only layouts (serving).
+  * ``last_block_id``  — id of the final (query) block, which attends
+                         globally; scalar or ``(batch,)``.
+  * ``starts``         — cumulative block boundaries ``(nb+1,)`` /
+                         ``(batch, nb+1)`` with ``starts[..., 0] == 0`` and
+                         ``starts[..., nb] == seq``; ``None`` when only the
+                         per-token ids are known (mask-path-only layouts).
+
+Static signature (pytree aux data — part of every jit compile key, so a
+layout argument buckets compiles by structure, never by the ragged values):
+  * ``num_blocks``     — block count per row (0 = unknown -> mask path);
+  * ``seq_len``        — total tokens per row;
+  * ``max_block_len``  — static pad bound on non-final block length (the
+                         structural path's fold width);
+  * ``max_final_len``  — static bound on the final (query) block length;
+  * ``uniform``        — every row splits into ``num_blocks`` equal blocks
+                         (enables the folded reshape fast path).
+
+``layout.structural`` tells the attention dispatch whether the FLOPs-visible
+structural decomposition (Σ block_len² + L_final·S) is available; otherwise
+the layers fall back to the masked O(S²) path driven by ``block_ids``.
 
 Segmentation rules implemented from §3.1 of the paper:
   1. multi-turn: each (user, assistant) turn is a block
@@ -16,7 +38,7 @@ Segmentation rules implemented from §3.1 of the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,20 +47,114 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class BlockLayout:
-    block_ids: jax.Array          # (seq,) or (batch, seq) int32
-    last_block_id: jax.Array      # scalar or (batch,) int32
+    # -- dynamic (pytree children) --
+    block_ids: Optional[jax.Array]        # (seq,) or (batch, seq) int32
+    last_block_id: Optional[jax.Array]    # scalar or (batch,) int32
+    starts: Optional[jax.Array] = None    # (nb+1,) or (batch, nb+1) int32
+    # -- static signature (pytree aux data) --
+    num_blocks: int = 0                   # 0 -> structure unknown (mask path)
+    seq_len: int = 0
+    max_block_len: int = 0                # 0 -> no static bound (mask path)
+    max_final_len: int = 0
+    uniform: bool = False
 
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        children = (self.block_ids, self.last_block_id, self.starts)
+        aux = (self.num_blocks, self.seq_len, self.max_block_len,
+               self.max_final_len, self.uniform)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- derived ---------------------------------------------------------
     @property
     def batched(self) -> bool:
-        return self.block_ids.ndim == 2
+        ref = self.block_ids if self.block_ids is not None else self.starts
+        return ref is not None and ref.ndim == 2
+
+    @property
+    def signature(self) -> tuple:
+        """The static part — what a jit compile keys on."""
+        return (self.num_blocks, self.seq_len, self.max_block_len,
+                self.max_final_len, self.uniform)
+
+    @property
+    def structural(self) -> bool:
+        """True when the Σ block_len² structural decomposition can run:
+        uniform reshape, or ragged with known boundaries + static pads."""
+        if self.num_blocks <= 0:
+            return False
+        if self.uniform:
+            return True
+        return (self.starts is not None and self.max_block_len > 0
+                and self.max_final_len > 0)
+
+    def row_starts(self) -> jax.Array:
+        """``starts`` with the batch dim made explicit: (B_or_1, nb+1)."""
+        assert self.starts is not None
+        s = self.starts
+        return s if s.ndim == 2 else s[None]
+
+    # lengths below are host-usable when the layout was built host-side
+    # (numpy starts) — the serving engine's bookkeeping contract.
+    @property
+    def total_lens(self):
+        return self.row_starts()[:, -1]
+
+    @property
+    def prefix_lens(self):
+        """Tokens before the final (query) block, per row."""
+        return self.row_starts()[:, -2]
+
+    @property
+    def final_lens(self):
+        s = self.row_starts()
+        return s[:, -1] - s[:, -2]
+
+    def block_lens(self):
+        """(B_or_1, nb) per-block lengths (zero-length pad blocks allowed)."""
+        s = self.row_starts()
+        return s[:, 1:] - s[:, :-1]
+
+    def token_deltas(self, width: Optional[int] = None):
+        """Per-PREFIX-token Eq.-3 delta: token t of block b shifts by
+        ``starts[b]``. Host-side (numpy starts) helper for the serving
+        assembly; rows right-pad with zeros to ``width``."""
+        s = np.asarray(self.row_starts())
+        B = s.shape[0]
+        width = int(s[:, -2].max()) if width is None else width
+        out = np.zeros((B, width), np.int32)
+        for r in range(B):
+            lens = np.diff(s[r, :-1])
+            if lens.sum():
+                out[r, : lens.sum()] = np.repeat(s[r, :-2], lens)
+        return out
 
 
+jax.tree_util.register_pytree_node(
+    BlockLayout,
+    lambda l: l.tree_flatten(),
+    BlockLayout.tree_unflatten,
+)
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
 def full_attention_layout(seq_len: int, batch: int | None = None) -> BlockLayout:
     """Single block == plain causal full attention."""
     shape = (seq_len,) if batch is None else (batch, seq_len)
     ids = jnp.zeros(shape, jnp.int32)
     last = jnp.zeros((), jnp.int32) if batch is None else jnp.zeros((batch,), jnp.int32)
-    return BlockLayout(ids, last)
+    starts = jnp.asarray([0, seq_len], jnp.int32)
+    if batch is not None:
+        starts = jnp.broadcast_to(starts, (batch, 2))
+    return BlockLayout(ids, last, starts, num_blocks=1, seq_len=seq_len,
+                       max_block_len=seq_len, max_final_len=seq_len,
+                       uniform=True)
 
 
 def uniform_layout(seq_len: int, num_blocks: int, batch: int | None = None) -> BlockLayout:
@@ -48,20 +164,92 @@ def uniform_layout(seq_len: int, num_blocks: int, batch: int | None = None) -> B
     ``seq_len`` must be divisible by ``num_blocks``.
     """
     assert seq_len % num_blocks == 0, (seq_len, num_blocks)
-    ids = jnp.repeat(jnp.arange(num_blocks, dtype=jnp.int32), seq_len // num_blocks)
+    L = seq_len // num_blocks
+    ids = jnp.repeat(jnp.arange(num_blocks, dtype=jnp.int32), L)
     last = jnp.asarray(num_blocks - 1, jnp.int32)
+    starts = jnp.arange(num_blocks + 1, dtype=jnp.int32) * L
     if batch is not None:
         ids = jnp.broadcast_to(ids, (batch, seq_len))
         last = jnp.broadcast_to(last, (batch,))
-    return BlockLayout(ids, last)
+        starts = jnp.broadcast_to(starts, (batch, num_blocks + 1))
+    return BlockLayout(ids, last, starts, num_blocks=num_blocks,
+                       seq_len=seq_len, max_block_len=L, max_final_len=L,
+                       uniform=True)
 
 
 def layout_from_lengths(lengths: Sequence[int]) -> BlockLayout:
     """Build a (host-side) layout from explicit per-block lengths."""
+    lengths = [int(l) for l in lengths]
     ids = np.concatenate(
         [np.full(l, i, np.int32) for i, l in enumerate(lengths)]
     )
-    return BlockLayout(jnp.asarray(ids), jnp.asarray(len(lengths) - 1, jnp.int32))
+    starts = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int32)
+    nb = len(lengths)
+    return BlockLayout(
+        jnp.asarray(ids), jnp.asarray(nb - 1, jnp.int32),
+        jnp.asarray(starts),
+        num_blocks=nb, seq_len=int(sum(lengths)),
+        max_block_len=int(max(lengths[:-1])) if nb > 1 else lengths[-1],
+        max_final_len=int(lengths[-1]),
+        uniform=len(set(lengths)) == 1)
+
+
+def ragged_layout(row_lens, max_block_len: int = 0,
+                  max_final_len: int = 0) -> BlockLayout:
+    """Host-side batched layout from per-row block lengths.
+
+    ``row_lens``: (B, nb) int array / nested sequence; every row must sum to
+    the same total (rows are batched at one seq length). The final column is
+    the query block. ``max_block_len`` / ``max_final_len`` pin the STATIC pad
+    bounds — pass task-level caps so every batch of a training run shares one
+    compile; 0 derives them from this batch's maxima (one compile per
+    batch-max signature).
+    """
+    lens = np.asarray(row_lens, np.int32)
+    assert lens.ndim == 2, lens.shape
+    B, nb = lens.shape
+    totals = lens.sum(axis=1)
+    assert (totals == totals[0]).all(), ("ragged rows must share one seq "
+                                         "length", totals)
+    S = int(totals[0])
+    starts = np.zeros((B, nb + 1), np.int32)
+    np.cumsum(lens, axis=1, out=starts[:, 1:])
+    ids = np.repeat(
+        np.broadcast_to(np.arange(nb, dtype=np.int32), (B, nb)).ravel(),
+        lens.ravel()).reshape(B, S)
+    mbl = int(max_block_len) or (int(lens[:, :-1].max()) if nb > 1
+                                 else int(lens.max()))
+    mfl = int(max_final_len) or int(lens[:, -1].max())
+    assert (lens[:, :-1] <= mbl).all(), ("block length exceeds the static "
+                                         "max_block_len cap", mbl)
+    assert (lens[:, -1] <= mfl).all(), (int(lens[:, -1].max()), mfl)
+    return BlockLayout(
+        jnp.asarray(ids), jnp.full((B,), nb - 1, jnp.int32),
+        jnp.asarray(starts),
+        num_blocks=nb, seq_len=S, max_block_len=mbl, max_final_len=mfl,
+        uniform=bool((lens == lens[0, 0]).all()))
+
+
+def from_row_lens(row_lens: Sequence[Sequence[int]]) -> BlockLayout:
+    """Bookkeeping layout for the serving engine: per-row block lengths that
+    may DIFFER in count and total. Rows with fewer blocks are padded with
+    zero-length blocks *before* the final (query) entry so the final block
+    sits at index nb-1 for every row; ``starts`` stays numpy so the host-side
+    length/delta bookkeeping costs no device sync."""
+    rows = [[int(l) for l in r] for r in row_lens]
+    nb = max(len(r) for r in rows)
+    B = len(rows)
+    starts = np.zeros((B, nb + 1), np.int64)
+    for r, lens in enumerate(rows):
+        padded = lens[:-1] + [0] * (nb - len(lens)) + lens[-1:]
+        starts[r, 1:] = np.cumsum(padded)
+    return BlockLayout(
+        None, np.full((B,), nb - 1, np.int32), starts.astype(np.int32),
+        num_blocks=nb, seq_len=0,
+        max_block_len=int(max((max(r[:-1]) for r in rows if len(r) > 1),
+                              default=0)),
+        max_final_len=int(max(r[-1] for r in rows)),
+        uniform=False)
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,16 @@ class RagTaskConfig:
     num_passages: int = 10          # paper: 10 retrieved passages
     queries_per_sample: int = 4     # multiple lookups -> denser loss signal
     seed: int = 0
+    # Variable-passage-length mode: passages get RAGGED per-row lengths (real
+    # retrieved passages never share one length — the TurboRAG-style
+    # precomputed-chunk regime). The total passage budget stays
+    # ``num_passages * passage_len`` so every row batches at one seq length;
+    # lengths are drawn in [min_passage_len, max_passage_len] with that fixed
+    # sum. The caps are TASK-level statics: they pin the BlockLayout pad
+    # signature so the whole training run shares one structural compile.
+    variable_passage_len: bool = False
+    min_passage_len: int = 0        # 0 -> derived (fits the fact slots)
+    max_passage_len: int = 0        # 0 -> derived (2*passage_len - min)
 
     @property
     def key_range(self) -> Tuple[int, int]:
@@ -62,19 +72,55 @@ class RagTaskConfig:
     def sample_len(self) -> int:
         return self.num_passages * self.passage_len + self.query_block_len
 
+    @property
+    def passage_len_bounds(self) -> Tuple[int, int]:
+        """Resolved [lo, hi] passage-length caps (variable mode)."""
+        lo = self.min_passage_len or max(8, 2 * self.facts_per_passage + 4)
+        hi = self.max_passage_len or 2 * self.passage_len - lo
+        assert lo <= self.passage_len <= hi, (lo, self.passage_len, hi)
+        return lo, hi
+
+    @property
+    def layout_caps(self) -> Tuple[int, int]:
+        """(max_block_len, max_final_len) — the static BlockLayout pads."""
+        hi = self.passage_len_bounds[1] if self.variable_passage_len \
+            else self.passage_len
+        return hi, self.query_block_len
+
 
 def _make_passage(rng: np.random.Generator, cfg: RagTaskConfig,
-                  facts: List[Tuple[int, int]]) -> np.ndarray:
+                  facts: List[Tuple[int, int]],
+                  length: int = 0) -> np.ndarray:
     """A passage: filler tokens with (key, value) pairs embedded."""
+    length = length or cfg.passage_len
     f_lo, f_hi = cfg.filler_range
-    toks = rng.integers(f_lo, f_hi, cfg.passage_len).astype(np.int32)
+    toks = rng.integers(f_lo, f_hi, length).astype(np.int32)
     # place facts at random non-overlapping slots
-    slots = rng.choice(cfg.passage_len // 2 - 1, size=len(facts),
+    slots = rng.choice(length // 2 - 1, size=len(facts),
                        replace=False) * 2
     for (key, val), s in zip(facts, slots):
         toks[s] = key
         toks[s + 1] = val
     return toks
+
+
+def _ragged_passage_lens(rng: np.random.Generator,
+                         cfg: RagTaskConfig) -> np.ndarray:
+    """Per-passage lengths in [lo, hi] summing EXACTLY to the fixed budget
+    ``num_passages * passage_len`` (random pairwise redistribution from the
+    uniform split — every row still batches at one seq length)."""
+    lo, hi = cfg.passage_len_bounds
+    lens = np.full(cfg.num_passages, cfg.passage_len, np.int64)
+    if cfg.num_passages < 2:
+        return lens
+    for _ in range(cfg.num_passages * 4):
+        i, j = rng.choice(cfg.num_passages, size=2, replace=False)
+        room = int(min(lens[i] - lo, hi - lens[j]))
+        if room > 0:
+            d = int(rng.integers(0, room + 1))
+            lens[i] -= d
+            lens[j] += d
+    return lens
 
 
 def make_sample(rng: np.random.Generator, cfg: RagTaskConfig
@@ -88,10 +134,12 @@ def make_sample(rng: np.random.Generator, cfg: RagTaskConfig
     vals = rng.integers(v_lo, v_hi, n_facts)
     facts = list(zip(keys.tolist(), vals.tolist()))
 
+    p_lens = (_ragged_passage_lens(rng, cfg) if cfg.variable_passage_len
+              else np.full(cfg.num_passages, cfg.passage_len, np.int64))
     passages = []
     for i in range(cfg.num_passages):
         fs = facts[i * cfg.facts_per_passage:(i + 1) * cfg.facts_per_passage]
-        passages.append(_make_passage(rng, cfg, fs))
+        passages.append(_make_passage(rng, cfg, fs, length=int(p_lens[i])))
 
     # several lookups per sample — denser training signal; the FIRST query
     # is the scored one for accuracy evals
@@ -123,9 +171,11 @@ def build_batch(rng: np.random.Generator, cfg: RagTaskConfig, batch: int
     can attend every passage).
     """
     S = cfg.sample_len
+    nb = cfg.num_passages + 1
     tokens = np.zeros((batch, S), np.int32)
     labels = np.full((batch, S), -1, np.int32)       # -1 = no loss
     block_ids = np.zeros((batch, S), np.int32)
+    block_lens = np.zeros((batch, nb), np.int32)     # ragged per-row layout
     answer_tok = np.zeros((batch,), np.int32)
     gold = np.zeros((batch,), np.int32)
 
@@ -135,8 +185,10 @@ def build_batch(rng: np.random.Generator, cfg: RagTaskConfig, batch: int
         for i, p in enumerate(s["passages"]):
             row.append(p)
             ids.append(np.full(len(p), i, np.int32))
+            block_lens[b, i] = len(p)
         row.append(s["query_block"])
         ids.append(np.full(len(s["query_block"]), cfg.num_passages, np.int32))
+        block_lens[b, -1] = len(s["query_block"])
         row = np.concatenate(row)
         ids = np.concatenate(ids)
         tokens[b] = row
@@ -153,6 +205,8 @@ def build_batch(rng: np.random.Generator, cfg: RagTaskConfig, batch: int
         "tokens": tokens,
         "labels": labels,
         "block_ids": block_ids,
+        "block_lens": block_lens,
+        "layout_caps": cfg.layout_caps,   # static BlockLayout pad signature
         "last_block": np.full((batch,), cfg.num_passages, np.int32),
         "answer_token": answer_tok,
         "gold_passage": gold,

@@ -13,8 +13,13 @@ masking waste:
 
 ``flash_block_ragged`` is the serving hot path: ONE launch computes the
 whole Block-attention mask for *variable-length* blocks. The cumulative
-block boundaries arrive as a scalar-prefetched SMEM array; each grid step
-derives, from the boundaries alone,
+block boundaries arrive as a scalar-prefetched SMEM array — a **batched**
+``(B, nb+1)`` boundary map: each of the ``N = B*KV`` grid rows reads ITS
+row's boundaries (``row = n // kv_heads``), so a per-row ragged batch
+(every row a different block-length signature) runs in one launch with
+per-row tile-granular grid sparsity. A legacy ``(nb+1,)`` operand
+broadcasts one layout to every row. Each grid step derives, from the
+boundary scalars alone,
 
   * a per-tile liveness test (grid sparsity: a KV tile left of the query
     tile's lowest block start, or right of the causal frontier, is skipped
@@ -151,18 +156,22 @@ def flash_causal(
 # ---------------------------------------------------------------------------
 def _ragged_kernel(starts_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
                    acc_ref, *, scale: float, nb: int, tq: int, tk: int,
-                   softcap: float):
+                   softcap: float, heads_per_row: int):
     """One (n, i, j) grid step of the ragged-block prefill.
 
-    ``starts_ref`` (SMEM, scalar-prefetched): (nb + 1,) cumulative block
-    boundaries with ``starts[0] == 0`` and ``starts[nb] == valid kv length``.
-    Row q attends [lo(q), q] with lo(q) = start of q's block, or 0 for rows
-    in the final block (the paper's global query block).
+    ``starts_ref`` (SMEM, scalar-prefetched): (B, nb + 1) cumulative block
+    boundaries with ``starts[b, 0] == 0`` and ``starts[b, nb] == row b's
+    valid kv length``. Grid row ``n`` (= batch*kv_heads) reads boundary row
+    ``n // heads_per_row``. Row q attends [lo(q), q] with lo(q) = start of
+    q's block, or 0 for rows in the final block (the paper's global query
+    block).
     """
+    n = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
-    kv_len = starts_ref[nb]
-    final_start = starts_ref[nb - 1]
+    b = n // heads_per_row
+    kv_len = starts_ref[b, nb]
+    final_start = starts_ref[b, nb - 1]
 
     @pl.when(j == 0)
     def _init():
@@ -175,8 +184,8 @@ def _ragged_kernel(starts_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     # non-decreasing in q except in the final block where it drops to 0, so
     # the tile-wide minimum is 0 whenever the tile overlaps the final block.
     lo_first = jnp.int32(0)
-    for b in range(1, nb):
-        sb = starts_ref[b]
+    for blk in range(1, nb):
+        sb = starts_ref[b, blk]
         lo_first = jnp.where(i * tq >= sb, sb, lo_first)
     q_hi = (i + 1) * tq - 1                       # causal frontier of the tile
     tile_lo = jnp.where(q_hi >= final_start, 0, lo_first)
@@ -196,8 +205,8 @@ def _ragged_kernel(starts_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         # per-row window lower bound lo(q): VPU work on a (TQ, 1) column
         q_pos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)
         lo = jnp.zeros((tq, 1), jnp.int32)
-        for b in range(1, nb):
-            sb = starts_ref[b]
+        for blk in range(1, nb):
+            sb = starts_ref[b, blk]
             lo = jnp.where(q_pos >= sb, sb, lo)
         lo = jnp.where(q_pos >= final_start, 0, lo)           # global final blk
         kv_pos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
@@ -224,8 +233,11 @@ def flash_block_ragged(
     q: jax.Array,            # (N, G, Sp, D)   N = batch * kv_heads
     k: jax.Array,            # (N, Sp, D)      Sp padded to tile multiples
     v: jax.Array,            # (N, Sp, D)
-    starts: jax.Array,       # (nb + 1,) int32 cumulative block boundaries;
-                             # starts[nb] = valid length (<= Sp)
+    starts: jax.Array,       # (B, nb + 1) int32 PER-ROW cumulative block
+                             # boundaries (B must divide N; row n reads
+                             # starts[n // (N//B)]); starts[b, nb] = row b's
+                             # valid length (<= Sp). Legacy (nb + 1,) form
+                             # broadcasts one layout to every row.
     *,
     scale: float,
     tq: int = DEFAULT_TQ,
@@ -233,25 +245,31 @@ def flash_block_ragged(
     softcap: float = 0.0,
     interpret: bool = True,
 ) -> jax.Array:
-    """Whole ragged Block-attention prefill in ONE kernel launch.
+    """Whole (per-row ragged) Block-attention prefill in ONE kernel launch.
 
-    Rows beyond ``starts[-1]`` (q padding) hold UNSPECIFIED values — zeros
-    when their whole tile is dead, unmasked attention over the real keys
-    when the tile straddles the valid boundary (their ``lo`` falls to 0
-    like final-block rows). Callers MUST slice the output back to the
-    valid length. Pad *keys* are always masked out via the boundary
+    Rows beyond ``starts[b, -1]`` (q padding) hold UNSPECIFIED values —
+    zeros when their whole tile is dead, unmasked attention over the real
+    keys when the tile straddles the valid boundary (their ``lo`` falls to
+    0 like final-block rows). Callers MUST slice/mask the output back to
+    the valid length. Pad *keys* are always masked out via the boundary
     scalars.
     """
     N, G, Sq, D = q.shape
     Skv = k.shape[1]
-    nb = starts.shape[0] - 1
+    if starts.ndim == 1:
+        starts = starts[None]
+    B, nb1 = starts.shape
+    nb = nb1 - 1
+    assert N % B == 0, (N, B)
+    heads_per_row = N // B
     tq = min(tq, Sq)
     tk = min(tk, Skv)
     assert Sq % tq == 0 and Skv % tk == 0, (Sq, tq, Skv, tk)
     grid = (N, Sq // tq, Skv // tk)
 
     kernel = functools.partial(_ragged_kernel, scale=scale, nb=nb,
-                               tq=tq, tk=tk, softcap=softcap)
+                               tq=tq, tk=tk, softcap=softcap,
+                               heads_per_row=heads_per_row)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,

@@ -11,11 +11,12 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.block_attention import flash_block_ragged, flash_causal
 from repro.kernels.decode_attention import DEFAULT_TK as DEFAULT_DECODE_TK
 from repro.kernels.decode_attention import flash_decode
-from repro.kernels.rope_shift import rope_shift
+from repro.kernels.rope_shift import rope_shift, rope_shift_tokens
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
@@ -59,43 +60,68 @@ def _unfold(o, B, H, D):
 def block_attention_prefill(q, k, v, num_blocks: int = 0, scale: float = None,
                             softcap: float = 0.0,
                             interpret: bool = INTERPRET,
-                            block_lens=None):
+                            block_lens=None, layout=None):
     """Block-attention prefill (paper Fig. 1).
 
-    Either ``num_blocks`` (uniform split; any remainder joins the final
-    block — no ``S % num_blocks == 0`` restriction) or ``block_lens`` (a
-    (nb,) int array / sequence of per-block lengths summing to S, ragged
-    RAG passages) selects the block map. Two dispatch strategies:
+    The block map comes from ``num_blocks`` (uniform split; any remainder
+    joins the final block — no ``S % num_blocks == 0`` restriction),
+    ``block_lens`` (a (nb,) or PER-ROW (B, nb) int array / nested sequence
+    of block lengths, each row summing to S — ragged RAG passages, ragged
+    training batches), or a ``core.blocks.BlockLayout`` (``layout=``, the
+    unified structure object — its ``starts`` drive the same per-row
+    kernel). Two dispatch strategies:
 
     * uniform & divisible — blocks folded into the batch dim (the grid
       never visits a cross-block tile) + one global final-block pass:
       exact block-granular sparsity, FLOPs Σ block_len² + L_final·S;
-    * ragged / non-divisible — ONE ``flash_block_ragged`` launch: the
-      cumulative boundaries are scalar-prefetched into SMEM and drive
-      per-tile liveness plus the exact per-row mask. Tile sizes adapt to
-      the smallest host-known block length (floor 64) so grid sparsity
-      stays close to block-granular; blocks smaller than a tile still pay
-      masked-MAC waste within their tile (tile-granular, not row-granular,
-      sparsity — see DESIGN.md §1).
+    * ragged / non-divisible / per-row — ONE ``flash_block_ragged``
+      launch: the (B, nb+1) cumulative boundaries are scalar-prefetched
+      into SMEM and drive per-row per-tile liveness plus the exact
+      per-row mask. Tile sizes adapt to the smallest host-known block
+      length (floor 64) so grid sparsity stays close to block-granular;
+      blocks smaller than a tile still pay masked-MAC waste within their
+      tile (tile-granular, not row-granular, sparsity — DESIGN.md §1).
     """
     if scale is None:   # keyword-form callers must not silently get 1.0
         raise TypeError("block_attention_prefill: scale is required")
+    if layout is not None:
+        assert block_lens is None and num_blocks == 0, \
+            "pass exactly one of layout / block_lens / num_blocks"
+        assert layout.starts is not None, "layout has no boundary array"
+        lens = layout.row_starts()
+        lens = lens[..., 1:] - lens[..., :-1]
+        if layout.starts.ndim == 1:
+            lens = lens[0]
+        block_lens = (np.asarray(lens) if not isinstance(lens, jax.Array)
+                      else lens)
     if block_lens is not None and not isinstance(block_lens, jax.Array):
         # host-side lens: catch a bad block map here, before tracing would
         # silently mask the tail (device-array lens are the caller's
         # contract — a sum check there would force a sync)
-        lens = tuple(int(l) for l in block_lens)
-        if sum(lens) != q.shape[1]:
+        lens = np.asarray(block_lens, np.int64)
+        if lens.ndim == 1 and lens.sum() != q.shape[1]:
             raise ValueError(
-                f"block_lens sum {sum(lens)} != seq len {q.shape[1]}")
-        if len(set(lens)) == 1:           # uniform in disguise
-            return _block_attention_uniform(q, k, v, len(lens), scale,
+                f"block_lens sum {lens.sum()} != seq len {q.shape[1]}")
+        if lens.ndim == 2:
+            if lens.shape[0] != q.shape[0]:
+                raise ValueError(
+                    f"per-row block_lens rows {lens.shape[0]} != "
+                    f"batch {q.shape[0]}")
+            if (lens.sum(axis=1) != q.shape[1]).any():
+                raise ValueError(
+                    f"per-row block_lens sums {lens.sum(axis=1).tolist()} "
+                    f"!= seq len {q.shape[1]}")
+            if (lens == lens[0]).all():   # every row shares one layout
+                lens = lens[0]
+        if lens.ndim == 1 and len(set(lens.tolist())) == 1:  # uniform
+            return _block_attention_uniform(q, k, v, lens.shape[0], scale,
                                             softcap, interpret)
-        tile = min(256, max(64, _next_pow2(min(lens))))
-        return _block_attention_ragged(q, k, v, jnp.asarray(lens, jnp.int32),
+        tile = min(256, max(64, _next_pow2(int(lens[lens > 0].min()))))
+        return _block_attention_ragged(q, k, v,
+                                       jnp.asarray(lens, jnp.int32),
                                        scale, softcap, interpret, tile)
     if block_lens is None:
-        assert num_blocks > 0, "need num_blocks or block_lens"
+        assert num_blocks > 0, "need num_blocks, block_lens or layout"
         S = q.shape[1]
         if S % num_blocks == 0:
             return _block_attention_uniform(q, k, v, num_blocks, scale,
@@ -142,10 +168,13 @@ def _block_attention_uniform(q, k, v, num_blocks, scale, softcap, interpret):
     "scale", "softcap", "interpret", "tile"))
 def _block_attention_ragged(q, k, v, block_lens, scale, softcap, interpret,
                             tile):
+    """One-launch ragged dispatch; ``block_lens`` (nb,) shared or (B, nb)
+    per-row — the kernel's batched boundary operand either way."""
     B, S, H, D = q.shape
     block_lens = jnp.asarray(block_lens, jnp.int32)
-    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                              jnp.cumsum(block_lens, dtype=jnp.int32)])
+    zeros = jnp.zeros(block_lens.shape[:-1] + (1,), jnp.int32)
+    starts = jnp.concatenate(
+        [zeros, jnp.cumsum(block_lens, axis=-1, dtype=jnp.int32)], axis=-1)
 
     tq = min(tile, _next_pow2(S))
     tk = min(max(tile, 512) if tile >= 256 else tile, _next_pow2(S))
@@ -212,6 +241,28 @@ def reencode_block_kv(k, delta, rotary_dim: int, theta: float,
                          (flat.shape[0], 1))
     out = rope_shift(flat, d, rotary_dim=rotary_dim, theta=theta,
                      interleaved=interleaved, interpret=interpret)
+    return out.reshape(k.shape)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rotary_dim", "theta", "interleaved", "interpret"))
+def reencode_tokens_kv(k, deltas, rotary_dim: int, theta: float,
+                       interleaved: bool = False, interpret: bool = INTERPRET):
+    """Per-TOKEN-delta Eq.-3 re-rotation: token (b, t) shifts by its own
+    offset — the PAGED assembly's rope as ONE kernel launch.
+
+    k: (..., B, S, KV, D) — leading dims (layer groups) fold into the
+    kernel's batch axis; deltas: (B, S) int32 per-token target offsets
+    (shared across the folded leading dims).
+    """
+    B, S = k.shape[-4], k.shape[-3]
+    flat = k.reshape((-1,) + k.shape[-4:])            # (M, B, S, KV, D)
+    M = flat.shape[0]
+    d = jnp.broadcast_to(jnp.asarray(deltas, jnp.int32), (B, S))
+    d = jnp.broadcast_to(d[None], (M, B, S)).reshape(M * B, S)
+    out = rope_shift_tokens(flat.reshape((M * B,) + k.shape[-3:]), d,
+                            rotary_dim=rotary_dim, theta=theta,
+                            interleaved=interleaved, interpret=interpret)
     return out.reshape(k.shape)
 
 

@@ -17,6 +17,13 @@ formulation matters.
 
 The legacy single-sequence form — k (S, KV, D) with a (1, 1) scalar delta —
 is kept as a thin wrapper over the batched kernel.
+
+``rope_shift_tokens`` is the PER-TOKEN-delta variant (the paged-assembly
+operand, DESIGN.md §5): delta is a (B, S) vector — token ``(b, t)`` rotates
+by its OWN ``delta[b, t]``. cos/sin become a (TS, half) tile computed on the
+VPU from the delta tile; still purely elementwise and HBM-bandwidth bound.
+This is what lets the PAGED KV assembly (each token's Eq.-3 offset differs
+within a row) run as a kernel instead of falling back to the jnp rope.
 """
 from __future__ import annotations
 
@@ -55,6 +62,70 @@ def _rope_shift_kernel(delta_ref, k_ref, o_ref, *, rotary_dim: int,
                               axis=-1)
     o_ref[0] = jnp.concatenate(
         [rot.astype(k.dtype), k[..., rd:]], axis=-1)
+
+
+def _rope_shift_tokens_kernel(delta_ref, k_ref, o_ref, *, rotary_dim: int,
+                              theta: float, interleaved: bool):
+    k = k_ref[0]                                              # (TS, KV, D)
+    delta = delta_ref[0].astype(jnp.float32)                  # (TS,)
+    rd = rotary_dim
+    half = rd // 2
+    inv_freq = 1.0 / (theta ** (
+        jax.lax.broadcasted_iota(jnp.float32, (1, half), 1)[0] * 2.0 / rd))
+    ang = delta[:, None] * inv_freq                           # (TS, half)
+    cos = jnp.cos(ang)[:, None, :]                            # over KV heads
+    sin = jnp.sin(ang)[:, None, :]
+    x = k[..., :rd].astype(jnp.float32)
+    if interleaved:
+        x1, x2 = x[..., 0::2], x[..., 1::2]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        rot = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    else:
+        x1, x2 = x[..., :half], x[..., half:]
+        rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                              axis=-1)
+    o_ref[0] = jnp.concatenate(
+        [rot.astype(k.dtype), k[..., rd:]], axis=-1)
+
+
+def rope_shift_tokens(
+    k: jax.Array,            # (B, S, KV, D) zero-based cached keys
+    delta: jax.Array,        # (B, S) int32 PER-TOKEN offsets
+    *,
+    rotary_dim: int,
+    theta: float,
+    interleaved: bool = False,
+    ts: int = DEFAULT_TS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-token-delta Eq.-3 re-rotation in one launch (paged assembly)."""
+    B, S, KV, D = k.shape
+    delta = jnp.broadcast_to(jnp.asarray(delta, jnp.int32), (B, S))
+    ts = min(ts, S)
+    if S % ts:                   # pad to a tile multiple (rotating zeros by
+        pad = ts - S % ts        # delta 0 is free) and slice back
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad)))
+        return rope_shift_tokens(k, delta, rotary_dim=rotary_dim,
+                                 theta=theta, interleaved=interleaved,
+                                 ts=ts, interpret=interpret)[:, :S]
+    kernel = functools.partial(_rope_shift_tokens_kernel,
+                               rotary_dim=rotary_dim, theta=theta,
+                               interleaved=interleaved)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, S // ts),
+        in_specs=[
+            pl.BlockSpec((1, ts), lambda b, i: (b, i)),
+            pl.BlockSpec((1, ts, KV, D), lambda b, i: (b, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ts, KV, D), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, KV, D), k.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(delta, k)
 
 
 def rope_shift(

@@ -12,7 +12,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocks import BlockLayout
+from repro.core.blocks import BlockLayout, uniform_layout
 from repro.core.config import ModelConfig
 from repro.models import encdec, transformer as T, vlm as V
 
@@ -27,22 +27,35 @@ def model_init(key, cfg: ModelConfig):
 
 def _text_ctx(batch: Dict[str, Any], block_mode: bool, structural_blocks: int,
               collect_kv: bool = False, impl: str = "flash",
-              fold_spec=None) -> T.AttnCtx:
+              fold_spec=None, layout: Optional[BlockLayout] = None
+              ) -> T.AttnCtx:
+    """Build the prefill ctx; ``layout`` is resolved in priority order:
+
+      1. an explicit caller-provided ``BlockLayout`` (host-built, carrying
+         the static ragged signature — the structural training path);
+      2. ``structural_blocks`` -> a uniform structural layout;
+      3. ``block_ids`` in the batch -> ids-only layout (masked fallback);
+      4. none -> plain causal.
+
+    ``block_mode=False`` (the paper's full mode) forces plain causal.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     positions = batch.get(
         "positions",
         jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)))
-    layout = None
-    if block_mode and structural_blocks == 0 and "block_ids" in batch:
-        layout = BlockLayout(batch["block_ids"], batch["last_block"])
+    if not block_mode:
+        layout = None
+    elif layout is None:
+        if structural_blocks:
+            layout = uniform_layout(S, structural_blocks, batch=B)
+        elif "block_ids" in batch:
+            layout = BlockLayout(batch["block_ids"], batch["last_block"])
     return T.AttnCtx(
-        kind="blockwise" if structural_blocks else "mask",
+        kind="prefill",
         positions=positions,
         layout=layout,
-        num_blocks=structural_blocks,
         collect_kv=collect_kv,
-        use_block_mask=block_mode,
         impl=impl,
         fold_spec=fold_spec,
     )
@@ -55,12 +68,16 @@ def forward_logits(
     remat: bool = False,
     impl: str = "flash",
     unroll: bool = False,
+    layout: Optional[BlockLayout] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Full-sequence forward -> (logits (B,S,V) f32, aux loss scalar).
 
     block_mode=False  -> plain causal full attention (the paper's "full mode").
     structural_blocks -> use the uniform blockwise fast path with that many
                          blocks (0 = mask-based path / plain causal).
+    layout            -> a host-built ``BlockLayout`` (ragged training
+                         batches); its static signature routes the structural
+                         fast path and buckets the jit compile.
     """
     if cfg.arch_type == "audio":
         layout = batch.get("frame_block_ids") if block_mode else None
@@ -69,18 +86,18 @@ def forward_logits(
             jnp.zeros((), jnp.float32)
 
     if cfg.arch_type == "vlm":
-        h, positions, layout = V.merge_inputs(
+        h, positions, vlayout = V.merge_inputs(
             params, cfg, batch["tokens"], batch["patches"],
             batch.get("num_tiles", cfg.frontend_tiles))
-        ctx = T.AttnCtx(kind="mask", positions=positions,
-                        layout=layout if block_mode else None,
-                        use_block_mask=block_mode, impl=impl)
+        ctx = T.AttnCtx(kind="prefill", positions=positions,
+                        layout=vlayout if block_mode else None, impl=impl)
         h, aux, *_ = T.forward_hidden(params, cfg, h, ctx, remat=remat,
                                       unroll=unroll)
         S_text = batch["tokens"].shape[1]
         return T.logits_from_hidden(params, cfg, h[:, -S_text:]), aux
 
-    ctx = _text_ctx(batch, block_mode, structural_blocks, impl=impl)
+    ctx = _text_ctx(batch, block_mode, structural_blocks, impl=impl,
+                    layout=layout)
     h = T.embed_tokens(params, cfg, batch["tokens"])
     h, aux, *_ = T.forward_hidden(params, cfg, h, ctx, remat=remat,
                                   unroll=unroll)
@@ -95,6 +112,7 @@ def prefill(
     impl: str = "flash",
     unroll: bool = False,
     fold_spec=None,
+    layout: Optional[BlockLayout] = None,
 ) -> Tuple[jax.Array, dict, dict]:
     """Prefill pass returning (last-position logits, collected_kv, states).
 
@@ -109,18 +127,18 @@ def prefill(
         return logits[:, -1:], {"enc_out": enc}, {}
 
     if cfg.arch_type == "vlm":
-        h, positions, layout = V.merge_inputs(
+        h, positions, vlayout = V.merge_inputs(
             params, cfg, batch["tokens"], batch["patches"],
             batch.get("num_tiles", cfg.frontend_tiles))
-        ctx = T.AttnCtx(kind="mask", positions=positions,
-                        layout=layout if block_mode else None,
-                        use_block_mask=block_mode, collect_kv=True, impl=impl)
+        ctx = T.AttnCtx(kind="prefill", positions=positions,
+                        layout=vlayout if block_mode else None,
+                        collect_kv=True, impl=impl)
         h, _, _, states, collected = T.forward_hidden(
             params, cfg, h, ctx, unroll=unroll)
         return T.logits_from_hidden(params, cfg, h[:, -1:]), collected, states
 
     ctx = _text_ctx(batch, block_mode, structural_blocks, collect_kv=True,
-                    impl=impl, fold_spec=fold_spec)
+                    impl=impl, fold_spec=fold_spec, layout=layout)
     h = T.embed_tokens(params, cfg, batch["tokens"])
     h, aux, _, states, collected = T.forward_hidden(
         params, cfg, h, ctx, states=initial_states, unroll=unroll)

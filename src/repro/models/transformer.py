@@ -8,13 +8,21 @@ zamba2's 5×mamba+shared-attn, llama4's 3×chunked+1×global, xlstm's
 is what makes 40 (arch × shape) dry-run compiles tractable — and gives remat
 a natural boundary.
 
-Three execution kinds, one code path:
-  * kind="mask"      — training/eval: flash attention with the Block-attention
-                       mask (or plain causal). Handles ragged blocks.
-  * kind="blockwise" — prefill fast path for uniform blocks: the structural
-                       decomposition whose FLOPs saving XLA can see.
-  * kind="decode"    — serve_step: one (or few) new tokens against KV caches /
-                       recurrent states.
+Two execution kinds, one code path:
+  * kind="prefill" — full-sequence forward (training / eval / prefill). The
+                     ``layout`` field of the ctx — a first-class
+                     ``BlockLayout`` — is the ONLY dispatch input:
+                       layout None          -> plain causal (full mode)
+                       layout.structural    -> the Σ block_len² + L_final·S
+                                               structural decomposition
+                                               (uniform fold, or the ragged
+                                               gather/scatter form — XLA sees
+                                               the FLOPs saving either way)
+                       layout (ids only)    -> masked flash attention (the
+                                               O(S²) fallback for layouts
+                                               with no static signature)
+  * kind="decode"  — serve_step: one (or few) new tokens against KV caches /
+                     recurrent states.
 """
 from __future__ import annotations
 
@@ -148,15 +156,14 @@ def init_params(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class AttnCtx:
-    kind: str                                 # mask | blockwise | decode
+    kind: str                                 # prefill | decode
     positions: jax.Array                      # (B, S)
-    layout: Optional[BlockLayout] = None      # mask kind: block ids
-    num_blocks: int = 0                       # blockwise kind (0 = causal full)
+    layout: Optional[BlockLayout] = None      # prefill: None = plain causal;
+                                              # else THE dispatch object
     cache_len: Optional[jax.Array] = None     # decode: len before write —
                                               # scalar or (B,) per-row (paged)
     kv_chunk: int = 512
     collect_kv: bool = False                  # prefill: return per-layer KV
-    use_block_mask: bool = True               # False -> plain causal (full mode)
     impl: str = "flash"                       # flash | dense (dry-run/tests)
     fold_spec: Any = None                     # §Perf block-parallel sharding
 
@@ -186,29 +193,8 @@ def _attn_sublayer(p, cfg: ModelConfig, spec: LayerSpec, h, ctx: AttnCtx,
         o = A.decode_attention(q, ck, cv, ctx.cache_len, scale,
                                window=window or (chunk and _chunk_window(ctx, chunk)))
         new_cache = {"k": ck, "v": cv}
-    elif ctx.kind == "blockwise" and ctx.num_blocks > 0:
-        o = _blockwise_dispatch(q, k, v, cfg, spec, ctx, scale)
-    else:  # mask kind (training / ragged) or blockwise-with-0-blocks (causal)
-        lay = ctx.layout if ctx.use_block_mask else None
-        if ctx.impl == "dense":
-            mask = A.block_mask(
-                ctx.positions, ctx.positions,
-                q_blk=lay.block_ids if lay is not None else None,
-                kv_blk=lay.block_ids if lay is not None else None,
-                last_blk=lay.last_block_id if lay is not None else None,
-                window=window, chunk=chunk)
-            o = A.attention_ref(q, k, v, mask, scale,
-                                softcap=cfg.logit_softcap)
-        else:
-            mask_fn = A.causal_mask_fn(
-                ctx.positions, ctx.positions,
-                q_blk=lay.block_ids if lay is not None else None,
-                kv_blk=lay.block_ids if lay is not None else None,
-                last_blk=lay.last_block_id if lay is not None else None,
-                window=window, chunk=chunk)
-            o = A.flash_attention(q, k, v, mask_fn, scale,
-                                  kv_chunk=ctx.kv_chunk,
-                                  softcap=cfg.logit_softcap)
+    else:
+        o = _prefill_attention(q, k, v, cfg, ctx, scale, window, chunk)
     out = L.linear(p["wo"], o.reshape(B, S, H * hd))
     collected = {"k": k, "v": v} if ctx.collect_kv else None
     return out, new_cache, collected
@@ -220,52 +206,91 @@ def _chunk_window(ctx: AttnCtx, chunk: int):
     return chunk
 
 
-def _blockwise_dispatch(q, k, v, cfg, spec: LayerSpec, ctx: AttnCtx, scale):
-    """Structural block-attention for uniform blocks (+ chunked-layer combo)."""
+def _masked_attention(q, k, v, cfg, ctx: AttnCtx, scale, q_pos, kv_pos, *,
+                      q_blk=None, kv_blk=None, last_blk=None,
+                      window: int = 0, chunk: int = 0):
+    """The ONE dense/flash masked-attention pair (every fallback routes
+    here: full-mode causal, ids-only block masks, chunk-clip finals)."""
+    if ctx.impl == "dense":
+        mask = A.block_mask(q_pos, kv_pos, q_blk=q_blk, kv_blk=kv_blk,
+                            last_blk=last_blk, window=window, chunk=chunk)
+        return A.attention_ref(q, k, v, mask, scale,
+                               softcap=cfg.logit_softcap)
+    mask_fn = A.causal_mask_fn(q_pos, kv_pos, q_blk=q_blk, kv_blk=kv_blk,
+                               last_blk=last_blk, window=window, chunk=chunk)
+    return A.flash_attention(q, k, v, mask_fn, scale, kv_chunk=ctx.kv_chunk,
+                             softcap=cfg.logit_softcap)
+
+
+def _prefill_attention(q, k, v, cfg, ctx: AttnCtx, scale, window, chunk):
+    """Full-sequence attention dispatched on ``ctx.layout`` alone."""
     B, S = q.shape[:2]
-    nb = ctx.num_blocks
-    chunk = cfg.attention_chunk if spec.chunked else 0
-    if not ctx.use_block_mask:
+    lay = ctx.layout
+    dense = ctx.impl == "dense"
+
+    if lay is None or (lay.uniform and lay.num_blocks == 1):
+        # plain causal (the paper's full mode)
         if chunk and S % chunk == 0 and S > chunk:
             # full-attention mode on a chunked layer: chunk-diagonal
             return A.blockwise_prefill(q, k, v, S // chunk, scale,
                                        kv_chunk=ctx.kv_chunk,
                                        softcap=cfg.logit_softcap,
-                                       final_global=False,
-                                       dense=ctx.impl == "dense")
-        pos = ctx.positions
-        if ctx.impl == "dense":
-            return A.attention_ref(q, k, v, A.block_mask(pos, pos), scale,
-                                   softcap=cfg.logit_softcap)
-        return A.flash_attention(q, k, v, A.causal_mask_fn(pos, pos), scale,
-                                 kv_chunk=ctx.kv_chunk,
-                                 softcap=cfg.logit_softcap)
-    dense = ctx.impl == "dense"
-    if chunk and S % chunk == 0 and S > chunk and (S // nb) <= chunk:
-        # block-attention ∧ chunked layer: within-block everywhere, and the
-        # final block's global pass is clipped to the last chunk (exact
-        # intersection when block_len | chunk | S).
-        L_blk = S // nb
-        within = A.blockwise_prefill(q, k, v, nb, scale, kv_chunk=ctx.kv_chunk,
-                                     softcap=cfg.logit_softcap,
-                                     final_global=False, dense=dense)
-        qf = q[:, S - L_blk:]
-        kc = k[:, S - chunk:]
-        vc = v[:, S - chunk:]
-        q_pos = jnp.broadcast_to(
-            jnp.arange(chunk - L_blk, chunk, dtype=jnp.int32), (B, L_blk))
-        kv_pos = jnp.broadcast_to(jnp.arange(chunk, dtype=jnp.int32), (B, chunk))
-        if dense:
-            fin = A.attention_ref(qf, kc, vc, A.block_mask(q_pos, kv_pos),
-                                  scale, softcap=cfg.logit_softcap)
-        else:
-            fin = A.flash_attention(qf, kc, vc, A.causal_mask_fn(q_pos, kv_pos),
-                                    scale, kv_chunk=ctx.kv_chunk,
-                                    softcap=cfg.logit_softcap)
-        return jnp.concatenate([within[:, : S - L_blk], fin], axis=1)
-    return A.blockwise_prefill(q, k, v, nb, scale, kv_chunk=ctx.kv_chunk,
-                               softcap=cfg.logit_softcap, final_global=True,
-                               dense=dense, fold_spec=ctx.fold_spec)
+                                       final_global=False, dense=dense)
+        return _masked_attention(q, k, v, cfg, ctx, scale,
+                                 ctx.positions, ctx.positions,
+                                 window=window, chunk=chunk)
+
+    # a sliding window cuts INTO uniform blocks, which the folded reshape
+    # form cannot express — route windowed layouts to the ragged structural
+    # path below, whose global-position masks apply window/chunk exactly
+    if lay.structural and lay.uniform and S == lay.seq_len and not window:
+        nb = lay.num_blocks
+        if chunk and S % chunk == 0 and S > chunk and (S // nb) <= chunk:
+            # block-attention ∧ chunked layer: within-block everywhere, and
+            # the final block's global pass is clipped to the last chunk
+            # (exact intersection when block_len | chunk | S).
+            L_blk = S // nb
+            within = A.blockwise_prefill(q, k, v, nb, scale,
+                                         kv_chunk=ctx.kv_chunk,
+                                         softcap=cfg.logit_softcap,
+                                         final_global=False, dense=dense)
+            q_pos = jnp.broadcast_to(
+                jnp.arange(chunk - L_blk, chunk, dtype=jnp.int32), (B, L_blk))
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(chunk, dtype=jnp.int32), (B, chunk))
+            fin = _masked_attention(q[:, S - L_blk:], k[:, S - chunk:],
+                                    v[:, S - chunk:], cfg, ctx, scale,
+                                    q_pos, kv_pos)
+            return jnp.concatenate([within[:, : S - L_blk], fin], axis=1)
+        if not chunk:
+            return A.blockwise_prefill(q, k, v, nb, scale,
+                                       kv_chunk=ctx.kv_chunk,
+                                       softcap=cfg.logit_softcap,
+                                       final_global=True, dense=dense,
+                                       fold_spec=ctx.fold_spec)
+        # uniform blocks but an incompatible chunk geometry: the ragged
+        # structural form handles chunk exactly (global-position masks)
+        return A.ragged_blockwise_prefill(q, k, v, lay, scale,
+                                          kv_chunk=ctx.kv_chunk,
+                                          softcap=cfg.logit_softcap,
+                                          dense=dense, window=window,
+                                          chunk=chunk)
+
+    if lay.structural and S == lay.seq_len:
+        # per-row ragged blocks: the gather/scatter structural path —
+        # Σ block_len² + L_final·S FLOPs, no O(S²) mask realised
+        return A.ragged_blockwise_prefill(q, k, v, lay, scale,
+                                          kv_chunk=ctx.kv_chunk,
+                                          softcap=cfg.logit_softcap,
+                                          dense=dense, window=window,
+                                          chunk=chunk)
+
+    # ids-only layout (no static signature): masked O(S²) fallback
+    return _masked_attention(q, k, v, cfg, ctx, scale,
+                             ctx.positions, ctx.positions,
+                             q_blk=lay.block_ids, kv_blk=lay.block_ids,
+                             last_blk=lay.last_block_id,
+                             window=window, chunk=chunk)
 
 
 # ---------------------------------------------------------------------------

@@ -28,11 +28,13 @@ signature. (The model decode path uses the dense jnp
 TPU kernel twin honouring the same per-row contract with per-row tile
 skipping, parity-tested but not dispatched from the model layers.)
 
-On TPU the assembly rope runs as the batched ``rope_shift`` kernel
-(``ops.reencode_blocks_kv``, ragged per-block delta operand); on
-CPU/interpret the numerically equivalent vectorised jnp rope inside the
-same jitted call is faster. ``rope_backend`` selects ("auto" picks by
-``jax.default_backend()``; the REPRO_ASSEMBLE_ROPE env var overrides).
+On TPU the assembly rope runs as a ``rope_shift`` kernel — the batched
+per-block-delta form in the static ``_assemble`` (``ops.reencode_blocks_kv``)
+and the per-TOKEN-delta form in the paged ``_assemble_paged``
+(``ops.reencode_tokens_kv``); on CPU/interpret the numerically equivalent
+vectorised jnp rope inside the same jitted call is faster. ``rope_backend``
+selects ("auto" picks by ``jax.default_backend()``; the
+REPRO_ASSEMBLE_ROPE env var overrides).
 
 Recurrent/hybrid archs (zamba2, xlstm) get *prefix*-granular reuse instead
 (DESIGN.md §4): the full-prefix recurrent state is cached by prefix hash.
@@ -52,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.blocks import from_row_lens
 from repro.core.config import ModelConfig
 from repro.core.kv_cache import BlockKVStore, cache_write_prefix
 from repro.core.rope import apply_rope
@@ -235,7 +238,16 @@ class BlockAttentionEngine:
                 k = jnp.where(m, kv["k"][:, idx], 0)   # (G, B, P_pad, KV, D)
                 v = jnp.where(m, kv["v"][:, idx], 0)
                 if self.reencode:
-                    k = apply_rope(k, pos_vec, cfg)
+                    if self._rope_kernel:
+                        # per-TOKEN-delta rope_shift kernel: the paged
+                        # assembly's Eq.-3 rotation in one launch (layer
+                        # groups fold into the kernel batch axis)
+                        k = ops.reencode_tokens_kv(
+                            k, pos_vec, rotary_dim=cfg.rotary_dim,
+                            theta=cfg.rope_theta,
+                            interleaved=cfg.rope_interleaved)
+                    else:
+                        k = apply_rope(k, pos_vec, cfg)
                 ck, cv = cache_write_prefix(
                     out[pos_key]["k"], out[pos_key]["v"],
                     k.astype(self.dtype), v.astype(self.dtype))
@@ -310,8 +322,7 @@ class BlockAttentionEngine:
             kv_list.append(kv)
         return tuple(kv_list), computed
 
-    def _flatten_rows(self, kv_rows, prefix_lens: List[List[int]],
-                      P_pad: int):
+    def _flatten_rows(self, kv_rows, layout, P_pad: int):
         """Ragged rows -> the paged assembly operands.
 
         Concatenates every fetched block of every row end to end into one
@@ -319,25 +330,23 @@ class BlockAttentionEngine:
         physical block shapes are ragged, so this is the only per-batch
         shape-specialised op; its compile is a single XLA concatenate) and
         builds the host-side gather indices / Eq.-3 delta vector / valid
-        mask that let the bucket-compiled ``_assemble_paged`` pack rows
-        back out at fixed (B, P_pad) shapes.
+        mask from the request group's ``BlockLayout`` — the same object
+        that drives the final-block pass and the decode scan.
         """
         B = len(kv_rows)
         S_flat = B * P_pad
+        P = np.asarray(layout.prefix_lens, np.int64)
         row_starts = np.zeros(B + 1, np.int64)
-        for r, ls in enumerate(prefix_lens):
-            row_starts[r + 1] = row_starts[r] + sum(ls)
+        np.cumsum(P, out=row_starts[1:])
         total = int(row_starts[-1])
 
         idx = np.zeros((B, P_pad), np.int32)
-        pos_vec = np.zeros((B, P_pad), np.int32)
         valid = np.zeros((B, P_pad), bool)
-        for r, ls in enumerate(prefix_lens):
-            P_r = sum(ls)
+        # per-token Eq.-3 delta: token t of block b shifts by starts[b]
+        pos_vec = layout.token_deltas(P_pad)
+        for r in range(B):
+            P_r = int(P[r])
             idx[r, :P_r] = row_starts[r] + np.arange(P_r)
-            starts = np.concatenate([[0], np.cumsum(ls)]).astype(np.int32)
-            if P_r:
-                pos_vec[r, :P_r] = np.repeat(starts[:-1], ls)
             valid[r, :P_r] = True
 
         template = next(row[0] for row in kv_rows if row)
@@ -375,7 +384,11 @@ class BlockAttentionEngine:
     def generate(self, blocks: Sequence[np.ndarray], max_new_tokens: int = 8,
                  greedy: bool = True) -> GenerationResult:
         """Single-request generation with block KV reuse (batch=1)."""
-        total = sum(len(b) for b in blocks)
+        # ONE BlockLayout per request: every downstream quantity — prefix
+        # offset, per-block lens for the assembly, final-block start/length,
+        # decode start — reads off the same object (DESIGN.md §6)
+        lay = from_row_lens([[len(b) for b in blocks]])
+        total = int(lay.total_lens[0])
         assert total + max_new_tokens <= self.max_seq
         t0 = time.perf_counter()
         if self._is_recurrent:
@@ -383,22 +396,22 @@ class BlockAttentionEngine:
 
         caches = self._fresh_caches(1)
         computed = 0
-        offset = 0
+        offset = int(lay.prefix_lens[0])
         if len(blocks) > 1:
             kv_list, computed = self._fetch_blocks(blocks[:-1])
-            lens = tuple(len(b) for b in blocks[:-1])
+            lens = tuple(int(l) for l in lay.block_lens()[0, :-1])
             caches = self._assemble((kv_list,), caches, lens=lens)
-            offset = sum(lens)
         final = jnp.asarray(blocks[-1])[None, :]
         logits, caches, states = self._final_block_pass(
             self.params, final, caches,
-            jnp.full((1,), offset, jnp.int32),
-            jnp.full((1,), len(blocks[-1]) - 1, jnp.int32))
+            jnp.asarray(lay.prefix_lens, jnp.int32),
+            jnp.asarray(lay.final_lens - 1, jnp.int32))
         first = int(jnp.argmax(logits[0, -1]))
         ttft = time.perf_counter() - t0
 
         toks = self._decode_tokens(np.asarray([first]), caches, states,
-                                   total, max_new_tokens)
+                                   np.asarray(lay.total_lens, np.int64),
+                                   max_new_tokens)
         return GenerationResult(
             tokens=toks, ttft_s=ttft,
             prefill_tokens_computed=computed + len(blocks[-1]),
@@ -528,14 +541,15 @@ class BlockAttentionEngine:
 
     def _generate_batch_group(self, batch_blocks, max_new_tokens: int):
         """One co-servable ragged group: the actual paged batch dispatches
-        (one assembly, one final pass, one decode scan)."""
+        (one assembly, one final pass, one decode scan). The group's
+        ``BlockLayout`` (rows padded with zero-length blocks to a shared
+        block count) is the single source of every per-row length."""
         B = len(batch_blocks)
-        prefix_lens = [[len(b) for b in blocks[:-1]]
-                       for blocks in batch_blocks]
-        P = np.asarray([sum(ls) for ls in prefix_lens], np.int32)
-        F = np.asarray([len(blocks[-1]) for blocks in batch_blocks],
-                       np.int32)
-        total = P + F
+        lay = from_row_lens([[len(b) for b in blocks]
+                             for blocks in batch_blocks])
+        P = np.asarray(lay.prefix_lens, np.int32)
+        F = np.asarray(lay.final_lens, np.int32)
+        total = np.asarray(lay.total_lens, np.int32)
         P_pad = min(pow2_bucket(int(P.max())), self.max_seq) if P.max() \
             else 0
         F_pad = self._shared_final_pad(int(P.max()), int(F.max()))
@@ -558,7 +572,7 @@ class BlockAttentionEngine:
             kv_rows.append(kv_list)
         if P_pad:
             flat, idx, pos_vec, valid = self._flatten_rows(
-                kv_rows, prefix_lens, P_pad)
+                kv_rows, lay, P_pad)
             caches = self._assemble_paged(flat, caches, idx, pos_vec, valid)
         finals = np.zeros((B, F_pad), np.int32)
         for r, blocks in enumerate(batch_blocks):

@@ -1,9 +1,17 @@
 """Block fine-tuning trainer (paper §2.4 + §3.1).
 
-The ONLY difference from standard SFT is the attention mask: batches tagged
-``block_mode=True`` use the Block-attention mask, others plain causal.
-With ``mixed_block_full`` every sample is seen in both modes, which is what
+The ONLY difference from standard SFT is the attention pattern: batches
+tagged ``block_mode=True`` use Block-attention, others plain causal. With
+``mixed_block_full`` every sample is seen in both modes, which is what
 gives the paper's seamless block<->full switching (Table 2).
+
+Block-mode batches run the STRUCTURAL ragged path: ``fit`` builds a
+host-side ``BlockLayout`` from the batch's per-row ``block_lens`` (static
+pads pinned by the task-level ``layout_caps``, so every batch of a run
+shares one compile) and threads it through the jitted train step as a
+pytree argument — training FLOPs scale with Σ block_len² + L_final·S
+instead of S², exactly like prefill. Batches without ``block_lens`` fall
+back to the masked O(S²) path driven by ``block_ids``.
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.blocks import BlockLayout, ragged_layout
 from repro.core.config import ModelConfig, TrainConfig
 from repro.data.pipeline import PipelineConfig, batches, eval_batches
 from repro.data.synthetic import RagTaskConfig
@@ -24,9 +33,11 @@ from repro.training import optim
 
 
 def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
-            block_mode: bool, aux_weight: float = 0.01, remat: bool = False):
+            block_mode: bool, aux_weight: float = 0.01, remat: bool = False,
+            layout: Optional[BlockLayout] = None):
     logits, aux = api.forward_logits(params, cfg, batch,
-                                     block_mode=block_mode, remat=remat)
+                                     block_mode=block_mode, remat=remat,
+                                     layout=layout)
     labels = batch["labels"]
     mask = labels >= 0
     safe = jnp.maximum(labels, 0)
@@ -36,13 +47,33 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     return ce + aux_weight * aux, (ce, aux)
 
 
+def batch_layout(batch: Dict[str, Any],
+                 block_mode: bool) -> Optional[BlockLayout]:
+    """Host-side ``BlockLayout`` for a training batch, or None.
+
+    Built OUTSIDE jit from the pipeline's per-row ``block_lens``; the
+    task-level ``layout_caps`` pin the static pad signature (part of the
+    layout pytree's aux data — i.e. of the jit compile key), so ragged
+    batches of one task bucket into ONE structural compile.
+    """
+    if not block_mode or "block_lens" not in batch:
+        return None
+    caps = batch.get("layout_caps", (0, 0))
+    lay = ragged_layout(batch["block_lens"],
+                        max_block_len=int(caps[0]),
+                        max_final_len=int(caps[1]))
+    # the structural path reads only starts + the static pads: don't ship
+    # the (B, S) per-token ids to the device on the training hot loop
+    return dataclasses.replace(lay, block_ids=None)
+
+
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
                     block_mode: bool, remat: bool = False):
     @jax.jit
-    def step(params, opt_state, batch):
+    def step(params, opt_state, batch, layout=None):
         (loss, (ce, aux)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, cfg, batch, block_mode,
-                                   remat=remat)
+                                   remat=remat, layout=layout)
         params, opt_state, info = optim.adamw_update(
             params, grads, opt_state, tcfg)
         info = dict(info, loss=loss, ce=ce, aux=aux)
@@ -77,10 +108,15 @@ class Trainer:
         for i in range(num_steps):
             batch = next(data)
             block_mode = bool(batch.pop("block_mode", False))
+            layout = batch_layout(batch, block_mode)
+            # with a structural layout the per-token ids are dead weight —
+            # only the masked fallback reads them
+            keys = (("tokens", "labels") if layout is not None else
+                    ("tokens", "labels", "block_ids", "last_block"))
             jbatch = {k: jnp.asarray(v) for k, v in batch.items()
-                      if k in ("tokens", "labels", "block_ids", "last_block")}
+                      if k in keys}
             self.params, self.opt_state, info = self._step_fn(block_mode)(
-                self.params, self.opt_state, jbatch)
+                self.params, self.opt_state, jbatch, layout)
             if (i + 1) % log_every == 0 or i == 0:
                 rec = {k: float(v) for k, v in info.items()}
                 rec.update(step=i + 1, block_mode=block_mode,

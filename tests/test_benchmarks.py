@@ -80,6 +80,42 @@ def test_batch_decode_committed_baseline_schema():
     assert r["signatures"] > 1 and r["batches"] < r["requests"]
 
 
+def test_train_step_json_contract(tmp_path):
+    """train_step.run writes the BENCH_train_step.json schema future PRs
+    compare on — masked vs structural ragged on the SAME batch."""
+    from benchmarks import train_step
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=512, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_train_step.json"
+    lines = []
+    res = train_step.run([168], repeats=1, emit=lines.append,
+                         json_path=str(path), cfg=micro)
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "train_step"
+    for row in payload["results"].values():
+        assert {"masked_us", "structural_us", "speedup"} <= set(row)
+        # a single micro repeat is wall-clock noise: no speed assert here —
+        # the committed full-size baseline test below holds that bar
+        assert row["masked_us"] > 0 and row["structural_us"] > 0
+    assert res and any(line.startswith("train_step_struct_")
+                       for line in lines)
+
+
+def test_train_step_committed_baseline_schema():
+    """The committed BENCH_train_step.json satisfies the acceptance bar:
+    the structural ragged path strictly faster than the masked path at
+    S=2048 (and at every measured length)."""
+    payload = json.loads(
+        open(os.path.join(REPO, "BENCH_train_step.json")).read())
+    assert payload["benchmark"] == "train_step"
+    assert "2048" in payload["results"]
+    for row in payload["results"].values():
+        assert row["structural_us"] < row["masked_us"]
+        assert row["speedup"] > 1.0
+
+
 @pytest.mark.bench
 def test_run_smoke_mode():
     """`benchmarks/run.py --smoke` exercises every section end to end."""
@@ -94,3 +130,4 @@ def test_run_smoke_mode():
     assert "cache_shared_pool_request," in out.stdout
     assert "attn_block_S256_nb4," in out.stdout
     assert "batch_decode_mixed," in out.stdout
+    assert "train_step_struct_168," in out.stdout

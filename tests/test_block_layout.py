@@ -1,0 +1,247 @@
+"""The unified BlockLayout contract (DESIGN.md §6).
+
+  * pytree round-trip + static-signature compile bucketing;
+  * ragged structural path == mask oracle across GQA, logit softcap,
+    chunked layers and sliding window (attention level AND model level);
+  * the structural training forward never touches the O(S²) mask helpers;
+  * trainer end-to-end on variable-passage (ragged) batches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as A
+from repro.core.blocks import (
+    BlockLayout, from_row_lens, layout_from_lengths, ragged_layout,
+    uniform_layout,
+)
+from repro.core.config import TrainConfig
+from repro.data.pipeline import PipelineConfig, batches
+from repro.data.synthetic import RagTaskConfig, build_batch
+from repro.models import api
+from repro.training.trainer import Trainer, batch_layout, loss_fn
+
+from conftest import tiny_dense
+
+
+def _qkv(key, B, S, H, KV, D):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (jax.random.normal(k1, (B, S, H, D), jnp.float32),
+            jax.random.normal(k2, (B, S, KV, D), jnp.float32),
+            jax.random.normal(k3, (B, S, KV, D), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# The layout object itself
+# ---------------------------------------------------------------------------
+def test_layout_pytree_roundtrip_and_static_signature():
+    rows = np.array([[10, 22, 5, 11], [16, 16, 4, 12]])
+    lay = ragged_layout(rows, max_block_len=24, max_final_len=16)
+    leaves, treedef = jax.tree_util.tree_flatten(lay)
+    lay2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert lay2.signature == lay.signature == (4, 48, 24, 16, False)
+    np.testing.assert_array_equal(lay2.starts, lay.starts)
+    # two DIFFERENT ragged batches under the same caps share one treedef —
+    # i.e. one jit compile (the static signature is the aux data)
+    lay3 = ragged_layout(np.array([[5, 24, 8, 11], [20, 9, 7, 12]]),
+                         max_block_len=24, max_final_len=16)
+    assert (jax.tree_util.tree_structure(lay3)
+            == jax.tree_util.tree_structure(lay))
+    # different caps -> different compile bucket
+    lay4 = ragged_layout(rows, max_block_len=32, max_final_len=16)
+    assert (jax.tree_util.tree_structure(lay4)
+            != jax.tree_util.tree_structure(lay))
+
+
+def test_layout_constructors_agree():
+    u = uniform_layout(64, 4)
+    assert u.structural and u.uniform and u.signature[0] == 4
+    np.testing.assert_array_equal(u.starts, [0, 16, 32, 48, 64])
+    l = layout_from_lengths([10, 20, 34])
+    assert l.structural and not l.uniform
+    np.testing.assert_array_equal(l.starts, [0, 10, 30, 64])
+    # ids-only layout (vlm-style) is NOT structural -> mask path
+    ids_only = BlockLayout(jnp.zeros((2, 8), jnp.int32),
+                           jnp.zeros((2,), jnp.int32))
+    assert not ids_only.structural
+
+
+def test_from_row_lens_pads_block_counts():
+    """Serving bookkeeping: rows with fewer blocks pad with zero-length
+    blocks BEFORE the final entry so the final block index is shared."""
+    lay = from_row_lens([[64, 64, 16], [100, 12], [30]])
+    np.testing.assert_array_equal(lay.prefix_lens, [128, 100, 0])
+    np.testing.assert_array_equal(lay.final_lens, [16, 12, 30])
+    np.testing.assert_array_equal(lay.total_lens, [144, 112, 30])
+    deltas = lay.token_deltas(128)
+    np.testing.assert_array_equal(deltas[0, :128],
+                                  np.repeat([0, 64], 64))
+    np.testing.assert_array_equal(deltas[1, :100], np.zeros(100))
+    assert (deltas[2] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Ragged structural path vs mask oracle (attention level)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (4, 1)])   # MHA/GQA/MQA
+@pytest.mark.parametrize("window,chunk,softcap", [
+    (0, 0, 0.0),
+    (0, 0, 5.0),          # logit softcap
+    (8, 0, 0.0),          # sliding window
+    (0, 16, 0.0),         # chunked layer
+    (12, 16, 3.0),        # everything at once
+])
+def test_ragged_structural_matches_mask_oracle(H, KV, window, chunk, softcap):
+    B, D = 3, 16
+    rows = np.array([[10, 22, 5, 11], [16, 16, 4, 12], [3, 30, 7, 8]])
+    S = int(rows.sum(1)[0])
+    lay = ragged_layout(rows)
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = A.block_mask(pos, pos, lay.block_ids, lay.block_ids,
+                        lay.last_block_id, window=window, chunk=chunk)
+    o_ref = A.attention_ref(q, k, v, mask, D ** -0.5, softcap=softcap)
+    for dense in (True, False):
+        got = A.ragged_blockwise_prefill(q, k, v, lay, D ** -0.5,
+                                         kv_chunk=13, softcap=softcap,
+                                         dense=dense, window=window,
+                                         chunk=chunk)
+        np.testing.assert_allclose(got, o_ref, atol=3e-5)
+
+
+def test_uniform_layout_keeps_sliding_window():
+    """Regression: a UNIFORM structural layout on a sliding-window model
+    must not route to the folded form (which cannot express the window) —
+    logits must match the mask oracle exactly."""
+    cfg = tiny_dense(sliding_window=24)
+    B, S, nb = 2, 64, 4
+    rows = np.full((B, nb), S // nb)
+    lay = ragged_layout(rows)
+    assert lay.uniform and lay.structural
+    rng = np.random.default_rng(3)
+    tokens = rng.integers(5, cfg.vocab_size, (B, S)).astype(np.int32)
+    ids = np.repeat(np.arange(nb, dtype=np.int32), S // nb)
+    jb = {"tokens": jnp.asarray(tokens),
+          "block_ids": jnp.broadcast_to(jnp.asarray(ids), (B, S)),
+          "last_block": jnp.full((B,), nb - 1, jnp.int32)}
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    lg_struct, _ = api.forward_logits(params, cfg, jb, block_mode=True,
+                                      layout=lay)
+    lg_mask, _ = api.forward_logits(params, cfg, jb, block_mode=True)
+    np.testing.assert_allclose(lg_struct, lg_mask, atol=5e-4, rtol=1e-4)
+
+
+def test_ragged_structural_single_block_is_causal():
+    B, S, H, KV, D = 1, 40, 2, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, S, H, KV, D)
+    lay = ragged_layout(np.array([[S]]))
+    got = A.ragged_blockwise_prefill(q, k, v, lay, D ** -0.5)
+    pos = jnp.arange(S)[None]
+    want = A.attention_ref(q, k, v, A.block_mask(pos, pos), D ** -0.5)
+    np.testing.assert_allclose(got, want, atol=3e-5)
+
+
+def test_ragged_structural_grad_matches_mask_path():
+    """The training contract: gradients through the structural path equal
+    gradients through the realised-mask path."""
+    B, H, KV, D = 2, 2, 2, 8
+    rows = np.array([[8, 12, 6], [10, 10, 6]])
+    S = int(rows.sum(1)[0])
+    lay = ragged_layout(rows)
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, S, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = A.block_mask(pos, pos, lay.block_ids, lay.block_ids,
+                        lay.last_block_id)
+
+    g_struct = jax.grad(lambda x: A.ragged_blockwise_prefill(
+        x, k, v, lay, D ** -0.5).sum())(q)
+    g_mask = jax.grad(lambda x: A.attention_ref(
+        x, k, v, mask, D ** -0.5).sum())(q)
+    np.testing.assert_allclose(g_struct, g_mask, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Model-level parity: one layout object end to end
+# ---------------------------------------------------------------------------
+def _model_parity(cfg, task_kw=None):
+    task = RagTaskConfig(num_passages=3, passage_len=16, vocab_size=128,
+                         num_keys=24, num_values=24, queries_per_sample=2,
+                         variable_passage_len=True, **(task_kw or {}))
+    rng = np.random.default_rng(0)
+    b = build_batch(rng, task, 2)
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    jb = {k: jnp.asarray(v) for k, v in b.items()
+          if k in ("tokens", "labels", "block_ids", "last_block")}
+    lay = batch_layout(b, block_mode=True)
+    assert lay is not None and lay.structural
+    lg_struct, _ = api.forward_logits(params, cfg, jb, block_mode=True,
+                                      layout=lay)
+    lg_mask, _ = api.forward_logits(params, cfg, jb, block_mode=True)
+    np.testing.assert_allclose(lg_struct, lg_mask, atol=5e-4, rtol=1e-4)
+
+
+def test_model_parity_gqa():
+    _model_parity(tiny_dense())                       # 4 heads / 2 kv heads
+
+
+def test_model_parity_softcap():
+    _model_parity(tiny_dense(logit_softcap=30.0))
+
+
+def test_model_parity_sliding_window():
+    _model_parity(tiny_dense(sliding_window=24))
+
+
+def test_model_parity_chunked_layers():
+    # llama4-style: chunked attention on layer 0, global on layer 1
+    _model_parity(tiny_dense(attention_chunk=16, chunk_attn_every=2))
+
+
+def test_structural_forward_avoids_mask_helpers(monkeypatch):
+    """Acceptance: a ragged-layout training forward routes through the
+    structural path — neither block_mask nor causal_mask_fn is traced into
+    its computation (they'd realise the O(S²) mask)."""
+    cfg = tiny_dense()
+    task = RagTaskConfig(num_passages=3, passage_len=16, vocab_size=128,
+                         num_keys=24, num_values=24, queries_per_sample=2,
+                         variable_passage_len=True)
+    b = build_batch(np.random.default_rng(0), task, 2)
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    jb = {k: jnp.asarray(v) for k, v in b.items()
+          if k in ("tokens", "labels", "block_ids", "last_block")}
+    lay = batch_layout(b, block_mode=True)
+
+    def boom(*a, **kw):
+        raise AssertionError("O(S²) mask helper reached from the "
+                             "structural path")
+    monkeypatch.setattr(A, "block_mask", boom)
+    monkeypatch.setattr(A, "causal_mask_fn", boom)
+    # value_and_grad traces forward AND backward through the layers
+    loss, _ = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, jb, True, layout=lay)[0])(params)
+    assert np.isfinite(float(loss))
+    # sanity: WITHOUT the layout the mask path does reach the helpers
+    with pytest.raises(AssertionError, match="mask helper"):
+        loss_fn(params, cfg, jb, True)
+
+
+def test_trainer_structural_ragged_end_to_end():
+    """fit() on variable-passage batches builds the layout host-side and
+    the loss still goes down (structural path trains)."""
+    task = RagTaskConfig(num_passages=2, passage_len=12, vocab_size=128,
+                         num_keys=24, num_values=24, queries_per_sample=2,
+                         variable_passage_len=True)
+    cfg = tiny_dense()
+    tcfg = TrainConfig(learning_rate=3e-3, batch_size=16, total_steps=40,
+                       warmup_steps=5)
+    tr = Trainer.create(cfg, tcfg)
+    pipe = PipelineConfig(task=task, batch_size=16, mixed_block_full=True)
+    hist = tr.fit(batches(pipe), 40, log_every=39)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.9
+
+
+def test_batch_layout_falls_back_without_lens():
+    b = {"tokens": np.zeros((2, 8), np.int32)}
+    assert batch_layout(b, True) is None
+    assert batch_layout({"block_lens": np.array([[4, 4]])}, False) is None

@@ -70,6 +70,65 @@ def test_ragged_kernel_path_handles_uniform_and_single_block(lens):
     np.testing.assert_allclose(got, want, atol=ATOL[jnp.float32], rtol=1e-2)
 
 
+@pytest.mark.parametrize("rows", [
+    ((48, 112, 25, 71), (100, 17, 79, 60), (64, 64, 64, 64)),
+    ((13, 200, 43), (129, 100, 27), (255, 0, 1)),    # odd / non-tile-multiple
+    ((7, 5, 244), (250, 3, 3), (86, 85, 85)),        # tiny blocks vs tiles
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_attention_per_row_ragged(rows, dtype):
+    """Batched (B, nb+1) boundary operand: ONE launch serves rows with
+    DIFFERENT ragged signatures; each row == attention_ref with its own
+    Block-attention mask, and == the row-at-a-time single-layout call."""
+    rows = np.asarray(rows, np.int32)
+    B = rows.shape[0]
+    H, KV, D = 4, 2, 64
+    S = int(rows.sum(axis=1)[0])
+    q, k, v = _qkv(jax.random.PRNGKey(13), B, S, H, KV, D, dtype)
+    scale = D ** -0.5
+    got = ops.block_attention_prefill(q, k, v, scale=scale, block_lens=rows)
+    for b in range(B):
+        lens = [int(l) for l in rows[b] if l]
+        want = ref.block_attention_ragged_ref(q[b:b + 1], k[b:b + 1],
+                                              v[b:b + 1], lens, scale)
+        np.testing.assert_allclose(
+            got[b:b + 1].astype(jnp.float32), want.astype(jnp.float32),
+            atol=ATOL[dtype], rtol=1e-2)
+        single = ops.block_attention_prefill(q[b:b + 1], k[b:b + 1],
+                                             v[b:b + 1], scale=scale,
+                                             block_lens=lens)
+        np.testing.assert_allclose(
+            got[b:b + 1].astype(jnp.float32), single.astype(jnp.float32),
+            atol=ATOL[dtype], rtol=1e-2)
+
+
+def test_block_attention_layout_routing():
+    """ops.block_attention_prefill(layout=...) — the unified BlockLayout
+    object drives the same per-row kernel."""
+    from repro.core.blocks import ragged_layout
+    rows = np.array([[48, 112, 25, 71], [100, 17, 79, 60]])
+    B, H, KV, D = 2, 4, 2, 64
+    S = int(rows.sum(1)[0])
+    q, k, v = _qkv(jax.random.PRNGKey(14), B, S, H, KV, D, jnp.float32)
+    got = ops.block_attention_prefill(q, k, v, scale=D ** -0.5,
+                                      layout=ragged_layout(rows))
+    want = ops.block_attention_prefill(q, k, v, scale=D ** -0.5,
+                                       block_lens=rows)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_block_attention_per_row_bad_sums_raise():
+    B, H, KV, D = 2, 2, 2, 32
+    q, k, v = _qkv(jax.random.PRNGKey(15), B, 64, H, KV, D, jnp.float32)
+    with pytest.raises(ValueError):
+        ops.block_attention_prefill(q, k, v, scale=D ** -0.5,
+                                    block_lens=np.array([[32, 32],
+                                                         [32, 16]]))
+    with pytest.raises(ValueError):
+        ops.block_attention_prefill(q, k, v, scale=D ** -0.5,
+                                    block_lens=np.array([[32, 32]]))
+
+
 def test_block_attention_no_divisibility_assert():
     """num_blocks that doesn't divide S: remainder folds into the final
     (global) block instead of raising."""
@@ -211,6 +270,53 @@ def test_rope_shift_ragged_with_layer_dims():
         want_b = ops.reencode_block_kv(k[b], int(deltas[b]), rotary_dim=rd,
                                        theta=1e4)
         np.testing.assert_allclose(got[b], want_b, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S", [64, 600])     # incl. non-tile-multiple length
+def test_rope_shift_per_token_deltas(dtype, S):
+    """Per-TOKEN-delta kernel (paged assembly) == per-token scalar oracle."""
+    B, KV, D, rd = 2, 4, 64, 32
+    rng = np.random.default_rng(4)
+    deltas = jnp.asarray(rng.integers(0, 900, (B, S)), jnp.int32)
+    k = jax.random.normal(jax.random.PRNGKey(20), (B, S, KV, D),
+                          jnp.float32).astype(dtype)
+    got = ops.reencode_tokens_kv(k, deltas, rotary_dim=rd, theta=1e4)
+    want = jnp.stack([
+        jnp.concatenate([ref.rope_shift_ref(k[b, t:t + 1],
+                                            int(deltas[b, t]),
+                                            rotary_dim=rd, theta=1e4)
+                         for t in range(S)])
+        for b in range(B)])
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=max(ATOL[dtype], 1e-4), rtol=1e-2)
+
+
+def test_rope_shift_per_token_with_layer_dims():
+    """(G, B, S, KV, D) stacked cache slabs: layer groups fold into the
+    kernel batch, deltas stay (B, S) per token."""
+    G, B, S, KV, D, rd = 3, 2, 32, 2, 32, 32
+    deltas = jnp.asarray(
+        np.random.default_rng(5).integers(0, 200, (B, S)), jnp.int32)
+    k = jax.random.normal(jax.random.PRNGKey(21), (G, B, S, KV, D))
+    got = ops.reencode_tokens_kv(k, deltas, rotary_dim=rd, theta=1e4)
+    for g in range(G):
+        want_g = ops.reencode_tokens_kv(k[g], deltas, rotary_dim=rd,
+                                        theta=1e4)
+        np.testing.assert_allclose(got[g], want_g, atol=1e-5, rtol=1e-5)
+
+
+def test_rope_shift_per_token_constant_equals_per_row():
+    """A constant delta row reduces the per-token kernel to the per-row
+    one — the two kernels share one contract."""
+    B, S, KV, D, rd = 3, 64, 2, 64, 64
+    row_deltas = jnp.asarray([0, 77, 500], jnp.int32)
+    k = jax.random.normal(jax.random.PRNGKey(22), (B, S, KV, D))
+    tok = jnp.broadcast_to(row_deltas[:, None], (B, S))
+    got = ops.reencode_tokens_kv(k, tok, rotary_dim=rd, theta=1e4)
+    want = ops.reencode_blocks_kv(k, row_deltas, rotary_dim=rd, theta=1e4)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-2)
 
 
 def test_kernel_consistent_with_core_blockwise():

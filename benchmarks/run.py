@@ -4,6 +4,8 @@
   §2.5     -> cache (hit rate / reuse / eviction)
   Fig. 1   -> kernels_bench (block vs full attention geometry)
   Fig. 2 serving -> batch_decode (mixed-shape batched vs batch=1 tokens/s)
+  DESIGN §7 lifecycle -> serving (continuous batching vs static drain on
+                      Poisson mixed traffic: tokens/s, p50/p95 TTFT)
   §2.3 training  -> train_step (masked vs structural ragged block training)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
@@ -25,8 +27,10 @@ SMOKE_KERNEL_SIZES = [(256, 4)]
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
-                    default=["ttft", "cache", "kernels", "batch", "train"],
-                    choices=["ttft", "cache", "kernels", "batch", "train"])
+                    default=["ttft", "cache", "kernels", "batch", "serving",
+                             "train"],
+                    choices=["ttft", "cache", "kernels", "batch", "serving",
+                             "train"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -59,6 +63,16 @@ def main() -> None:
                              "repeats": 1, "passage_lens": (16, 24),
                              "query_lens": (8, 12)}
                             if args.smoke else {}))
+    if "serving" in args.sections:
+        from benchmarks import serving_latency
+        serving_latency.run(**({"n_requests": 6, "pool_size": 4,
+                                "passages_per_req": 2, "slots": 2,
+                                "decode_segment": 2, "repeats": 1,
+                                "mean_gap_s": 0.01,
+                                "passage_lens": (16, 24),
+                                "query_lens": (8, 12),
+                                "new_tokens": (2, 4, 6)}
+                               if args.smoke else {}))
     if "train" in args.sections:
         from benchmarks import train_step
         train_step.run([168] if args.smoke else [512, 2048],

@@ -1,0 +1,250 @@
+"""Request-lifecycle serving under Poisson mixed traffic (DESIGN.md §7).
+
+The workload a production RAG server actually meets: requests arrive as a
+Poisson process, retrieve ragged passage sets from a shared pool (mixed
+block-length signatures) and want HETEROGENEOUS output lengths. Two
+policies replay the SAME arrival schedule over the same engine:
+
+  * ``static``     — the pre-lifecycle drain: wait for a full batch (or
+    end of stream), then one ``generate_batch`` whose whole batch decodes
+    ``max(max_new_tokens)`` steps — a finished row wastes its slot until
+    every neighbour's scan ends, and later arrivals queue behind the
+    drain. This is the STRONG form of the baseline (full batches, one
+    compile): zero-wait flushing only does worse.
+  * ``continuous`` — ``BlockServer`` continuous batching: segmented scan
+    chunks over the fixed slot pool; rows retire at their own budget and
+    queued requests are assembled into the freed slots between segments.
+
+Reported per policy: end-to-end useful tokens/s (= requested tokens /
+replay wall), p50/p95 TTFT (arrival -> first token, queue wait included)
+and decode-slot occupancy. The committed baseline lives in
+BENCH_serving.json; the acceptance bar is continuous >= 1.2x static
+tokens/s on this CPU/interpret protocol.
+
+CSV: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine, pow2_bucket
+from repro.serving.server import BlockServer
+
+PASSAGE_LENS = (48, 64, 96)     # ragged retrieved-passage lengths
+QUERY_LENS = (28, 40, 50)       # ragged user-input lengths
+NEW_TOKENS = (4, 8, 16, 48)     # heterogeneous output budgets
+
+
+def bench_model() -> ModelConfig:
+    return ModelConfig(
+        name="bench-20m", arch_type="dense", num_layers=4, d_model=256,
+        num_heads=8, num_kv_heads=8, d_ff=768, vocab_size=4096,
+        dtype="float32", param_dtype="float32")
+
+
+def make_traffic(rng, n_requests: int, pool_size: int,
+                 passages_per_req: int, passage_lens=PASSAGE_LENS,
+                 query_lens=QUERY_LENS, new_tokens=NEW_TOKENS,
+                 vocab: int = 4096) -> List[Tuple[list, int]]:
+    """(blocks, max_new_tokens) per request, signatures + budgets mixed."""
+    pool = [rng.integers(5, vocab, int(passage_lens[i % len(passage_lens)]))
+            .astype(np.int32) for i in range(pool_size)]
+    reqs = []
+    for r in range(n_requests):
+        n = max(passages_per_req - r % 2, 1)
+        idx = rng.choice(pool_size, n, replace=False)
+        blocks = [pool[i] for i in idx]
+        blocks.append(rng.integers(5, vocab,
+                                   int(query_lens[r % len(query_lens)]))
+                      .astype(np.int32))
+        reqs.append((blocks, int(new_tokens[r % len(new_tokens)])))
+    return reqs
+
+
+def poisson_arrivals(rng, n: int, mean_gap_s: float) -> np.ndarray:
+    """Cumulative exponential inter-arrival times (a Poisson process)."""
+    return np.cumsum(rng.exponential(mean_gap_s, n))
+
+
+def _replay_continuous(engine, traffic, arrivals, slots: int, segment: int):
+    """Arrival-clocked replay through BlockServer continuous batching."""
+    server = BlockServer(engine, num_slots=slots, decode_segment=segment)
+    n = len(traffic)
+    comps = []
+    t0 = time.perf_counter()
+    i = 0
+    while len(comps) < n:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            blocks, nt = traffic[i]
+            server.submit(blocks, max_new_tokens=nt)
+            i += 1
+        if server.pending() or server.num_active:
+            comps.extend(server.step())
+        elif i < n:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 1e-3))
+    wall = time.perf_counter() - t0
+    ttfts = np.asarray([c.ttft_s for c in comps])
+    return wall, ttfts, server.occupancy
+
+
+def _replay_static(engine, traffic, arrivals, max_batch: int):
+    """Arrival-clocked replay through the static generate_batch drain."""
+    n = len(traffic)
+    pending: List[int] = []
+    ttfts = np.zeros(n)
+    done = 0
+    used_steps = total_steps = 0
+    t0 = time.perf_counter()
+    i = 0
+    while done < n:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            pending.append(i)
+            i += 1
+        if len(pending) >= max_batch or (i == n and pending):
+            group, pending = pending[:max_batch], pending[max_batch:]
+            nts = [traffic[g][1] for g in group]
+            call0 = time.perf_counter() - t0
+            res = engine.generate_batch([traffic[g][0] for g in group],
+                                        max_new_tokens=max(nts))
+            for g in group:
+                ttfts[g] = call0 + res.ttft_s - arrivals[g]
+            used_steps += sum(nts)           # useful slot-steps
+            total_steps += max(nts) * len(group)   # drained slot-steps
+            done += len(group)
+        elif i < n:
+            time.sleep(1e-3)
+    wall = time.perf_counter() - t0
+    return wall, ttfts, used_steps / max(total_steps, 1)
+
+
+def run(n_requests: int = 24, pool_size: int = 8, passages_per_req: int = 3,
+        slots: int = 4, decode_segment: int = 4,
+        mean_gap_s: float = 0.05, repeats: int = 3,
+        emit=print, json_path: Optional[str] = None,
+        cfg: Optional[ModelConfig] = None,
+        passage_lens=PASSAGE_LENS, query_lens=QUERY_LENS,
+        new_tokens=NEW_TOKENS):
+    cfg = cfg or bench_model()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    traffic = make_traffic(rng, n_requests, pool_size, passages_per_req,
+                           passage_lens, query_lens, new_tokens,
+                           vocab=cfg.vocab_size)
+    arrivals = poisson_arrivals(rng, n_requests, mean_gap_s)
+    max_prefix = max(sum(len(b) for b in blocks[:-1])
+                     for blocks, _ in traffic)
+    max_final = max(len(blocks[-1]) for blocks, _ in traffic)
+    max_seq = (pow2_bucket(max_prefix) + pow2_bucket(max_final)
+               + max(new_tokens) + 8)
+    engine = BlockAttentionEngine(params, cfg, max_seq=max_seq)
+    tokens_total = sum(nt for _, nt in traffic)
+
+    # warm: fill the block store and compile both policies' programs —
+    # an all-at-once replay (pool-direct + refill admission widths) plus
+    # one arrival-clocked replay per policy for the timing-dependent ones
+    _replay_continuous(engine, traffic, np.zeros(n_requests), slots,
+                       decode_segment)
+    _replay_continuous(engine, traffic, arrivals, slots, decode_segment)
+    _replay_static(engine, traffic, arrivals, slots)
+
+    cont = [_replay_continuous(engine, traffic, arrivals, slots,
+                               decode_segment) for _ in range(repeats)]
+    stat = [_replay_static(engine, traffic, arrivals, slots)
+            for _ in range(repeats)]
+
+    def agg(runs):
+        # min-wall replay: admission group composition is arrival-timing
+        # dependent, so a replay can hit a not-yet-warm (P_pad, W) bucket
+        # and pay a one-time compile; the min over repeats is the
+        # compile-free steady state both policies are judged on
+        wall, ttfts, occ = runs[int(np.argmin([w for w, _, _ in runs]))]
+        return {
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(tokens_total / wall, 2),
+            "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
+            "ttft_p95_s": round(float(np.percentile(ttfts, 95)), 4),
+            "slot_occupancy": round(float(occ), 4),
+        }
+
+    r_cont, r_stat = agg(cont), agg(stat)
+    speedup = r_cont["tokens_per_s"] / r_stat["tokens_per_s"]
+    results = {
+        "requests": n_requests,
+        "signatures": len({tuple(len(b) for b in blocks)
+                           for blocks, _ in traffic}),
+        "new_tokens": sorted({nt for _, nt in traffic}),
+        "tokens_total": tokens_total,
+        "num_slots": slots,
+        "decode_segment": decode_segment,
+        "mean_arrival_gap_s": mean_gap_s,
+        "static": r_stat,
+        "continuous": r_cont,
+        "speedup": round(speedup, 3),
+    }
+    emit(f"serving_static,{r_stat['wall_s'] * 1e6 / n_requests:.0f},"
+         f"{r_stat['tokens_per_s']:.1f} tok/s "
+         f"(p95 ttft {r_stat['ttft_p95_s'] * 1e3:.0f}ms, "
+         f"occ {r_stat['slot_occupancy']:.2f})")
+    emit(f"serving_continuous,{r_cont['wall_s'] * 1e6 / n_requests:.0f},"
+         f"{r_cont['tokens_per_s']:.1f} tok/s "
+         f"(p95 ttft {r_cont['ttft_p95_s'] * 1e3:.0f}ms, "
+         f"occ {r_cont['slot_occupancy']:.2f}, "
+         f"speedup={speedup:.2f}x)")
+
+    if json_path:
+        payload = {
+            "benchmark": "serving_latency",
+            "protocol": {
+                "model": cfg.name, "passage_lens": list(passage_lens),
+                "query_lens": list(query_lens),
+                "new_tokens": list(new_tokens),
+                "passages_per_req": passages_per_req,
+                "pool_size": pool_size, "repeats": repeats,
+                "mean_arrival_gap_s": mean_gap_s,
+                "backend": jax.default_backend(),
+                "machine": platform.machine(),
+                "note": "CPU/interpret wall clock; warm store + warm jit; "
+                        "same Poisson arrival schedule replayed through "
+                        "both policies; min-wall replay reported (compile "
+                        "blips on timing-dependent admission shapes are "
+                        "one-time, not steady state)",
+            },
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        emit(f"# wrote {json_path}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--pool", type=int, default=8)
+    ap.add_argument("--passages", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--decode-segment", type=int, default=4)
+    ap.add_argument("--mean-gap", type=float, default=0.05)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default=None,
+                    help="write results (e.g. BENCH_serving.json)")
+    args = ap.parse_args()
+    run(args.requests, args.pool, args.passages, args.slots,
+        args.decode_segment, args.mean_gap, args.repeats,
+        json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,25 @@
-"""RAG serving example (deliverable b): a multi-turn session where the
-engine's cross-request block cache eliminates passage re-encoding —
-the paper's Fig. 2 pipeline with live TTFT accounting.
+"""RAG serving example: the request-lifecycle ``BlockServer`` API
+(DESIGN.md §7) over a live multi-turn session.
+
+Walkthrough:
+  1. ``submit()`` enqueues requests — each with its own sampling params,
+     output budget, stop set and stream callback;
+  2. ``run()`` drives continuous batching over a 4-slot decode pool:
+     requests retire at their own length and queued ones refill the freed
+     slots between ``decode_segment``-token scan chunks;
+  3. tokens arrive through the stream callback as they are produced;
+  4. the cross-request block cache eliminates passage re-encoding across
+     turns — the paper's Fig. 2 pipeline with per-request TTFT accounting.
 
   PYTHONPATH=src python examples/rag_serving.py
 """
-import time
-
 import jax
 import numpy as np
 
 from repro.core.config import ModelConfig
 from repro.models import api
 from repro.serving.engine import BlockAttentionEngine
-from repro.serving.scheduler import Scheduler
+from repro.serving.server import BlockServer, SamplingParams
 
 cfg = ModelConfig(name="rag-serve", arch_type="dense", num_layers=6,
                   d_model=384, num_heads=6, num_kv_heads=6, d_ff=1024,
@@ -23,25 +30,43 @@ rng = np.random.default_rng(0)
 # a document store of 12 passages; queries retrieve 5 of them
 corpus = [rng.integers(5, 2048, 64).astype(np.int32) for _ in range(12)]
 engine = BlockAttentionEngine(params, cfg, max_seq=512)
-sched = Scheduler(max_batch=4)
+server = BlockServer(engine, num_slots=4, decode_segment=4)
 
-print("turn,batch,ttft_ms,reuse_pct,store_blocks")
+streamed = {}          # rid -> tokens, filled live by the callback
+
+
+def on_token(ev):
+    streamed.setdefault(ev.rid, []).append(ev.token)
+
+
+print("turn,rid,tokens,finish,ttft_ms,decode_ms,reuse_pct,store_blocks")
 for turn in range(6):
-    # 4 concurrent user queries hitting overlapping retrievals
-    for _ in range(4):
+    # 6 concurrent user queries per turn over a 4-slot pool: continuous
+    # batching admits the overflow as soon as short answers retire.
+    # Heterogeneous budgets + per-request sampling: even rids answer
+    # greedily in 3 tokens, odd rids sample 6 (temperature 0.7, top-k 20).
+    for i in range(6):
         idx = rng.choice(12, 5, replace=False)
-        blocks = [corpus[i] for i in idx]
+        blocks = [corpus[j] for j in idx]
         blocks.append(rng.integers(5, 2048, 24).astype(np.int32))
-        sched.submit(blocks, max_new_tokens=4)
-    batch = sched.next_batch()
-    res = engine.generate_batch([r.blocks for r in batch.requests],
-                                max_new_tokens=4)
-    reuse = 100 * (1 - res.prefill_tokens_computed
-                   / res.prefill_tokens_total)
-    print(f"{turn},{len(batch.requests)},{res.ttft_s * 1e3:.1f},"
-          f"{reuse:.0f},{len(engine.store)}", flush=True)
+        server.submit(
+            blocks,
+            max_new_tokens=3 if i % 2 == 0 else 6,
+            sampling=None if i % 2 == 0 else
+            SamplingParams(temperature=0.7, top_k=20, seed=100 * turn + i),
+            stream_cb=on_token)
+    for c in server.run():
+        reuse = 100 * c.cache_hit_tokens / c.prefill_tokens_total
+        assert list(c.tokens) == streamed[c.rid]   # stream == completion
+        print(f"{turn},{c.rid},{len(c.tokens)},{c.finish_reason},"
+              f"{c.ttft_s * 1e3:.1f},{c.decode_s * 1e3:.1f},{reuse:.0f},"
+              f"{len(engine.store)}", flush=True)
 
-print(f"\nfinal store: {len(engine.store)} blocks "
+stats = server.stats()
+print(f"\nserver: occupancy {stats['occupancy']:.2f} over "
+      f"{stats['segments']} segments of {stats['decode_segment']} tokens, "
+      f"{stats['admitted_groups']} admission groups")
+print(f"final store: {len(engine.store)} blocks "
       f"({engine.store.nbytes / 2**20:.1f} MiB), "
       f"hit rate {engine.store.hit_rate:.2f}")
 print("note how reuse climbs to ~100% once the corpus is cached — "

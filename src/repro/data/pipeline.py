@@ -3,11 +3,20 @@
 Implements the paper's §3.1 recipe: every sample is consumed in BOTH
 attention modes (block + full) when ``mixed_block_full`` is on — the trainer
 alternates the mask, the data pipeline just tags batches.
+
+Multi-signature runs: a run may interleave MULTIPLE tasks whose
+``layout_caps`` (and sample lengths) differ — e.g. short-passage chat
+traffic next to long-passage RAG. Batches round-robin across ``tasks``
+and each carries its OWN ``layout_caps``, so the trainer's jitted step
+buckets by ``layout_signature``: the ``BlockLayout`` static pads are part
+of the jit compile key (DESIGN.md §6), hence exactly ONE structural
+compile per signature for the whole run, regardless of how the ragged
+per-row lengths vary inside each signature.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -16,10 +25,28 @@ from repro.data.synthetic import RagTaskConfig, build_batch
 
 @dataclasses.dataclass
 class PipelineConfig:
-    task: RagTaskConfig
+    task: Optional[RagTaskConfig] = None       # single-task runs (legacy)
+    tasks: Sequence[RagTaskConfig] = ()        # multi-signature runs
     batch_size: int = 64
     mixed_block_full: bool = True
     seed: int = 0
+
+    def all_tasks(self) -> Tuple[RagTaskConfig, ...]:
+        out = ((self.task,) if self.task is not None else ()) \
+            + tuple(self.tasks)
+        assert out, "PipelineConfig needs task= or tasks="
+        return out
+
+
+def layout_signature(batch: Dict[str, np.ndarray]) -> Tuple[int, int, int]:
+    """(seq_len, max_block_len, max_final_len) — the compile-bucket key.
+
+    Two batches with equal signatures share one jitted train-step compile
+    (the caps pin the ``BlockLayout`` static pads, the seq len pins the
+    token shapes); distinct signatures each compile once per run.
+    """
+    caps = batch.get("layout_caps", (0, 0))
+    return (int(batch["tokens"].shape[1]), int(caps[0]), int(caps[1]))
 
 
 def batches(cfg: PipelineConfig) -> Iterator[Dict[str, np.ndarray]]:
@@ -27,16 +54,22 @@ def batches(cfg: PipelineConfig) -> Iterator[Dict[str, np.ndarray]]:
 
     With mixed training, the same underlying samples are yielded twice —
     once per attention mode — matching "all samples in the training set will
-    be trained in both ways" (paper §3.1).
+    be trained in both ways" (paper §3.1). With multiple tasks, one batch
+    per task per round, in ``all_tasks()`` order (a deterministic
+    round-robin keeps every signature's compile warm and the loss mix
+    stationary).
     """
-    rng = np.random.default_rng(cfg.seed)
+    tasks = cfg.all_tasks()
+    rngs = [np.random.default_rng(cfg.seed + 7919 * i)
+            for i in range(len(tasks))]
     while True:
-        batch = build_batch(rng, cfg.task, cfg.batch_size)
-        if cfg.mixed_block_full:
-            yield dict(batch, block_mode=True)
-            yield dict(batch, block_mode=False)
-        else:
-            yield dict(batch, block_mode=False)
+        for task, rng in zip(tasks, rngs):
+            batch = build_batch(rng, task, cfg.batch_size)
+            if cfg.mixed_block_full:
+                yield dict(batch, block_mode=True)
+                yield dict(batch, block_mode=False)
+            else:
+                yield dict(batch, block_mode=False)
 
 
 def eval_batches(task: RagTaskConfig, batch_size: int, num_batches: int,

@@ -275,7 +275,10 @@ def reencode_blocks_kv(k, deltas, rotary_dim: int, theta: float,
     k: (nb, ..., S, KV, D) stacked per-block zero-based keys (inner leading
     dims — layers/groups — fold into the kernel's batch axis);
     deltas: (nb,) int32 per-block target offsets. ONE kernel launch for the
-    whole fetched block set — the single-dispatch KV-assembly primitive.
+    whole fetched block set. Library surface: the serving assembly itself
+    now runs the per-TOKEN form (``reencode_tokens_kv`` — every request
+    assembles through the paged path, DESIGN.md §7); this per-BLOCK form
+    remains for callers holding stacked equal-padded block sets.
     """
     nb = k.shape[0]
     flat = k.reshape((nb, -1) + k.shape[-3:])         # (nb, M, S, KV, D)

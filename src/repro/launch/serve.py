@@ -1,8 +1,16 @@
-"""Serving launcher: run the Block-attention engine over a stream of
-synthetic RAG requests, exercising the cross-request block cache.
+"""Serving launcher: run the request-lifecycle ``BlockServer`` over a
+stream of synthetic RAG requests — continuous batching over the slot
+pool, per-request sampling, streamed tokens, and the cross-request block
+cache (DESIGN.md §7).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tulu3-8b --smoke \
-      --requests 16 --passages 6 --shared-pool 12
+      --requests 16 --passages 6 --shared-pool 12 --mixed
+
+Per completion, one JSON line with the PER-REQUEST lifecycle numbers
+(ttft_s includes queue wait; decode_s runs first token -> retirement);
+the trailer reports server occupancy + store reuse. Recurrent archs have
+no KV slot pool and fall back to per-request ``engine.generate``
+(prefix-granular reuse still applies).
 """
 from __future__ import annotations
 
@@ -16,16 +24,21 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import api
 from repro.serving.engine import BlockAttentionEngine
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import pow2_bucket
+from repro.serving.server import BlockServer, SamplingParams
 
 
 def make_request_stream(rng, num_requests, passages_per_req, passage_len,
-                        query_len, shared_pool, vocab, mixed=False):
+                        query_len, shared_pool, vocab, mixed=False,
+                        max_new=8, mixed_new=False):
     """Requests draw passages from a shared pool — the RAG reuse pattern.
 
     ``mixed`` draws ragged passage/query lengths (real RAG traffic): the
-    scheduler's padded-length buckets and the engine's paged per-row batch
-    decode then batch the differing signatures together (DESIGN.md §5).
+    admission queue's padded-length buckets and the engine's paged per-row
+    batch decode then batch the differing signatures together (DESIGN.md
+    §5). ``mixed_new`` additionally varies the output budget per request —
+    the heterogeneous-length case where continuous batching shines: short
+    answers retire and their slots refill mid-traffic.
     """
     plens = ([max(passage_len // 2, 1), passage_len,
               passage_len + passage_len // 2] if mixed else [passage_len])
@@ -37,7 +50,9 @@ def make_request_stream(rng, num_requests, passages_per_req, passage_len,
         blocks = [pool[i] for i in idx]
         qlen = query_len - (r % 3 if mixed else 0)
         blocks.append(rng.integers(5, vocab, max(qlen, 1)).astype(np.int32))
-        yield blocks
+        nt = max_new if not mixed_new else \
+            int(rng.integers(max(max_new // 4, 1), max_new + 1))
+        yield blocks, nt
 
 
 def main():
@@ -49,15 +64,21 @@ def main():
     ap.add_argument("--passage-len", type=int, default=32)
     ap.add_argument("--query-len", type=int, default=16)
     ap.add_argument("--shared-pool", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slot-pool width (the fixed batch compile)")
+    ap.add_argument("--decode-segment", type=int, default=4,
+                    help="tokens per scan chunk between retirement checks")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--mixed", action="store_true",
                     help="ragged passage/query lengths (paged batch path)")
-    ap.add_argument("--pad-batch", action="store_true",
-                    help="pad partial bucket flushes up to --batch width so "
-                         "every batch hits the one full-width compile per "
-                         "bucket (costs duplicated-row compute; worth it "
-                         "when compile stalls dominate, e.g. on TPU)")
+    ap.add_argument("--mixed-new", action="store_true",
+                    help="heterogeneous per-request output budgets "
+                         "(continuous-batching slot refill)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print a line per streamed token")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -65,57 +86,76 @@ def main():
     params = api.model_init(jax.random.PRNGKey(args.seed), cfg)
     # +passage_len//2 headroom: mixed traffic draws up to 1.5x passages, and
     # the paged engine pads prefixes/finals up to the next power of two
-    from repro.serving.scheduler import pow2_bucket
     max_prefix = args.passages * (args.passage_len + args.passage_len // 2
                                   if args.mixed else args.passage_len)
     max_seq = (pow2_bucket(max_prefix) + pow2_bucket(args.query_len)
                + args.max_new_tokens + 8)
     engine = BlockAttentionEngine(params, cfg, max_seq=max_seq)
-    sched = Scheduler(max_batch=args.batch)
 
     rng = np.random.default_rng(args.seed)
     stream = list(make_request_stream(
         rng, args.requests, args.passages, args.passage_len,
-        args.query_len, args.shared_pool, cfg.vocab_size, mixed=args.mixed))
-    for blocks in stream:
-        sched.submit(blocks, args.max_new_tokens)
+        args.query_len, args.shared_pool, cfg.vocab_size, mixed=args.mixed,
+        max_new=args.max_new_tokens, mixed_new=args.mixed_new))
 
+    if args.top_k > 0 and args.temperature <= 0:
+        raise SystemExit("--top-k only filters SAMPLED decode: pass "
+                         "--temperature > 0 as well (temperature 0 "
+                         "takes the argmax and ignores top-k)")
     t0 = time.perf_counter()
-    done = 0
-    use_batched = not cfg.is_recurrent()
-    while sched.pending():
-        batch = sched.next_batch()
-        if batch is None:
-            break
-        if use_batched:
-            # singletons too: generate_batch's bucket-padded shapes reuse
-            # the bucket compile, where generate() would jit-specialise on
-            # the exact signature (one compile per distinct shape)
-            results = [(len(batch.requests), engine.generate_batch(
-                [r.blocks for r in batch.requests], args.max_new_tokens,
-                pad_batch_to=args.batch if args.pad_batch else 0))]
-        else:
-            # recurrent archs have no batched path: serve EVERY request of
-            # the bucket individually (prefix-granular reuse still applies)
-            results = [(1, engine.generate(r.blocks, args.max_new_tokens))
-                       for r in batch.requests]
-        done += len(batch.requests)
-        for bsz, res in results:
+    if cfg.is_recurrent():
+        if args.temperature > 0 or args.top_k > 0 or args.stream:
+            raise SystemExit(
+                "recurrent archs serve through engine.generate (greedy, "
+                "no slot pool): --temperature/--top-k/--stream need an "
+                "attention arch")
+        # no batched KV path: serve per-request (prefix reuse still applies)
+        for blocks, nt in stream:
+            res = engine.generate(blocks, nt)
             print(json.dumps({
-                "batch": bsz, "ttft_s": round(res.ttft_s, 4),
+                "ttft_s": round(res.ttft_s, 4),
                 "computed_tokens": res.prefill_tokens_computed,
                 "total_tokens": res.prefill_tokens_total,
                 "reuse_frac": round(1 - res.prefill_tokens_computed
                                     / max(res.prefill_tokens_total, 1), 3),
             }), flush=True)
+        done = len(stream)
+        trailer = {}
+    else:
+        server = BlockServer(engine, num_slots=args.slots,
+                             decode_segment=args.decode_segment)
+        cb = (lambda ev: print(json.dumps({
+            "rid": ev.rid, "token": int(ev.token), "index": ev.index,
+            "finished": ev.finished}), flush=True)) if args.stream else None
+        for i, (blocks, nt) in enumerate(stream):
+            # distinct seed per request: each sample stream is private
+            sampling = SamplingParams(temperature=args.temperature,
+                                      top_k=args.top_k,
+                                      seed=args.seed * 100003 + i) \
+                if args.temperature > 0 else None
+            server.submit(blocks, max_new_tokens=nt, sampling=sampling,
+                          stream_cb=cb)
+        for c in server.run():
+            print(json.dumps({
+                "rid": c.rid, "tokens": len(c.tokens),
+                "finish": c.finish_reason,
+                "ttft_s": round(c.ttft_s, 4),
+                "decode_s": round(c.decode_s, 4),
+                "computed_tokens": c.prefill_tokens_computed,
+                "total_tokens": c.prefill_tokens_total,
+                "reuse_frac": round(c.cache_hit_tokens
+                                    / max(c.prefill_tokens_total, 1), 3),
+            }), flush=True)
+        done = args.requests
+        trailer = server.stats()
     wall = time.perf_counter() - t0
-    print(json.dumps({
+    print(json.dumps(dict(trailer, **{
         "requests": done, "wall_s": round(wall, 2),
         "store_blocks": len(engine.store), "store_hits": engine.store.hits,
         "store_misses": engine.store.misses,
         "hit_rate": round(engine.store.hit_rate, 3),
         "store_bytes": engine.store.nbytes,
-    }))
+    })))
 
 
 if __name__ == "__main__":

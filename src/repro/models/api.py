@@ -25,6 +25,55 @@ def model_init(key, cfg: ModelConfig):
     return T.init_params(key, cfg)
 
 
+# ---------------------------------------------------------------------------
+# Per-row sampling (the serving decode step's token choice)
+# ---------------------------------------------------------------------------
+def split_row_keys(keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One PRNG split per batch row: (B, 2) uint32 -> (carry, use) keys.
+
+    The decode scan carries the first half and consumes the second, so a
+    request's sample stream depends only on its own ``SamplingParams.seed``
+    — never on which slot it landed in or who its batch neighbours are.
+    """
+    out = jax.vmap(lambda k: jax.random.split(k, 2))(keys)      # (B, 2, 2)
+    return out[:, 0], out[:, 1]
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  temperature: jax.Array, top_k: jax.Array,
+                  use_top_k: bool = True) -> jax.Array:
+    """Vectorised per-row token sampling — greedy / temperature / top-k.
+
+    logits (B, V) f32; keys (B, 2) uint32 per-row PRNG keys;
+    temperature (B,) f32 — rows with ``temperature <= 0`` take the argmax
+    (bitwise identical to the greedy decode path, which is what pins the
+    per-row-temperature-0 == greedy invariant); top_k (B,) int32 — rows
+    with ``top_k <= 0`` sample the full vocabulary, otherwise logits below
+    the row's k-th largest are masked out (ties at the threshold are kept,
+    so a tie can admit more than k candidates).
+
+    ``use_top_k`` is a STATIC flag (part of the caller's jit compile key):
+    False skips the O(B·V·log V) per-step threshold sort entirely — the
+    server sets it per segment, so temperature-only traffic never pays
+    for a filter no active row asked for.
+    """
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if use_top_k:
+        # per-row top-k threshold from one descending sort (k is a traced
+        # per-row value, so lax.top_k's static k does not apply)
+        sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+        kth = jnp.clip(top_k, 1, V) - 1
+        thr = jnp.take_along_axis(sorted_desc, kth[:, None], axis=-1)
+        keep = (top_k[:, None] <= 0) | (logits >= thr)
+        logits = jnp.where(keep, logits, -jnp.inf)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(
+        keys, logits / temp).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy_tok)
+
+
 def _text_ctx(batch: Dict[str, Any], block_mode: bool, structural_blocks: int,
               collect_kv: bool = False, impl: str = "flash",
               fold_spec=None, layout: Optional[BlockLayout] = None
@@ -38,9 +87,16 @@ def _text_ctx(batch: Dict[str, Any], block_mode: bool, structural_blocks: int,
       4. none -> plain causal.
 
     ``block_mode=False`` (the paper's full mode) forces plain causal.
+
+    ``impl`` may be "auto": resolved by ``T.resolve_impl`` to the Pallas
+    kernels on real TPU and the jnp flash path elsewhere (inference
+    prefill only — the kernels have no custom VJP, so training keeps the
+    differentiable default).
     """
+    impl = T.resolve_impl(impl)
     tokens = batch["tokens"]
     B, S = tokens.shape
+    std_positions = "positions" not in batch
     positions = batch.get(
         "positions",
         jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)))
@@ -57,6 +113,7 @@ def _text_ctx(batch: Dict[str, Any], block_mode: bool, structural_blocks: int,
         layout=layout,
         collect_kv=collect_kv,
         impl=impl,
+        std_positions=std_positions,
         fold_spec=fold_spec,
     )
 
@@ -109,7 +166,7 @@ def prefill(
     block_mode: bool = True,
     structural_blocks: int = 0,
     initial_states: Optional[dict] = None,
-    impl: str = "flash",
+    impl: str = "auto",
     unroll: bool = False,
     fold_spec=None,
     layout: Optional[BlockLayout] = None,
@@ -119,7 +176,13 @@ def prefill(
     collected_kv: per group-position {"k","v"} of shape (G, B, S, KV, D) —
     RoPE'd at the batch's positions (zero-based when encoding a lone block,
     which is exactly what the BlockKVStore wants).
+
+    ``impl`` defaults to "auto" — this is the INFERENCE prefill entry, so
+    on real TPU it dispatches the Pallas kernels (``flash_block_ragged``
+    for structural block layouts, ``flash_causal`` for plain causal) and
+    the jnp flash path on CPU/interpret; REPRO_PREFILL_IMPL overrides.
     """
+    impl = T.resolve_impl(impl)
     if cfg.arch_type == "audio":
         layout = batch.get("frame_block_ids") if block_mode else None
         enc = encdec.encode(params, cfg, batch["frames"], layout)

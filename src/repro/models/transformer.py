@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -41,6 +42,7 @@ from repro.core.config import (
 )
 from repro.core.kv_cache import cache_update
 from repro.core.rope import apply_rope
+from repro.kernels import ops
 from repro.nn import layers as L
 from repro.nn import mamba as M
 from repro.nn import moe as MOE
@@ -154,6 +156,20 @@ def init_params(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 # Execution context
 # ---------------------------------------------------------------------------
+def resolve_impl(impl: str) -> str:
+    """Resolve the "auto" prefill backend: Pallas kernels on real TPU, the
+    jnp flash path everywhere else (the same switch shape as the engine's
+    ``rope_backend``). The REPRO_PREFILL_IMPL env var replaces the default;
+    an explicit non-"auto" argument always wins. Resolution happens at
+    trace time, so it is part of whatever jit cache wraps the forward."""
+    if impl == "auto":
+        impl = os.environ.get("REPRO_PREFILL_IMPL", "auto")
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "flash"
+    assert impl in ("flash", "dense", "kernel"), impl
+    return impl
+
+
 @dataclasses.dataclass(frozen=True)
 class AttnCtx:
     kind: str                                 # prefill | decode
@@ -165,6 +181,10 @@ class AttnCtx:
     kv_chunk: int = 512
     collect_kv: bool = False                  # prefill: return per-layer KV
     impl: str = "flash"                       # flash | dense (dry-run/tests)
+                                              # | kernel (Pallas prefill)
+    std_positions: bool = False               # positions ARE the default
+                                              # per-row arange (static fact;
+                                              # gates index-based kernels)
     fold_spec: Any = None                     # §Perf block-parallel sharding
 
 
@@ -223,10 +243,26 @@ def _masked_attention(q, k, v, cfg, ctx: AttnCtx, scale, q_pos, kv_pos, *,
 
 
 def _prefill_attention(q, k, v, cfg, ctx: AttnCtx, scale, window, chunk):
-    """Full-sequence attention dispatched on ``ctx.layout`` alone."""
+    """Full-sequence attention dispatched on ``ctx.layout`` alone.
+
+    ``ctx.impl == "kernel"`` routes the two window/chunk-free geometries
+    onto the Pallas kernels — plain causal -> ``ops.causal_attention``
+    (``flash_causal``), structural block layouts ->
+    ``ops.block_attention_prefill`` (the batched-boundary
+    ``flash_block_ragged``, one launch per layer for any per-row ragged
+    signature). Windowed / chunked layers and ids-only layouts have no
+    kernel twin and silently keep the jnp flash path, so a mixed layer
+    schedule (llama4) still compiles. The plain-causal kernel masks by
+    token INDEX, so it additionally requires ``ctx.std_positions`` —
+    custom-position batches (packed / left-padded / vlm-merged rows)
+    keep the position-aware flash path. (The structural paths already
+    derive their masks from indices, flash and kernel alike, so a
+    ``BlockLayout`` implies standard positions by contract.)
+    """
     B, S = q.shape[:2]
     lay = ctx.layout
     dense = ctx.impl == "dense"
+    kernel = ctx.impl == "kernel" and not window and not chunk
 
     if lay is None or (lay.uniform and lay.num_blocks == 1):
         # plain causal (the paper's full mode)
@@ -236,9 +272,24 @@ def _prefill_attention(q, k, v, cfg, ctx: AttnCtx, scale, window, chunk):
                                        kv_chunk=ctx.kv_chunk,
                                        softcap=cfg.logit_softcap,
                                        final_global=False, dense=dense)
+        if kernel and ctx.std_positions:
+            return ops.causal_attention(q, k, v, scale,
+                                        softcap=cfg.logit_softcap)
         return _masked_attention(q, k, v, cfg, ctx, scale,
                                  ctx.positions, ctx.positions,
                                  window=window, chunk=chunk)
+
+    if kernel and lay.structural and S == lay.seq_len:
+        # Pallas block prefill: the uniform divisible case folds blocks
+        # into the batch grid dimension; everything else runs the ragged
+        # batched-boundary kernel driven by the layout's ``starts``.
+        if lay.uniform and S % lay.num_blocks == 0:
+            return ops.block_attention_prefill(
+                q, k, v, num_blocks=lay.num_blocks, scale=scale,
+                softcap=cfg.logit_softcap)
+        return ops.block_attention_prefill(q, k, v, scale=scale,
+                                           softcap=cfg.logit_softcap,
+                                           layout=lay)
 
     # a sliding window cuts INTO uniform blocks, which the folded reshape
     # form cannot express — route windowed layouts to the ragged structural

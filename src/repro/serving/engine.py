@@ -28,12 +28,11 @@ signature. (The model decode path uses the dense jnp
 TPU kernel twin honouring the same per-row contract with per-row tile
 skipping, parity-tested but not dispatched from the model layers.)
 
-On TPU the assembly rope runs as a ``rope_shift`` kernel — the batched
-per-block-delta form in the static ``_assemble`` (``ops.reencode_blocks_kv``)
-and the per-TOKEN-delta form in the paged ``_assemble_paged``
-(``ops.reencode_tokens_kv``); on CPU/interpret the numerically equivalent
-vectorised jnp rope inside the same jitted call is faster. ``rope_backend``
-selects ("auto" picks by ``jax.default_backend()``; the
+On TPU the assembly rope runs as the per-TOKEN-delta ``rope_shift`` kernel
+(``ops.reencode_tokens_kv`` — every path, single requests included, now
+assembles through the paged form); on CPU/interpret the numerically
+equivalent vectorised jnp rope inside the same jitted call is faster.
+``rope_backend`` selects ("auto" picks by ``jax.default_backend()``; the
 REPRO_ASSEMBLE_ROPE env var overrides).
 
 Recurrent/hybrid archs (zamba2, xlstm) get *prefix*-granular reuse instead
@@ -41,6 +40,15 @@ Recurrent/hybrid archs (zamba2, xlstm) get *prefix*-granular reuse instead
 
 The engine also exposes ``full_prefill`` — the vanilla (non-RAG-aware)
 baseline used by benchmarks to reproduce Table 3's TTFT comparison.
+
+As of the request-lifecycle redesign (DESIGN.md §7) the engine is the
+DEVICE layer only: it owns the params, the block store and every jitted
+dispatch (assembly, final pass, the lifecycle ``_decode_scan`` segment,
+the slot ``_scatter_rows``). The request lifecycle — admission queue,
+slot pool, streaming, retirement, per-request sampling state — lives in
+``serving.server.BlockServer``; ``generate`` / ``generate_batch`` are
+kept as thin synchronous wrappers over a throwaway server (token-for-token
+parity with the pre-redesign paths is pinned by tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -54,7 +62,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocks import from_row_lens
 from repro.core.config import ModelConfig
 from repro.core.kv_cache import BlockKVStore, cache_write_prefix
 from repro.core.rope import apply_rope
@@ -155,68 +162,6 @@ class BlockAttentionEngine:
             logits = T.logits_from_hidden(params, cfg, h[:, -1:])
             return logits, new_caches, new_states
 
-        @functools.partial(jax.jit, static_argnames=("lens",))
-        def _assemble(kv_rows, caches, lens):
-            """Single-dispatch KV assembly, shared static signature.
-
-            kv_rows: per batch row, the tuple of fetched zero-based block
-            KV pytrees {pos: {"k","v": (G, L_b, KV, D)}}; ``lens`` is the
-            static per-block length tuple (shared across rows). For every
-            cache position: concatenate blocks, rotate keys by the
-            per-block delta vector (Eq. 3), and write all rows/groups with
-            one fused cache update. Everything below is ONE XLA
-            computation — zero per-block or per-layer Python dispatch on
-            the warm path. The Eq.-3 rotation is either the batched
-            ``rope_shift`` kernel (TPU: one launch for the whole fetched
-            block set) or the equivalent vectorised jnp rope (CPU).
-            """
-            B = len(kv_rows)
-            nb = len(lens)
-            starts = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
-            # per-token delta vector: token t of block b shifts by starts[b]
-            pos_vec = jnp.asarray(np.repeat(starts[:-1], lens), jnp.int32)
-            use_kernel = self.reencode and self._rope_kernel
-            if use_kernel:
-                L_max = int(max(lens))
-                deltas = jnp.asarray(np.tile(starts[:-1], B), jnp.int32)
-            out = dict(caches)
-            for pos_key in kv_rows[0][0]:
-                knew, vnew = [], []
-                if use_kernel:
-                    # pad blocks to L_max and stack (rows x blocks) into the
-                    # kernel's batch axis: ONE rope_shift launch re-encodes
-                    # every fetched block at its own delta (ragged operand)
-                    stacked = jnp.stack(
-                        [jnp.pad(blk[pos_key]["k"],
-                                 ((0, 0), (0, L_max - blk[pos_key]["k"]
-                                           .shape[1]), (0, 0), (0, 0)))
-                         for row in kv_rows for blk in row])
-                    rot = ops.reencode_blocks_kv(
-                        stacked, deltas, rotary_dim=cfg.rotary_dim,
-                        theta=cfg.rope_theta,
-                        interleaved=cfg.rope_interleaved)
-                for r, row in enumerate(kv_rows):
-                    if use_kernel:
-                        kcat = jnp.concatenate(
-                            [rot[r * nb + b][:, :lens[b]]
-                             for b in range(nb)], axis=1)
-                    else:
-                        kcat = jnp.concatenate(
-                            [blk[pos_key]["k"] for blk in row], axis=1)
-                        if self.reencode:
-                            # paper Eq. 3 — additive RoPE composition
-                            kcat = apply_rope(kcat, pos_vec, cfg)
-                    vcat = jnp.concatenate(
-                        [blk[pos_key]["v"] for blk in row], axis=1)
-                    knew.append(kcat)
-                    vnew.append(vcat)
-                knew = jnp.stack(knew, axis=1).astype(self.dtype)
-                vnew = jnp.stack(vnew, axis=1).astype(self.dtype)
-                ck, cv = cache_write_prefix(
-                    out[pos_key]["k"], out[pos_key]["v"], knew, vnew)
-                out[pos_key] = {"k": ck, "v": cv}
-            return out
-
         @jax.jit
         def _assemble_paged(flat, caches, idx, pos_vec, valid):
             """Paged KV assembly for MIXED-shape batches (DESIGN.md §5).
@@ -254,36 +199,97 @@ class BlockAttentionEngine:
                 out[pos_key] = {"k": ck, "v": cv}
             return out
 
-        @functools.partial(jax.jit, static_argnames=("steps",))
-        def _decode_scan(params, first, caches, states, start_len, steps):
-            """Greedy decode as ONE on-device scan: feeds back the argmax
-            without a host round trip, returns all tokens at once.
+        @functools.partial(jax.jit, static_argnames=("steps", "greedy",
+                                                     "top_k_active"))
+        def _decode_scan(params, cur, caches, states, pos, active, remaining,
+                         stop_toks, keys, temps, top_ks, steps, greedy,
+                         top_k_active=True):
+            """ONE lifecycle-aware decode segment as an on-device scan.
 
-            ``start_len`` bookkeeping: a (B,) per-row vector — when step i
-            runs, row b's cache holds ``start_len[b] + i`` tokens;
-            decode_step writes row b's incoming token at index
-            start_len[b] + i (== its position) and attends
-            [0, start_len[b] + i] inclusive — see DESIGN.md §3/§5 for the
-            cache_len conventions audit. A scalar start_len is the aligned
-            special case.
+            This is THE decode loop for every path — the lifecycle server
+            runs it in ``decode_segment``-sized chunks over the slot pool,
+            the synchronous wrappers run it once for all ``max_new_tokens``.
+            Per step, for every slot row: feed the row's current token,
+            sample the next (greedy argmax when the static ``greedy`` flag
+            is set — bitwise the pre-lifecycle scan — else per-row
+            temperature / top-k with a per-row PRNG key), and update the
+            on-device lifecycle vectors. Nothing syncs to the host inside
+            the segment.
+
+            Per-row lifecycle state, all (B,) unless noted:
+              * ``pos``       — tokens in the row's cache; when a row emits,
+                decode_step wrote its incoming token at index pos[b] (== its
+                position) and attended [0, pos[b]] inclusive (DESIGN.md
+                §3/§5), then pos[b] advances. Inactive rows hold ``pos``
+                so a later segment resumes exactly where they stopped.
+              * ``active``    — bool emit mask. Rows retire in-scan when
+                they emit a ``stop_toks`` row entry (the stop token IS
+                emitted, finish_reason "stop") or exhaust ``remaining``
+                (finish_reason "length"); retired/empty rows keep stepping
+                at frozen ``pos`` but their writes land on retired cache
+                rows and their sampled tokens are dropped by the emit mask.
+              * ``remaining`` — int32 token budget left.
+              * ``stop_toks`` — (B, K) int32, -1-padded per-row stop set.
+              * ``keys``      — (B, 2) uint32 per-row PRNG keys (split once
+                per step; unused under ``greedy``).
+              * ``temps`` / ``top_ks`` — (B,) sampling vectors
+                (``top_k_active`` statically skips the top-k threshold
+                sort when no active row filters).
+
+            Returns (toks (steps, B), emits (steps, B) bool, carry) where
+            carry = (cur, pos, active, remaining, keys, caches, states) is
+            fed verbatim into the next segment.
             """
-            def body(carry, i):
-                cur, caches, states = carry
+            def body(carry, _):
+                cur, pos, active, remaining, keys, caches, states = carry
                 logits, caches, states = api.decode_step(
-                    params, cfg, cur[:, None], caches, states,
-                    start_len + i)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                return (nxt, caches, states), nxt
-            _, rest = jax.lax.scan(body, (first, caches, states),
-                                   jnp.arange(steps, dtype=jnp.int32))
-            return rest                                   # (steps, B)
+                    params, cfg, cur[:, None], caches, states, pos)
+                lg = logits[:, -1]
+                if greedy:
+                    nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                else:
+                    keys, sub = api.split_row_keys(keys)
+                    nxt = api.sample_tokens(lg, sub, temps, top_ks,
+                                            use_top_k=top_k_active)
+                emit = active
+                nxt = jnp.where(emit, nxt, cur)
+                remaining = remaining - emit.astype(jnp.int32)
+                hit_stop = jnp.any(nxt[:, None] == stop_toks, axis=1) & emit
+                active = active & ~hit_stop & (remaining > 0)
+                pos = pos + emit.astype(jnp.int32)
+                return (nxt, pos, active, remaining, keys, caches, states), \
+                    (nxt, emit)
+            carry0 = (cur, pos, active, remaining, keys, caches, states)
+            carry, (toks, emits) = jax.lax.scan(body, carry0, None,
+                                                length=steps)
+            return toks, emits, carry
+
+        @jax.jit
+        def _scatter_rows(pool, sub, slot_idx):
+            """Write an admission group's width-W caches into pool slots.
+
+            pool: {pos: {"k","v": (G, B_slots, S, KV, D)}}; sub: same tree
+            at width W; slot_idx: (W,) int32 target slots. Width-padding
+            rows carry slot index ``B_slots`` (out of bounds) and are
+            DROPPED — only real admitted rows land, so busy neighbours are
+            never touched. One fused scatter per slab; compile key is W.
+            """
+            out = {}
+            for pos_key, kv in pool.items():
+                out[pos_key] = {
+                    c: kv[c].at[:, slot_idx].set(sub[pos_key][c],
+                                                 mode="drop")
+                    for c in ("k", "v")}
+            return out
 
         self._encode_block = _encode_block
         self._final_block_pass = _final_block_pass
         self._full_prefix_pass = _full_prefix_pass
-        self._assemble = _assemble
         self._assemble_paged = _assemble_paged
         self._decode_scan = _decode_scan
+        self._scatter_rows = _scatter_rows
+        self._sample = jax.jit(api.sample_tokens,
+                               static_argnames=("use_top_k",))
 
     # ------------------------------------------------------------------
     def _fresh_caches(self, batch: int):
@@ -370,53 +376,42 @@ class BlockAttentionEngine:
         """first token(s) (B,) + one fused scan for the rest -> (B, T).
 
         ``pos``: tokens already in the cache per row — int or (B,) array.
+        Greedy, no stop set, one segment: the degenerate lifecycle of the
+        vanilla / recurrent paths, run through the SAME ``_decode_scan``.
         """
         first = jnp.asarray(first, jnp.int32)
         if max_new_tokens <= 1:
             return np.asarray(first)[:, None]
-        rest = self._decode_scan(self.params, first, caches, states,
-                                 jnp.asarray(pos, jnp.int32),
-                                 steps=max_new_tokens - 1)
+        B = first.shape[0]
+        pos = np.broadcast_to(np.asarray(pos, np.int64), (B,))
+        toks, _, _ = self._decode_scan(
+            self.params, first, caches, states,
+            jnp.asarray(pos, jnp.int32),
+            jnp.ones((B,), bool),
+            jnp.full((B,), max_new_tokens - 1, jnp.int32),
+            jnp.full((B, 1), -1, jnp.int32),
+            jnp.zeros((B, 2), jnp.uint32),
+            jnp.zeros((B,), jnp.float32),
+            jnp.zeros((B,), jnp.int32),
+            steps=max_new_tokens - 1, greedy=True)
         return np.concatenate(
-            [np.asarray(first)[:, None], np.asarray(rest).T], axis=1)
+            [np.asarray(first)[:, None], np.asarray(toks).T], axis=1)
 
     # ------------------------------------------------------------------
     def generate(self, blocks: Sequence[np.ndarray], max_new_tokens: int = 8,
                  greedy: bool = True) -> GenerationResult:
-        """Single-request generation with block KV reuse (batch=1)."""
-        # ONE BlockLayout per request: every downstream quantity — prefix
-        # offset, per-block lens for the assembly, final-block start/length,
-        # decode start — reads off the same object (DESIGN.md §6)
-        lay = from_row_lens([[len(b) for b in blocks]])
-        total = int(lay.total_lens[0])
-        assert total + max_new_tokens <= self.max_seq
-        t0 = time.perf_counter()
+        """Single-request generation with block KV reuse (batch=1).
+
+        Thin wrapper: attention archs route through a width-1
+        ``BlockServer`` (one admission, one segment — the same three
+        dispatches as ever; capacity is validated by ``submit()``);
+        recurrent archs keep the prefix path."""
         if self._is_recurrent:
-            return self._generate_prefix_path(blocks, max_new_tokens, t0)
-
-        caches = self._fresh_caches(1)
-        computed = 0
-        offset = int(lay.prefix_lens[0])
-        if len(blocks) > 1:
-            kv_list, computed = self._fetch_blocks(blocks[:-1])
-            lens = tuple(int(l) for l in lay.block_lens()[0, :-1])
-            caches = self._assemble((kv_list,), caches, lens=lens)
-        final = jnp.asarray(blocks[-1])[None, :]
-        logits, caches, states = self._final_block_pass(
-            self.params, final, caches,
-            jnp.asarray(lay.prefix_lens, jnp.int32),
-            jnp.asarray(lay.final_lens - 1, jnp.int32))
-        first = int(jnp.argmax(logits[0, -1]))
-        ttft = time.perf_counter() - t0
-
-        toks = self._decode_tokens(np.asarray([first]), caches, states,
-                                   np.asarray(lay.total_lens, np.int64),
-                                   max_new_tokens)
-        return GenerationResult(
-            tokens=toks, ttft_s=ttft,
-            prefill_tokens_computed=computed + len(blocks[-1]),
-            prefill_tokens_total=total,
-            decode_s=time.perf_counter() - t0 - ttft)
+            total = sum(len(b) for b in blocks)
+            assert total + max_new_tokens <= self.max_seq
+            return self._generate_prefix_path(blocks, max_new_tokens,
+                                              time.perf_counter())
+        return self.generate_batch([blocks], max_new_tokens)
 
     def _generate_prefix_path(self, blocks, max_new_tokens, t0):
         """Recurrent archs: prefix-granular reuse (DESIGN.md §4)."""
@@ -499,97 +494,38 @@ class BlockAttentionEngine:
         store still de-duplicates shared passages ACROSS rows (the paper's
         cross-request reuse).
 
-        Shapes are padded to power-of-two buckets (prefixes to P_pad,
-        final blocks right-padded to F_pad) so every batch drawn from a
-        scheduler bucket reuses ONE compile. Per-row ``cache_len`` vectors
-        keep padding dead: each row writes at and attends exactly its own
-        lengths, so greedy tokens are identical to per-request
-        ``generate()``. ``pad_batch_to`` optionally rounds the batch WIDTH
-        up by repeating row 0 (outputs sliced off) so partial bucket
-        flushes also hit the full-width compile.
-
-        Tight fits near max_seq where one row's prefix plus another row's
-        padded final cannot share the cache split into co-servable
-        sub-batches (order-preserving; timings sum) instead of failing —
-        every request individually sized by total + max_new <= max_seq is
-        served.
+        Since the lifecycle redesign (DESIGN.md §7) this is a thin
+        synchronous wrapper: a throwaway ``BlockServer`` sized to the
+        batch admits every request as ONE co-served group (coservability
+        splits near max_seq still apply) and drains it in one greedy
+        decode segment — the same padded-bucket compile keys, the same
+        three dispatches, token-for-token the pre-lifecycle tokens.
+        ``pad_batch_to`` rounds the batch WIDTH up by repeating row 0
+        (outputs sliced off) so partial bucket flushes also hit the
+        full-width compile.
         """
         assert not self._is_recurrent, "use generate() for recurrent archs"
+        from repro.serving.server import BlockServer   # deferred: cycle
         B0 = len(batch_blocks)
         if pad_batch_to > B0:
             batch_blocks = list(batch_blocks) + \
                 [batch_blocks[0]] * (pad_batch_to - B0)
-        P = np.asarray([sum(len(b) for b in blocks[:-1])
-                        for blocks in batch_blocks], np.int32)
-        F = np.asarray([len(blocks[-1]) for blocks in batch_blocks],
-                       np.int32)
-        # normal traffic: ONE group -> one assembly / final pass / scan
-        parts = [self._generate_batch_group(
-            [batch_blocks[i] for i in g], max_new_tokens)
-            for g in self._coservable_groups(P, F)]
+        server = BlockServer(self, num_slots=len(batch_blocks),
+                             decode_segment=max(max_new_tokens - 1, 1),
+                             bucket_admission=False)
+        rids = [server.submit(blocks, max_new_tokens=max_new_tokens)
+                for blocks in batch_blocks]
+        done = {c.rid: c for c in server.run()}
+        real = [done[r] for r in rids[:B0]]
         # dup rows (pad_batch_to) don't count: their blocks are all store
-        # hits (row 0 fetched first), so only their finals/totals back out
+        # hits (row 0 admitted first), and they are excluded here entirely
         return GenerationResult(
-            tokens=np.concatenate([p.tokens for p in parts], axis=0)[:B0],
-            ttft_s=sum(p.ttft_s for p in parts),
-            prefill_tokens_computed=sum(p.prefill_tokens_computed
-                                        for p in parts) - int(F[B0:].sum()),
-            prefill_tokens_total=sum(p.prefill_tokens_total
-                                     for p in parts)
-            - int((P + F)[B0:].sum()),
-            decode_s=sum(p.decode_s for p in parts))
-
-    def _generate_batch_group(self, batch_blocks, max_new_tokens: int):
-        """One co-servable ragged group: the actual paged batch dispatches
-        (one assembly, one final pass, one decode scan). The group's
-        ``BlockLayout`` (rows padded with zero-length blocks to a shared
-        block count) is the single source of every per-row length."""
-        B = len(batch_blocks)
-        lay = from_row_lens([[len(b) for b in blocks]
-                             for blocks in batch_blocks])
-        P = np.asarray(lay.prefix_lens, np.int32)
-        F = np.asarray(lay.final_lens, np.int32)
-        total = np.asarray(lay.total_lens, np.int32)
-        P_pad = min(pow2_bucket(int(P.max())), self.max_seq) if P.max() \
-            else 0
-        F_pad = self._shared_final_pad(int(P.max()), int(F.max()))
-        # overflow guards: the final pass writes F_pad padded tokens at each
-        # row's prefix, and past max_seq the scan decode's clamped writes
-        # would silently corrupt the last slot
-        assert int(P.max()) <= P_pad, (P_pad, int(P.max()), self.max_seq)
-        assert int((P + F_pad).max()) <= self.max_seq, \
-            ("ragged batch needs row prefix + padded final <= max_seq",
-             P.tolist(), F_pad, self.max_seq)
-        assert int(total.max()) + max_new_tokens <= self.max_seq, \
-            (total.tolist(), max_new_tokens, self.max_seq)
-        t0 = time.perf_counter()
-        computed = 0
-        caches = self._fresh_caches(B)
-        kv_rows = []
-        for blocks in batch_blocks:
-            kv_list, c = self._fetch_blocks(blocks[:-1])
-            computed += c
-            kv_rows.append(kv_list)
-        if P_pad:
-            flat, idx, pos_vec, valid = self._flatten_rows(
-                kv_rows, lay, P_pad)
-            caches = self._assemble_paged(flat, caches, idx, pos_vec, valid)
-        finals = np.zeros((B, F_pad), np.int32)
-        for r, blocks in enumerate(batch_blocks):
-            finals[r, :F[r]] = blocks[-1]
-        logits, caches, states = self._final_block_pass(
-            self.params, jnp.asarray(finals), caches,
-            jnp.asarray(P), jnp.asarray(F - 1))
-        firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        ttft = time.perf_counter() - t0
-
-        toks = self._decode_tokens(firsts, caches, states, total,
-                                   max_new_tokens)
-        return GenerationResult(
-            tokens=toks, ttft_s=ttft,
-            prefill_tokens_computed=computed + int(F.sum()),
-            prefill_tokens_total=int(total.sum()),
-            decode_s=time.perf_counter() - t0 - ttft)
+            tokens=np.stack([c.tokens for c in real]),
+            ttft_s=server.prefill_wall_s,
+            prefill_tokens_computed=sum(c.prefill_tokens_computed
+                                        for c in real),
+            prefill_tokens_total=sum(c.prefill_tokens_total for c in real),
+            decode_s=server.decode_wall_s)
 
     # ------------------------------------------------------------------
     # Vanilla baseline (Table 3's TTFT-vanilla row)

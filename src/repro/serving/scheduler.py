@@ -1,4 +1,4 @@
-"""Request scheduler: batches compatible requests for the engine.
+"""Request admission queue: buckets compatible requests for the server.
 
 Serving real traffic needs batched decode; the Block-attention twist is that
 requests sharing passages also share cache entries, so batching is the
@@ -11,6 +11,14 @@ decode (DESIGN.md §5) handles arbitrary signature mixes inside a bucket via
 per-row ``cache_len`` vectors, and pads shapes to exactly these bucket
 sizes — so each bucket compiles ONCE ever, and mixed-shape requests batch
 together instead of waiting out ``max_wait_s`` at batch=1.
+
+Since the request-lifecycle redesign (DESIGN.md §7) this IS the
+``BlockServer`` admission queue: the server pops admission groups with
+``take`` (one call = one bucket = one (P_pad, F_pad) assembly compile
+signature) whenever decode slots free up, and ``Request`` carries the full
+lifecycle contract — per-request ``SamplingParams``, stop set and stream
+callback. The batch-oriented ``next_batch`` API is kept for callers that
+drive the engine's synchronous wrappers directly.
 """
 from __future__ import annotations
 
@@ -18,7 +26,8 @@ import dataclasses
 import itertools
 import time
 from collections import defaultdict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
 
 import numpy as np
 
@@ -30,10 +39,20 @@ def pow2_bucket(n: int) -> int:
 
 @dataclasses.dataclass
 class Request:
+    """One request's whole lifecycle contract (DESIGN.md §7).
+
+    ``sampling`` is a ``serving.server.SamplingParams`` (None = greedy);
+    ``stop_tokens`` end the request early (the stop token is emitted as the
+    final token, finish_reason "stop"); ``stream_cb`` receives a
+    ``StreamEvent`` per generated token, flushed once per decode segment.
+    """
     rid: int
     blocks: List[np.ndarray]          # passages + final query block
     max_new_tokens: int = 8
     arrived_s: float = 0.0
+    sampling: Optional[Any] = None    # SamplingParams (None -> greedy)
+    stop_tokens: Tuple[int, ...] = ()
+    stream_cb: Optional[Callable] = None
 
     @property
     def prefix_len(self) -> int:
@@ -76,39 +95,76 @@ class Scheduler:
         self._next_rid = itertools.count()
 
     def submit(self, blocks: Sequence[np.ndarray],
-               max_new_tokens: int = 8) -> int:
+               max_new_tokens: int = 8, *, sampling=None,
+               stop_tokens: Sequence[int] = (),
+               stream_cb: Optional[Callable] = None) -> int:
         req = Request(rid=next(self._next_rid),
                       blocks=[np.asarray(b, np.int32) for b in blocks],
                       max_new_tokens=max_new_tokens,
-                      arrived_s=time.perf_counter())
+                      arrived_s=time.perf_counter(),
+                      sampling=sampling,
+                      stop_tokens=tuple(int(t) for t in stop_tokens),
+                      stream_cb=stream_cb)
         self._queues[req.bucket_key].append(req)
         return req.rid
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def next_batch(self) -> Optional[Batch]:
-        """Oldest-first batch of up to max_batch same-bucket requests.
+    def _ready_key(self, limit: int) -> Optional[Tuple[int, int]]:
+        """Readiest bucket key (oldest rid wins) or None.
 
-        A bucket is ready when it is full (>= max_batch) or its oldest
-        request has waited >= max_wait_s; with ``max_wait_s == 0`` every
-        non-empty bucket is ready, so the queue ALWAYS drains — a partial
-        bucket is flushed immediately instead of starving behind fuller
-        ones. Ties break on the oldest rid (submission order), which makes
-        the drain order deterministic (wall-clock ages often compare equal
-        at perf_counter resolution).
+        A bucket is ready when it is full (>= limit) or its oldest request
+        has waited >= max_wait_s; with ``max_wait_s == 0`` every non-empty
+        bucket is ready, so the queue ALWAYS drains — a partial bucket is
+        flushed immediately instead of starving behind fuller ones. Ties
+        break on the oldest rid (submission order), which makes the drain
+        order deterministic (wall-clock ages often compare equal at
+        perf_counter resolution).
         """
         now = time.perf_counter()
         ready: List[Tuple[int, Tuple[int, int]]] = []
         for key in [k for k, q in self._queues.items() if not q]:
             del self._queues[key]        # drop stale bucket keys
         for key, q in self._queues.items():
-            if (len(q) >= self.max_batch
+            if (len(q) >= limit
                     or now - q[0].arrived_s >= self.max_wait_s):
                 ready.append((q[0].rid, key))
-        if not ready:
+        return min(ready)[1] if ready else None
+
+    def take(self, limit: int, any_bucket: bool = False) -> List[Request]:
+        """Admission pop: up to ``limit`` requests, oldest first.
+
+        The ``BlockServer`` entry point (``limit`` = free decode slots).
+        Default: requests come from the ONE readiest bucket, so the group
+        shares a (P_pad, F_pad) assembly compile signature.
+        ``any_bucket=True`` ignores bucketing and pops strictly by rid —
+        the synchronous-wrapper mode, where the whole submitted batch must
+        co-serve as one group regardless of signature spread.
+        """
+        if limit <= 0:
+            return []
+        if any_bucket:
+            reqs = sorted((r for q in self._queues.values() for r in q),
+                          key=lambda r: r.rid)[:limit]
+            taken = {r.rid for r in reqs}
+            for key in list(self._queues):
+                self._queues[key] = [r for r in self._queues[key]
+                                     if r.rid not in taken]
+            return reqs
+        key = self._ready_key(limit)
+        if key is None:
+            return []
+        q = self._queues[key]
+        taken, self._queues[key] = q[:limit], q[limit:]
+        return taken
+
+    def next_batch(self) -> Optional[Batch]:
+        """Oldest-first batch of up to max_batch same-bucket requests
+        (see ``_ready_key`` for the readiness/fairness rules)."""
+        best_key = self._ready_key(self.max_batch)
+        if best_key is None:
             return None
-        best_key = min(ready)[1]
         q = self._queues[best_key]
         batch, self._queues[best_key] = q[:self.max_batch], q[self.max_batch:]
         return Batch(batch)

@@ -1,0 +1,477 @@
+"""BlockServer — the request-lifecycle serving surface (DESIGN.md §7).
+
+The paper's headline win is TTFT via block KV reuse, but a production RAG
+server is judged on the whole request lifecycle under live traffic. This
+module owns that lifecycle; ``BlockAttentionEngine`` stays the device
+layer (params, block store, jitted dispatches).
+
+Model:
+
+  * ``submit()`` enqueues a ``Request`` — blocks, per-request
+    ``SamplingParams``, ``max_new_tokens``, stop set, stream callback —
+    into the pow2-bucketed admission queue (the old ``Scheduler``, folded
+    in) and returns its rid.
+  * ``step()`` / ``run()`` drive **continuous batching** over a fixed-width
+    slot pool: the decode KV cache is allocated ONCE at ``num_slots`` rows
+    and never reshaped. The decode loop runs as segmented ``lax.scan``
+    chunks of ``decode_segment`` tokens with a per-row active mask;
+    between segments, rows that hit EOS/stop/``max_new_tokens`` retire
+    (emitting their ``Completion``) and queued requests are assembled into
+    the freed slots — so the compiled shapes never change while occupancy
+    stays high.
+  * Admission reuses the engine's paged prefill verbatim: fetch blocks from
+    the cross-request store, ONE ``_assemble_paged`` dispatch at the
+    group's (P_pad, F_pad) pow2 bucket, one final-block pass, then one
+    fused per-slab ``_scatter_rows`` into the pool (skipped when the whole
+    pool is free — then the group prefills straight into the pool at full
+    width, which is also the synchronous-wrapper fast path).
+  * Sampling is per-row ON DEVICE: ``(B,)`` temperature / top-k vectors and
+    ``(B, 2)`` per-row PRNG keys thread through the scan
+    (``models.api.sample_tokens``); rows with temperature 0 take the
+    argmax, bitwise identical to greedy. Stop conditions run in-scan too:
+    a row that emits a stop token or exhausts its budget deactivates
+    immediately (later steps of the segment cost masked work, nothing
+    else).
+
+Compile-key invariants (nothing here adds a shape axis that varies with
+traffic): admission assembly/final-pass keys are the pow2 (P_pad, F_pad)
+buckets at width ``num_slots`` (pool-direct) or the pow2 admission-width
+bucket (scatter path); the decode segment keys on (num_slots,
+decode_segment, greedy). A steady-state server therefore compiles a small
+fixed set of programs and reuses them forever.
+
+Timing is per-request (``Completion``): ``ttft_s`` = submit -> first token
+(queue wait included), ``decode_s`` = first token -> retirement (measured
+at segment granularity), plus per-request prefill/cache-hit token counts —
+the batch-level numbers in ``GenerationResult`` are sums over these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import from_row_lens
+from repro.models import api
+from repro.serving.scheduler import Request, Scheduler, pow2_bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling contract, threaded as (B,) vectors on device.
+
+    temperature <= 0 -> greedy argmax (bitwise the greedy decode path);
+    top_k <= 0 -> full vocabulary; ``seed`` pins the request's private
+    PRNG key — the sample stream never depends on slot placement or batch
+    neighbours.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One generated token, delivered to the request's ``stream_cb``.
+
+    ``index`` is the 0-based position in the request's output;
+    ``finished`` marks the request's LAST token, with ``reason`` set to
+    "stop" (a stop token — which IS emitted) or "length"
+    (``max_new_tokens`` exhausted).
+    """
+    rid: int
+    token: int
+    index: int
+    finished: bool = False
+    reason: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    """Terminal per-request record with per-request accounting.
+
+    ``ttft_s`` counts from ``submit()`` (queue wait included);
+    ``decode_s`` from first token to retirement (segment granularity);
+    ``cache_hit_tokens`` is the prefix portion served from the
+    cross-request block store (the paper's reuse, per request);
+    ``prefill_tokens_computed`` = freshly encoded prefix tokens + the
+    final (query) block.
+    """
+    rid: int
+    tokens: np.ndarray               # (T,) int32, T <= max_new_tokens
+    finish_reason: str               # "stop" | "length"
+    ttft_s: float
+    decode_s: float
+    prefill_tokens_computed: int
+    prefill_tokens_total: int
+    cache_hit_tokens: int
+
+
+@dataclasses.dataclass
+class _Live:
+    """Host-side bookkeeping for one in-flight request."""
+    req: Request
+    computed: int = 0                # freshly encoded prefix tokens
+    total: int = 0                   # prompt tokens
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    first_s: float = 0.0
+
+
+class BlockServer:
+    """Continuous-batching request server over a ``BlockAttentionEngine``.
+
+    ``num_slots``       width of the decode slot pool (and of every decode
+                        compile); allocated once.
+    ``decode_segment``  tokens per scan chunk — the retirement/admission
+                        granularity knob. Small = slots refill fast but
+                        more host round trips; large = fewer dispatches
+                        but a retired row idles longer (its residual steps
+                        are masked, not free).
+    ``max_stop_tokens`` static width of the per-row stop set operand.
+    ``bucket_admission`` False = admission pops strictly oldest-first
+                        across buckets (the synchronous wrappers, where
+                        the whole submitted batch must co-serve as one
+                        group); True = one bucket per admission group so
+                        each group shares one assembly compile signature.
+    """
+
+    def __init__(self, engine, *, num_slots: int = 4,
+                 decode_segment: int = 8, max_stop_tokens: int = 4,
+                 bucket_admission: bool = True):
+        assert not engine._is_recurrent, \
+            "BlockServer needs KV-cache attention archs (recurrent archs " \
+            "use engine.generate's prefix path)"
+        assert num_slots >= 1 and decode_segment >= 1
+        self.engine = engine
+        self.num_slots = num_slots
+        self.decode_segment = decode_segment
+        self.max_stop_tokens = max_stop_tokens
+        self.bucket_admission = bucket_admission
+        self._queue = Scheduler(max_batch=num_slots, max_wait_s=0.0)
+
+        B = num_slots
+        self._caches = engine._fresh_caches(B)   # THE pool: allocated once
+        self._states: dict = {}
+        # per-slot lifecycle vectors (host mirrors of the scan carry)
+        self._rids: List[Optional[int]] = [None] * B
+        self._cur = np.zeros(B, np.int32)
+        self._pos = np.zeros(B, np.int32)
+        self._active = np.zeros(B, bool)
+        self._remaining = np.zeros(B, np.int32)
+        self._temps = np.zeros(B, np.float32)
+        self._top_ks = np.zeros(B, np.int32)
+        self._keys = np.zeros((B, 2), np.uint32)
+        self._stops = np.full((B, max_stop_tokens), -1, np.int32)
+        self._live: Dict[int, _Live] = {}
+
+        self._split = jax.jit(api.split_row_keys)
+        # telemetry
+        self.prefill_wall_s = 0.0
+        self.decode_wall_s = 0.0
+        self.segments = 0
+        self.slot_steps = 0              # num_slots * steps, summed
+        self.active_steps = 0            # emitted tokens (scan occupancy)
+        self.admitted_groups = 0
+        # (rids, slots) of RECENT admission groups — bounded so a
+        # long-lived server doesn't grow host memory with traffic
+        self.admission_log: "deque[Tuple[Tuple[int, ...], Tuple[int, ...]]]"\
+            = deque(maxlen=1024)
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+    def submit(self, blocks: Sequence[np.ndarray], *,
+               sampling: Optional[SamplingParams] = None,
+               max_new_tokens: int = 8,
+               stop_tokens: Sequence[int] = (),
+               stream_cb: Optional[Callable[[StreamEvent], None]] = None
+               ) -> int:
+        """Enqueue a request; returns its rid. Validates capacity upfront
+        so an unservable request fails HERE, not mid-traffic."""
+        total = sum(len(b) for b in blocks)
+        assert blocks and max_new_tokens >= 1
+        assert total + max_new_tokens <= self.engine.max_seq, \
+            ("request cannot fit: prompt + max_new_tokens > max_seq",
+             total, max_new_tokens, self.engine.max_seq)
+        assert len(stop_tokens) <= self.max_stop_tokens, \
+            (len(stop_tokens), self.max_stop_tokens)
+        return self._queue.submit(blocks, max_new_tokens, sampling=sampling,
+                                  stop_tokens=stop_tokens,
+                                  stream_cb=stream_cb)
+
+    def pending(self) -> int:
+        return self._queue.pending()
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of decode slot-steps that emitted a token."""
+        return self.active_steps / self.slot_steps if self.slot_steps else 0.0
+
+    # ------------------------------------------------------------------
+    # Lifecycle driving
+    # ------------------------------------------------------------------
+    def step(self) -> List[Completion]:
+        """One scheduling iteration: admit into free slots, then run ONE
+        decode segment. Returns the requests completed this step (possibly
+        at admission: max_new_tokens == 1, or a first token in the stop
+        set). Completion order is deterministic: admission completions in
+        slot order, then segment retirements in slot order."""
+        done = self._admit()
+        if self._active.any():
+            done.extend(self._run_segment())
+        return done
+
+    def run(self) -> List[Completion]:
+        """Drive ``step()`` until the queue is empty and every slot is
+        drained; returns all completions in completion order."""
+        done: List[Completion] = []
+        while self._queue.pending() or self._active.any():
+            done.extend(self.step())
+        return done
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.num_slots) if self._rids[s] is None]
+
+    def _admit(self) -> List[Completion]:
+        done: List[Completion] = []
+        while True:
+            free = self._free_slots()
+            if not free or not self._queue.pending():
+                return done
+            reqs = self._queue.take(len(free),
+                                    any_bucket=not self.bucket_admission)
+            if not reqs:
+                return done
+            P = np.asarray([r.prefix_len for r in reqs], np.int32)
+            F = np.asarray([r.final_len for r in reqs], np.int32)
+            for g in self.engine._coservable_groups(P, F):
+                done.extend(self._admit_group([reqs[i] for i in g]))
+
+    def _admit_group(self, reqs: List[Request]) -> List[Completion]:
+        """Prefill one co-servable group and install it into free slots.
+
+        The group runs the engine's paged path verbatim — fetch, ONE
+        ``_assemble_paged`` at the (P_pad, F_pad) pow2 bucket, one
+        final-block pass — at width W. When the WHOLE pool is free the
+        group pads to ``num_slots`` and prefills straight into the pool
+        cache (no copy; the synchronous-wrapper fast path, and the one the
+        pre-lifecycle ``generate_batch`` compile keys map onto). Otherwise
+        W is the pow2 bucket of the group size, prefill runs in a
+        scratch cache, and one fused ``_scatter_rows`` drops exactly the
+        admitted rows into their slots (width-padding rows are dropped via
+        an out-of-bounds slot index — busy neighbours are never touched).
+        """
+        eng = self.engine
+        t0 = time.perf_counter()
+        n = len(reqs)
+        free = self._free_slots()
+        assert n <= len(free)
+        slots = free[:n]
+        # pool-direct needs the whole pool free AND a full-width group —
+        # a small group on an idle pool takes the pow2-width scratch path
+        # instead of paying num_slots-width prefill for padding rows
+        pool_direct = len(free) == self.num_slots and n == self.num_slots
+        W = self.num_slots if pool_direct \
+            else min(pow2_bucket(n), self.num_slots)
+
+        kv_rows, computed = [], []
+        for r in reqs:
+            kv, c = eng._fetch_blocks(r.blocks[:-1])
+            kv_rows.append(kv)
+            computed.append(c)
+        # width padding duplicates row 0 WITHOUT extra store traffic
+        rows_blocks = [r.blocks for r in reqs] + [reqs[0].blocks] * (W - n)
+        kv_rows += [kv_rows[0]] * (W - n)
+
+        lay = from_row_lens([[len(b) for b in blocks]
+                             for blocks in rows_blocks])
+        P = np.asarray(lay.prefix_lens, np.int32)
+        F = np.asarray(lay.final_lens, np.int32)
+        total = np.asarray(lay.total_lens, np.int32)
+        P_pad = min(pow2_bucket(int(P.max())), eng.max_seq) if P.max() else 0
+        F_pad = eng._shared_final_pad(int(P.max()), int(F.max()))
+        # overflow guards: the final pass writes F_pad padded tokens at
+        # each row's prefix, and past max_seq the decode scan's clamped
+        # writes would silently corrupt the last slot
+        assert int(P.max()) <= P_pad, (P_pad, int(P.max()), eng.max_seq)
+        assert int((P + F_pad).max()) <= eng.max_seq, \
+            ("group needs row prefix + padded final <= max_seq",
+             P.tolist(), F_pad, eng.max_seq)
+        for j, r in enumerate(reqs):
+            assert int(total[j]) + r.max_new_tokens <= eng.max_seq, \
+                (int(total[j]), r.max_new_tokens, eng.max_seq)
+
+        caches = self._caches if pool_direct else eng._fresh_caches(W)
+        if P_pad:
+            flat, idx, pos_vec, valid = eng._flatten_rows(kv_rows, lay,
+                                                          P_pad)
+            caches = eng._assemble_paged(flat, caches, idx, pos_vec, valid)
+        finals = np.zeros((W, F_pad), np.int32)
+        for j, blocks in enumerate(rows_blocks):
+            finals[j, :F[j]] = blocks[-1]
+        logits, caches, _ = eng._final_block_pass(
+            eng.params, jnp.asarray(finals), caches,
+            jnp.asarray(P), jnp.asarray(F - 1))
+
+        # first token: per-row sampled like every later one
+        temps = np.zeros(W, np.float32)
+        top_ks = np.zeros(W, np.int32)
+        keys = np.zeros((W, 2), np.uint32)
+        for j, r in enumerate(reqs):
+            sp = r.sampling
+            if sp is not None:
+                temps[j] = sp.temperature
+                top_ks[j] = sp.top_k
+                keys[j] = np.asarray(jax.random.PRNGKey(sp.seed))
+        if (temps > 0).any():
+            jkeys, sub = self._split(jnp.asarray(keys))
+            firsts = np.asarray(eng._sample(
+                logits[:, -1], sub, jnp.asarray(temps),
+                jnp.asarray(top_ks), use_top_k=bool((top_ks > 0).any())))
+            keys = np.asarray(jkeys)
+        else:
+            firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+
+        if pool_direct:
+            self._caches = caches
+        else:
+            # width-padding rows scatter to index num_slots -> dropped
+            idx = np.full(W, self.num_slots, np.int32)
+            idx[:n] = slots
+            self._caches = eng._scatter_rows(self._caches, caches,
+                                             jnp.asarray(idx))
+        self.prefill_wall_s += time.perf_counter() - t0
+        self.admitted_groups += 1
+        self.admission_log.append(
+            (tuple(r.rid for r in reqs), tuple(slots)))
+
+        # install per-slot lifecycle state + emit first tokens
+        now = time.perf_counter()
+        done: List[Completion] = []
+        for j, r in enumerate(reqs):
+            s = slots[j]
+            live = _Live(req=r, computed=int(computed[j]),
+                         total=int(total[j]), first_s=now)
+            self._live[r.rid] = live
+            first = int(firsts[j])
+            live.tokens.append(first)
+            finished = (first in r.stop_tokens) or r.max_new_tokens == 1
+            reason = "stop" if first in r.stop_tokens else "length"
+            self._emit(r, first, 0, finished, reason if finished else None)
+            if finished:
+                done.append(self._complete(r.rid, reason, now))
+                continue
+            self._rids[s] = r.rid
+            self._cur[s] = first
+            self._pos[s] = int(total[j])
+            self._active[s] = True
+            self._remaining[s] = r.max_new_tokens - 1
+            self._temps[s] = temps[j]
+            self._top_ks[s] = top_ks[j]
+            self._keys[s] = keys[j]
+            self._stops[s] = -1
+            self._stops[s, :len(r.stop_tokens)] = r.stop_tokens
+        return done
+
+    # ------------------------------------------------------------------
+    # Decode segments
+    # ------------------------------------------------------------------
+    def _run_segment(self) -> List[Completion]:
+        """ONE segmented-scan chunk over the whole slot pool, then the
+        host-side retirement pass. ``greedy`` is re-derived per segment
+        (all active rows at temperature 0 skip the sampling machinery —
+        one extra compile, bitwise the same tokens)."""
+        eng = self.engine
+        t0 = time.perf_counter()
+        was_active = self._active.copy()
+        greedy = not bool((self._temps[was_active] > 0).any())
+        top_k_active = bool((self._top_ks[was_active] > 0).any())
+        toks, emits, carry = eng._decode_scan(
+            eng.params, jnp.asarray(self._cur), self._caches, self._states,
+            jnp.asarray(self._pos), jnp.asarray(self._active),
+            jnp.asarray(self._remaining), jnp.asarray(self._stops),
+            jnp.asarray(self._keys), jnp.asarray(self._temps),
+            jnp.asarray(self._top_ks),
+            steps=self.decode_segment, greedy=greedy,
+            top_k_active=top_k_active)
+        cur, pos, active, remaining, keys, self._caches, self._states = carry
+        toks = np.asarray(toks)
+        emits = np.asarray(emits)
+        # np.array(...): host mirrors stay writable (np.asarray of a jax
+        # array is a read-only view)
+        self._cur = np.array(cur)
+        self._pos = np.array(pos)
+        self._active = np.array(active)
+        self._remaining = np.array(remaining)
+        self._keys = np.array(keys)
+        now = time.perf_counter()
+        self.decode_wall_s += now - t0
+        self.segments += 1
+        self.slot_steps += self.decode_segment * self.num_slots
+        self.active_steps += int(emits.sum())
+
+        done: List[Completion] = []
+        for s in range(self.num_slots):
+            rid = self._rids[s]
+            if rid is None or not was_active[s]:
+                continue
+            r = self._live[rid].req
+            seq = [int(t) for t in toks[emits[:, s], s]]
+            finished = not self._active[s]
+            base = len(self._live[rid].tokens)
+            self._live[rid].tokens.extend(seq)
+            reason = ("stop" if finished and seq
+                      and seq[-1] in r.stop_tokens else "length")
+            for i, tok in enumerate(seq):
+                last = finished and i == len(seq) - 1
+                self._emit(r, tok, base + i, last,
+                           reason if last else None)
+            if finished:
+                self._rids[s] = None
+                done.append(self._complete(rid, reason, now))
+        return done
+
+    # ------------------------------------------------------------------
+    def _emit(self, req: Request, token: int, index: int, finished: bool,
+              reason: Optional[str]):
+        if req.stream_cb is not None:
+            req.stream_cb(StreamEvent(rid=req.rid, token=token, index=index,
+                                      finished=finished, reason=reason))
+
+    def _complete(self, rid: int, reason: str, now: float) -> Completion:
+        live = self._live.pop(rid)
+        r = live.req
+        prefix = r.prefix_len
+        return Completion(
+            rid=rid,
+            tokens=np.asarray(live.tokens, np.int32),
+            finish_reason=reason,
+            ttft_s=live.first_s - r.arrived_s,
+            decode_s=now - live.first_s,
+            prefill_tokens_computed=live.computed + r.final_len,
+            prefill_tokens_total=live.total,
+            cache_hit_tokens=prefix - live.computed)
+
+    def stats(self) -> dict:
+        """Serving telemetry for benchmarks / launchers."""
+        return {
+            "num_slots": self.num_slots,
+            "decode_segment": self.decode_segment,
+            "segments": self.segments,
+            "occupancy": round(self.occupancy, 4),
+            "prefill_wall_s": round(self.prefill_wall_s, 4),
+            "decode_wall_s": round(self.decode_wall_s, 4),
+            "admitted_groups": self.admitted_groups,
+        }

@@ -80,6 +80,56 @@ def test_batch_decode_committed_baseline_schema():
     assert r["signatures"] > 1 and r["batches"] < r["requests"]
 
 
+@pytest.mark.bench
+def test_serving_latency_json_contract(tmp_path):
+    """serving_latency.run writes the BENCH_serving.json schema future PRs
+    compare on — continuous batching vs the static drain on the SAME
+    Poisson arrival replay."""
+    from benchmarks import serving_latency
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=256, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_serving.json"
+    lines = []
+    res = serving_latency.run(
+        n_requests=6, pool_size=4, passages_per_req=2, slots=2,
+        decode_segment=2, mean_gap_s=0.01, repeats=1, emit=lines.append,
+        json_path=str(path), cfg=micro, passage_lens=(16, 24),
+        query_lens=(8, 12), new_tokens=(2, 4, 6))
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "serving_latency"
+    r = payload["results"]
+    assert {"static", "continuous", "speedup", "signatures",
+            "tokens_total"} <= set(r)
+    for pol in ("static", "continuous"):
+        assert {"tokens_per_s", "ttft_p50_s", "ttft_p95_s",
+                "slot_occupancy", "wall_s"} <= set(r[pol])
+        assert r[pol]["tokens_per_s"] > 0
+    assert r["signatures"] > 1 and len(r["new_tokens"]) > 1
+    # NOTE: no strict speedup assert on the micro single-repeat workload —
+    # the committed full-size baseline test below holds the >= 1.2x bar
+    assert res["speedup"] > 0
+    assert any(line.startswith("serving_continuous,") for line in lines)
+
+
+def test_serving_latency_committed_baseline_schema():
+    """The committed BENCH_serving.json satisfies the acceptance bar:
+    continuous batching >= 1.2x static-drain tokens/s on mixed Poisson
+    traffic with heterogeneous output lengths, while keeping occupancy
+    and tail TTFT no worse."""
+    payload = json.loads(
+        open(os.path.join(REPO, "BENCH_serving.json")).read())
+    assert payload["benchmark"] == "serving_latency"
+    r = payload["results"]
+    assert r["signatures"] > 1 and len(r["new_tokens"]) > 1
+    assert r["speedup"] >= 1.2
+    assert r["continuous"]["tokens_per_s"] >= \
+        1.2 * r["static"]["tokens_per_s"]
+    assert r["continuous"]["slot_occupancy"] > r["static"]["slot_occupancy"]
+    assert r["continuous"]["ttft_p95_s"] <= r["static"]["ttft_p95_s"]
+
+
 def test_train_step_json_contract(tmp_path):
     """train_step.run writes the BENCH_train_step.json schema future PRs
     compare on — masked vs structural ragged on the SAME batch."""
@@ -130,4 +180,5 @@ def test_run_smoke_mode():
     assert "cache_shared_pool_request," in out.stdout
     assert "attn_block_S256_nb4," in out.stdout
     assert "batch_decode_mixed," in out.stdout
+    assert "serving_continuous," in out.stdout
     assert "train_step_struct_168," in out.stdout

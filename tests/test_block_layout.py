@@ -198,6 +198,66 @@ def test_model_parity_chunked_layers():
     _model_parity(tiny_dense(attention_chunk=16, chunk_attn_every=2))
 
 
+def test_kernel_impl_dispatches_pallas_prefill(monkeypatch):
+    """The PR-3 ROADMAP follow-up: ``impl="kernel"`` (what "auto" resolves
+    to on real TPU) dispatches the Pallas ragged block-prefill kernel from
+    the model layers and matches the structural jnp path in interpret
+    mode — same layout object, same logits, for ragged AND uniform
+    block layouts plus the plain-causal (full-mode) pass."""
+    from repro.core.blocks import ragged_layout, uniform_layout
+    from repro.kernels import ops
+
+    cfg = tiny_dense()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    B, S = 2, 72
+    jb = {"tokens": jnp.asarray(rng.integers(5, cfg.vocab_size, (B, S)),
+                                jnp.int32)}
+
+    calls = []
+    orig = ops.block_attention_prefill
+    monkeypatch.setattr(ops, "block_attention_prefill",
+                        lambda *a, **k: (calls.append(k), orig(*a, **k))[1])
+
+    lay = ragged_layout([[30, 24, 18], [18, 36, 18]])
+    lg_flash, _ = api.forward_logits(params, cfg, jb, block_mode=True,
+                                     layout=lay, impl="flash")
+    lg_kern, _ = api.forward_logits(params, cfg, jb, block_mode=True,
+                                    layout=lay, impl="kernel")
+    assert calls and all("layout" in c for c in calls)   # ragged kernel
+    np.testing.assert_allclose(lg_kern, lg_flash, atol=5e-4, rtol=1e-4)
+
+    calls.clear()
+    ulay = uniform_layout(S, 4, batch=B)
+    lg_u_flash, _ = api.forward_logits(params, cfg, jb, block_mode=True,
+                                       layout=ulay, impl="flash")
+    lg_u_kern, _ = api.forward_logits(params, cfg, jb, block_mode=True,
+                                      layout=ulay, impl="kernel")
+    assert calls and all(c.get("num_blocks") == 4 for c in calls)
+    np.testing.assert_allclose(lg_u_kern, lg_u_flash, atol=5e-4, rtol=1e-4)
+
+    # full mode -> flash_causal kernel, same logits as the flash path
+    lg_c_flash, _ = api.forward_logits(params, cfg, jb, block_mode=False,
+                                       impl="flash")
+    lg_c_kern, _ = api.forward_logits(params, cfg, jb, block_mode=False,
+                                      impl="kernel")
+    np.testing.assert_allclose(lg_c_kern, lg_c_flash, atol=5e-4, rtol=1e-4)
+
+
+def test_prefill_impl_auto_resolution(monkeypatch):
+    """"auto" -> kernel on TPU, flash elsewhere; REPRO_PREFILL_IMPL
+    overrides the default; an explicit argument always wins."""
+    from repro.models import transformer as T
+
+    monkeypatch.delenv("REPRO_PREFILL_IMPL", raising=False)
+    assert T.resolve_impl("auto") == \
+        ("kernel" if jax.default_backend() == "tpu" else "flash")
+    monkeypatch.setenv("REPRO_PREFILL_IMPL", "kernel")
+    assert T.resolve_impl("auto") == "kernel"
+    assert T.resolve_impl("dense") == "dense"      # explicit wins over env
+    assert T.resolve_impl("flash") == "flash"
+
+
 def test_structural_forward_avoids_mask_helpers(monkeypatch):
     """Acceptance: a ragged-layout training forward routes through the
     structural path — neither block_mask nor causal_mask_fn is traced into

@@ -65,6 +65,65 @@ def test_mixed_pipeline_emits_both_modes():
     np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # same samples
 
 
+def test_multi_task_pipeline_signature_buckets():
+    """A run may interleave MULTIPLE layout_caps signatures: batches
+    round-robin across tasks, each tagged with its OWN static caps, and
+    the derived ``BlockLayout`` signatures (the jit compile keys) are
+    exactly one per task — ragged per-row lengths inside a task never
+    add a signature."""
+    from repro.data.pipeline import layout_signature
+    from repro.training.trainer import batch_layout
+
+    t1 = RagTaskConfig(num_passages=2, passage_len=12,
+                       variable_passage_len=True)
+    t2 = RagTaskConfig(num_passages=3, passage_len=20, queries_per_sample=2,
+                       variable_passage_len=True)
+    pipe = PipelineConfig(tasks=(t1, t2), batch_size=4,
+                          mixed_block_full=False)
+    it = batches(pipe)
+    got = [next(it) for _ in range(6)]
+
+    sigs = [layout_signature(b) for b in got]
+    assert sigs == [
+        (t1.sample_len,) + t1.layout_caps,
+        (t2.sample_len,) + t2.layout_caps,
+    ] * 3
+    assert len(set(sigs)) == 2                   # one bucket per task
+    # per-row ragged lengths VARY within a task...
+    assert len({tuple(r) for b in got[::2] for r in b["block_lens"]}) > 1
+    # ...but the structural layout's static signature (the compile key)
+    # stays pinned by the task caps
+    lay_keys = {layout_signature(b): b for b in got}
+    for sig, b in lay_keys.items():
+        lay = batch_layout(dict(b, block_mode=True), True)
+        assert lay is not None and lay.structural
+        assert (lay.max_block_len, lay.max_final_len) == sig[1:]
+    # distinct tasks -> distinct layout signatures -> distinct compiles
+    l1 = batch_layout(dict(got[0], block_mode=True), True)
+    l2 = batch_layout(dict(got[1], block_mode=True), True)
+    assert l1.signature != l2.signature
+
+
+def test_multi_task_pipeline_trains_across_signatures(tiny_cfg):
+    """Trainer smoke over a 2-signature stream: the jitted step buckets by
+    layout signature and both tasks' losses stay finite."""
+    t1 = RagTaskConfig(num_passages=2, passage_len=10, vocab_size=128,
+                       num_keys=24, num_values=24, queries_per_sample=1)
+    t2 = RagTaskConfig(num_passages=2, passage_len=14, vocab_size=128,
+                       num_keys=24, num_values=24, queries_per_sample=2)
+    tcfg = TrainConfig(learning_rate=1e-3, batch_size=4, total_steps=4,
+                       warmup_steps=1)
+    tr = Trainer.create(tiny_cfg, tcfg)
+    pipe = PipelineConfig(tasks=(t1, t2), batch_size=4,
+                          mixed_block_full=True)
+    # 4 steps = t1-block, t1-full, t2-block, t2-full: one structural
+    # compile per signature plus the full-mode pair
+    hist = tr.fit(batches(pipe), 4, log_every=1)
+    assert len(hist) == 4
+    assert {h["block_mode"] for h in hist} == {True, False}
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
 def test_training_reduces_loss(tiny_cfg):
     task = RagTaskConfig(num_passages=2, passage_len=12, vocab_size=128,
                          num_keys=24, num_values=24, queries_per_sample=2)

@@ -1,0 +1,202 @@
+"""BlockServer request-lifecycle invariants (DESIGN.md §7).
+
+The contract under test: continuous batching over the fixed slot pool —
+segmented scans, in-scan retirement, slot refill from the admission
+queue, per-row on-device sampling — is observationally identical to the
+synchronous wrapper path wherever they overlap, and strictly richer
+everywhere else (streaming, early stop, per-request budgets/timings).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+from repro.serving.scheduler import Scheduler
+from repro.serving.server import BlockServer, SamplingParams
+
+from conftest import tiny_dense
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_dense()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    def mk(lens):
+        return [rng.integers(5, cfg.vocab_size, l).astype(np.int32)
+                for l in lens]
+
+    reqs = [mk([16, 16, 16, 8]), mk([12, 20, 24, 10]), mk([16, 6]),
+            mk([30])]
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    return cfg, params, reqs, eng
+
+
+def test_streaming_reconstructs_generate_batch_tokens(setup):
+    """THE lifecycle parity invariant: tokens streamed per segment through
+    the continuous-batching server (small decode_segment, slot pool
+    narrower than the traffic) reconstruct exactly the synchronous
+    ``generate_batch`` greedy tokens."""
+    cfg, params, reqs, eng = setup
+    want = eng.generate_batch(reqs, 6).tokens
+
+    events = {}
+    srv = BlockServer(eng, num_slots=2, decode_segment=2)
+    rids = [srv.submit(blocks, max_new_tokens=6,
+                       stream_cb=lambda ev: events.setdefault(
+                           ev.rid, []).append(ev))
+            for blocks in reqs]
+    done = {c.rid: c for c in srv.run()}
+    for r, rid in enumerate(rids):
+        toks = [ev.token for ev in events[rid]]
+        assert toks == list(want[r]), (r, toks, want[r])
+        # stream == completion, indices contiguous, exactly one finish
+        np.testing.assert_array_equal(done[rid].tokens, toks)
+        assert [ev.index for ev in events[rid]] == list(range(len(toks)))
+        assert [ev.finished for ev in events[rid]] == \
+            [False] * (len(toks) - 1) + [True]
+        assert events[rid][-1].reason == done[rid].finish_reason == "length"
+
+
+def test_stop_token_retires_row_and_refills_slot(setup):
+    """EOS/stop lifecycle: a row that emits its stop token retires early
+    (truncated tokens, finish_reason "stop") and its freed slot is
+    refilled by a queued request WHILE its neighbour keeps decoding."""
+    cfg, params, reqs, eng = setup
+    a, b, c = reqs[0], reqs[1], reqs[2]
+    greedy_a = eng.generate(a, 8).tokens[0]
+    stop = int(greedy_a[2])                   # retire a after ~3 tokens
+    cut = int(np.argmax(greedy_a == stop))    # first occurrence is emitted
+    want_a = list(greedy_a[:cut + 1])
+    want_b = list(eng.generate(b, 12).tokens[0])
+    want_c = list(eng.generate(c, 4).tokens[0])
+
+    srv = BlockServer(eng, num_slots=2, decode_segment=2)
+    rid_a = srv.submit(a, max_new_tokens=8, stop_tokens=(stop,))
+    rid_b = srv.submit(b, max_new_tokens=12)
+    rid_c = srv.submit(c, max_new_tokens=4)
+    done = {x.rid: x for x in srv.run()}
+
+    assert done[rid_a].finish_reason == "stop"
+    assert list(done[rid_a].tokens) == want_a
+    assert done[rid_b].finish_reason == "length"
+    assert list(done[rid_b].tokens) == want_b
+    assert list(done[rid_c].tokens) == want_c
+    # a and b land in different pow2 buckets -> two admission groups (one
+    # assembly compile signature each); c later refills a's freed slot 0
+    log = list(srv.admission_log)
+    assert log[:2] == [((rid_a,), (0,)), ((rid_b,), (1,))]
+    assert any(rids == (rid_c,) and slots == (0,) for rids, slots in log[2:])
+    # a retired strictly before b: fewer decode seconds on the same pool
+    assert len(done[rid_a].tokens) < len(done[rid_b].tokens)
+    assert done[rid_a].decode_s <= done[rid_b].decode_s
+
+
+def test_per_row_temperature_zero_equals_greedy(setup):
+    """Sampling vectors are per ROW: a temperature-0 row batched next to a
+    sampled row still takes the argmax path bitwise; top_k=1 at high
+    temperature collapses to the argmax too (the filter keeps only the
+    max), pinning the on-device top-k mask."""
+    cfg, params, reqs, eng = setup
+    want0 = list(eng.generate(reqs[0], 6).tokens[0])
+    want2 = list(eng.generate(reqs[2], 6).tokens[0])
+
+    srv = BlockServer(eng, num_slots=3, decode_segment=3)
+    r0 = srv.submit(reqs[0], max_new_tokens=6,
+                    sampling=SamplingParams(temperature=0.0))
+    r1 = srv.submit(reqs[1], max_new_tokens=6,
+                    sampling=SamplingParams(temperature=1.3, top_k=8,
+                                            seed=11))
+    r2 = srv.submit(reqs[2], max_new_tokens=6,
+                    sampling=SamplingParams(temperature=5.0, top_k=1,
+                                            seed=3))
+    done = {c.rid: c for c in srv.run()}
+    assert list(done[r0].tokens) == want0
+    assert list(done[r2].tokens) == want2          # top-1 == argmax
+    assert ((done[r1].tokens >= 0)
+            & (done[r1].tokens < cfg.vocab_size)).all()
+
+
+def test_sampled_stream_deterministic_under_fixed_seed(setup):
+    """Fixed SamplingParams.seed -> identical completion order, tokens and
+    finish reasons across two full server lifetimes (fresh pools, same
+    engine): the per-row PRNG stream depends only on the request."""
+    cfg, params, reqs, eng = setup
+
+    def serve():
+        srv = BlockServer(eng, num_slots=2, decode_segment=2)
+        for i, blocks in enumerate(reqs):
+            srv.submit(blocks, max_new_tokens=4 + i,
+                       sampling=SamplingParams(temperature=0.9, top_k=12,
+                                               seed=i))
+        return srv.run()
+
+    d1, d2 = serve(), serve()
+    assert [c.rid % len(reqs) for c in d1] == \
+        [c.rid % len(reqs) for c in d2]            # completion order
+    for c1, c2 in zip(d1, d2):
+        np.testing.assert_array_equal(c1.tokens, c2.tokens)
+        assert c1.finish_reason == c2.finish_reason
+
+
+def test_per_request_accounting(setup):
+    """The GenerationResult-level batch timings are replaced by honest
+    per-request numbers: cache_hit_tokens counts the request's OWN store
+    reuse, prefill splits computed vs total, and ttft/decode are measured
+    per lifecycle (ttft from submit, decode to the row's own retirement)."""
+    cfg, params, reqs, _ = setup
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    srv = BlockServer(eng, num_slots=1, decode_segment=2)
+    rid1 = srv.submit(reqs[0], max_new_tokens=4)
+    done1 = {c.rid: c for c in srv.run()}
+    c1 = done1[rid1]
+    prefix = sum(len(b) for b in reqs[0][:-1])
+    total = prefix + len(reqs[0][-1])
+    assert c1.prefill_tokens_total == total
+    assert c1.prefill_tokens_computed == total     # cold store
+    assert c1.cache_hit_tokens == 0
+    assert c1.ttft_s > 0 and c1.decode_s > 0
+
+    rid2 = srv.submit(reqs[0], max_new_tokens=4)   # warm: full prefix reuse
+    c2 = {c.rid: c for c in srv.run()}[rid2]
+    assert c2.cache_hit_tokens == prefix
+    assert c2.prefill_tokens_computed == len(reqs[0][-1])
+    np.testing.assert_array_equal(c1.tokens, c2.tokens)
+
+
+def test_max_new_tokens_one_completes_at_admission(setup):
+    """Degenerate lifecycle: the first (final-pass) token exhausts the
+    budget — the request completes at admission, never holding a slot."""
+    cfg, params, reqs, eng = setup
+    want = eng.generate(reqs[0], 1).tokens[0]
+    srv = BlockServer(eng, num_slots=2, decode_segment=2)
+    rid = srv.submit(reqs[0], max_new_tokens=1)
+    done = srv.run()
+    assert [c.rid for c in done] == [rid]
+    assert list(done[0].tokens) == list(want)
+    assert done[0].finish_reason == "length"
+    assert srv.segments == 0 and srv.num_active == 0
+
+
+def test_scheduler_take_pops_buckets_then_rid_order():
+    """``take`` is the server admission pop: bucket-coherent by default
+    (one (P_pad, F_pad) compile signature per group), strict rid order
+    with any_bucket=True (the synchronous-wrapper mode)."""
+    sched = Scheduler(max_batch=8, max_wait_s=0.0)
+    small = [np.arange(4, dtype=np.int32), np.arange(4, dtype=np.int32)]
+    big = [np.arange(64, dtype=np.int32), np.arange(4, dtype=np.int32)]
+    r0 = sched.submit(small)
+    r1 = sched.submit(big)
+    r2 = sched.submit(small)
+    got = sched.take(2)
+    assert [r.rid for r in got] == [r0, r2]        # one bucket, oldest rid
+    assert sched.pending() == 1
+    assert [r.rid for r in sched.take(2)] == [r1]
+    assert sched.take(2) == [] and sched.pending() == 0
+
+    sched.submit(small); sched.submit(big); sched.submit(small)
+    got = sched.take(2, any_bucket=True)
+    assert [r.bucket_key != got[0].bucket_key for r in got] == [False, True]
+    assert sched.pending() == 1

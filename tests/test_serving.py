@@ -262,9 +262,10 @@ def test_generate_batch_splits_unservable_row_mix(setup):
 
 
 def test_assemble_rope_kernel_backend_parity(setup):
-    """The batched rope_shift kernel wired into _assemble (TPU backend
-    switch, forced on here under interpret) must reproduce the jnp-rope
-    branch token-for-token — including reordered cached blocks (Eq. 3)."""
+    """The per-token-delta rope_shift kernel wired into the paged assembly
+    (``ops.reencode_tokens_kv``; TPU backend switch, forced on here under
+    interpret) must reproduce the jnp-rope branch token-for-token —
+    including reordered cached blocks (Eq. 3)."""
     cfg, params, blocks = setup
     eng_jnp = BlockAttentionEngine(params, cfg, max_seq=128,
                                    rope_backend="jnp")

@@ -6,6 +6,8 @@
   Fig. 2 serving -> batch_decode (mixed-shape batched vs batch=1 tokens/s)
   DESIGN §7 lifecycle -> serving (continuous batching vs static drain on
                       Poisson mixed traffic: tokens/s, p50/p95 TTFT)
+  DESIGN §8 paged pool -> shared (Zipf-hot shared prefixes: paged parity,
+                      resident-KV dedup, paged vs contiguous tokens/s)
   §2.3 training  -> train_step (masked vs structural ragged block training)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
@@ -28,9 +30,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
                     default=["ttft", "cache", "kernels", "batch", "serving",
-                             "train"],
+                             "shared", "train"],
                     choices=["ttft", "cache", "kernels", "batch", "serving",
-                             "train"])
+                             "shared", "train"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -73,6 +75,15 @@ def main() -> None:
                                 "query_lens": (8, 12),
                                 "new_tokens": (2, 4, 6)}
                                if args.smoke else {}))
+    if "shared" in args.sections:
+        from benchmarks import serving_latency
+        serving_latency.run_shared(**({"n_requests": 6, "pool_size": 2,
+                                       "plen": 16, "slots": 2,
+                                       "decode_segment": 2, "page_size": 8,
+                                       "repeats": 1, "mean_gap_s": 0.01,
+                                       "query_lens": (8, 12),
+                                       "new_tokens": (2, 4)}
+                                      if args.smoke else {}))
     if "train" in args.sections:
         from benchmarks import train_step
         train_step.run([168] if args.smoke else [512, 2048],

@@ -390,3 +390,49 @@ def decode_attention(
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q, pool_k, pool_v,
+    tables: jax.Array,               # (B, MP) int32 page ids per row
+    page_starts: jax.Array,          # (B, MP+1) int32 cumulative occupancy
+    cache_len: jax.Array,            # (B,) tokens already in the cache
+    scale: float,                    # (model-path convention, as in
+    softcap: float = 0.0,            #  decode_attention: len BEFORE write)
+):
+    """Decode attention gathering KV through per-row page tables.
+
+    The paged twin of ``decode_attention`` (and the reference for the
+    block-table ``flash_decode`` path): ``pool_k``/``pool_v`` are the
+    SHARED slabs (num_pages, PS, KV, D) — one physical copy per distinct
+    block — and each row reads its logical sequence through ``tables``.
+    A table slot's occupancy is ``page_starts[b, j+1] - page_starts[b, j]``
+    (0 marks a dead slot; partially filled pages mask their tail), and the
+    slot's tokens sit at global positions ``page_starts[b, j] + offset``,
+    which plug straight into the §3 causal mask ``kv_pos < q_pos + 1``.
+    Supports Sq > 1 (the final-block pass runs through here too). Sliding
+    window is unsupported: table order is logical, not physical.
+    """
+    B, Sq, H, D = q.shape
+    PS, KV = pool_k.shape[1], pool_k.shape[2]
+    MP = tables.shape[1]
+    G = H // KV
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    tables = jnp.asarray(tables, jnp.int32)
+    starts = jnp.asarray(page_starts, jnp.int32)
+    kg = pool_k[tables].astype(jnp.float32).reshape(B, MP * PS, KV, D)
+    vg = pool_v[tables].astype(jnp.float32).reshape(B, MP * PS, KV, D)
+    off = jnp.arange(PS, dtype=jnp.int32)
+    occ = starts[:, 1:] - starts[:, :-1]                       # (B, MP)
+    gidx = (starts[:, :-1, None] + off).reshape(B, MP * PS)    # kv positions
+    valid = (off[None, None, :] < occ[:, :, None]).reshape(B, MP * PS)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kg)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = cache_len[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    mask = valid[:, None, :] & (gidx[:, None, :] < q_pos[:, :, None] + 1)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vg)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

@@ -51,6 +51,11 @@ class BlockLayout:
     block_ids: Optional[jax.Array]        # (seq,) or (batch, seq) int32
     last_block_id: Optional[jax.Array]    # scalar or (batch,) int32
     starts: Optional[jax.Array] = None    # (nb+1,) or (batch, nb+1) int32
+    graph_ids: Optional[jax.Array] = None  # (batch, nb) int32 block-graph ids:
+                                          # per-row DISTINCT-block instance
+                                          # ids (-1 = pad slot) — the shared
+                                          # paged pool's dedup operand; a
+                                          # static-shape (batch, nb) child
     # -- static signature (pytree aux data) --
     num_blocks: int = 0                   # 0 -> structure unknown (mask path)
     seq_len: int = 0
@@ -60,7 +65,8 @@ class BlockLayout:
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
-        children = (self.block_ids, self.last_block_id, self.starts)
+        children = (self.block_ids, self.last_block_id, self.starts,
+                    self.graph_ids)
         aux = (self.num_blocks, self.seq_len, self.max_block_len,
                self.max_final_len, self.uniform)
         return children, aux
@@ -230,12 +236,20 @@ def ragged_layout(row_lens, max_block_len: int = 0,
         uniform=bool((lens == lens[0, 0]).all()))
 
 
-def from_row_lens(row_lens: Sequence[Sequence[int]]) -> BlockLayout:
+def from_row_lens(row_lens: Sequence[Sequence[int]],
+                  graph_ids: Optional[Sequence[Sequence[int]]] = None
+                  ) -> BlockLayout:
     """Bookkeeping layout for the serving engine: per-row block lengths that
     may DIFFER in count and total. Rows with fewer blocks are padded with
     zero-length blocks *before* the final (query) entry so the final block
     sits at index nb-1 for every row; ``starts`` stays numpy so the host-side
-    length/delta bookkeeping costs no device sync."""
+    length/delta bookkeeping costs no device sync.
+
+    ``graph_ids`` (optional): per-row distinct-block instance ids aligned
+    with each row's ORIGINAL (unpadded) block list — the block-graph
+    operand of the shared paged pool. Stored padded to the same (B, nb)
+    static shape with -1 in pad slots (zero-length pad blocks sit before
+    the final entry, mirroring the ``starts`` padding)."""
     rows = [[int(l) for l in r] for r in row_lens]
     nb = max(len(r) for r in rows)
     B = len(rows)
@@ -243,8 +257,18 @@ def from_row_lens(row_lens: Sequence[Sequence[int]]) -> BlockLayout:
     for r, lens in enumerate(rows):
         padded = lens[:-1] + [0] * (nb - len(lens)) + lens[-1:]
         starts[r, 1:] = np.cumsum(padded)
+    gids = None
+    if graph_ids is not None:
+        assert len(graph_ids) == B, (len(graph_ids), B)
+        gids = np.full((B, nb), -1, np.int32)
+        for r, ids in enumerate(graph_ids):
+            ids = [int(i) for i in ids]
+            assert len(ids) == len(rows[r]), (len(ids), len(rows[r]))
+            gids[r, : len(ids) - 1] = ids[:-1]
+            gids[r, nb - 1] = ids[-1]
     return BlockLayout(
         None, np.full((B,), nb - 1, np.int32), starts.astype(np.int32),
+        graph_ids=gids,
         num_blocks=nb, seq_len=0,
         max_block_len=int(max((max(r[:-1]) for r in rows if len(r) > 1),
                               default=0)),

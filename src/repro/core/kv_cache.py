@@ -12,13 +12,19 @@ Two tiers:
 
   * ``DecodeKVCache`` — the ordinary intra-request autoregressive cache used
     by ``serve_step`` (a jit-friendly pytree).
+
+  * ``PagedKVPool`` — the shared-block paged serving pool (DESIGN.md §8):
+    fixed-size pages of KV per layer-group in device slabs, a host-side free
+    list, per-page refcounts, and a ``(block content key, rope delta)``
+    directory so each distinct block's KV is materialised ONCE and every
+    slot's attention gathers it through a block table (``PagedView``).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +84,226 @@ def cache_write_prefix(cache_k, cache_v, k_new, v_new):
 
 
 # ---------------------------------------------------------------------------
+# Paged pool view + tail-page append (device side)
+# ---------------------------------------------------------------------------
+class PagedView(NamedTuple):
+    """Per-row window into the paged pool (a jit-friendly pytree).
+
+    ``tables`` (B, MP) int32: page ids per row, in token order, padded with
+    the sink page 0. ``page_starts`` (B, MP+1) int32: token position of each
+    table slot's first token (cumulative page occupancy); a slot's occupancy
+    is ``page_starts[b, j+1] - page_starts[b, j]`` — 0 marks a dead slot.
+    ``tail_base`` (B,): first token position of the row's private tail
+    region; ``tail_page0`` (B,): table slot of the first tail page.
+    """
+    tables: jax.Array
+    page_starts: jax.Array
+    tail_base: jax.Array
+    tail_page0: jax.Array
+
+    @property
+    def max_pages(self) -> int:
+        return self.tables.shape[1]
+
+
+def paged_cache_update(pool_k, pool_v, k_new, v_new, view: PagedView, start):
+    """Append (B, T, KV, D) new KV into per-row private tail pages.
+
+    ``pool_k``/``pool_v`` are single-group slabs (num_pages, page_size, KV,
+    D). The token at global position ``p = start[b] + t`` lands in table
+    slot ``tail_page0[b] + (p - tail_base[b]) // page_size`` at in-page
+    offset ``(p - tail_base[b]) % page_size``. Tail pages are slot-private,
+    so rows never contend; idle/padding/retired rows (all-sink tables,
+    frozen position 0) collide only on the sink page 0, which holds garbage
+    by contract and is masked out of every gather.
+    """
+    ps = pool_k.shape[1]
+    B, T = k_new.shape[:2]
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.full((B,), start, jnp.int32)
+    p = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    toff = jnp.maximum(p - view.tail_base[:, None], 0)
+    slot = jnp.clip(view.tail_page0[:, None] + toff // ps,
+                    0, view.tables.shape[1] - 1)
+    page = jnp.take_along_axis(view.tables, slot, axis=1)        # (B, T)
+    off = toff % ps
+    pool_k = pool_k.at[page, off].set(k_new)
+    pool_v = pool_v.at[page, off].set(v_new)
+    return pool_k, pool_v
+
+
+# ---------------------------------------------------------------------------
+# Paged pool bookkeeping (host side)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _PageGroup:
+    """One distinct block instance resident in the pool: the pages holding
+    its KV (in token order) and how many requests currently reference it."""
+    pages: Tuple[int, ...]
+    num_tokens: int
+    refs: int = 0
+
+
+class PagedKVPool:
+    """Shared-block paged KV pool: store each distinct block's KV once.
+
+    ``slabs`` is the engine-owned device pytree ``{pos_key: {"k"/"v":
+    (G, num_pages, page_size, KV, D)}}`` — the same dict shape as the
+    contiguous decode caches, so the model's layer-group scan runs
+    unchanged; this object owns only the host bookkeeping:
+
+      * a free list of page ids and per-page refcounts;
+      * a directory ``(block content key, rope delta) -> _PageGroup`` so a
+        block re-encoded for offset Δ is written once and shared by every
+        slot that places it there (physical dedup);
+      * page 0 is a permanently pinned *sink*: idle, padding and retired
+        rows read and write it harmlessly; it is never allocated.
+
+    Zero-ref directory groups stay resident (warm reuse across requests)
+    and are reclaimed LRU-first only when an allocation would otherwise
+    fail. ``alloc`` hands out pages at refcount 0; private (tail) pages are
+    ``retain``-ed by their slot and ``free``-d at retirement, shared groups
+    are ``register``-ed then ``acquire``/``release``-d per referencing row.
+    """
+
+    def __init__(self, slabs: Dict[str, Any], num_pages: int, page_size: int):
+        self.slabs = slabs
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        if self.num_pages < 2:
+            raise ValueError("PagedKVPool needs >= 2 pages (page 0 is sink)")
+        self._free: List[int] = list(range(1, self.num_pages))
+        self._refs = np.zeros((self.num_pages,), np.int64)
+        self._refs[0] = 1                       # sink: never reclaimed
+        self._groups: "OrderedDict[Tuple[str, int], _PageGroup]" = OrderedDict()
+        self.page_hits = 0
+        self.page_misses = 0
+        self.reclaims = 0
+        self.alloc_failures = 0
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    @property
+    def page_nbytes(self) -> int:
+        """Bytes of ONE page summed across every layer-group slab (k+v)."""
+        total = 0
+        for kv in self.slabs.values():
+            for a in (kv["k"], kv["v"]):
+                total += (a.size // a.shape[1]) * a.dtype.itemsize
+        return int(total)
+
+    @property
+    def resident_block_bytes(self) -> int:
+        """Bytes held by shared (directory) pages — the dedup metric: this
+        scales with *unique* blocks, not ``num_slots × prefix_len``."""
+        return sum(len(g.pages) for g in self._groups.values()) \
+            * self.page_nbytes
+
+    @property
+    def unique_blocks(self) -> int:
+        return len(self._groups)
+
+    def pages_for(self, num_tokens: int) -> int:
+        return -(-int(num_tokens) // self.page_size)
+
+    # -- allocation ----------------------------------------------------
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` free pages (refcount 0), reclaiming zero-ref shared
+        groups LRU-first under pressure; None when the pool cannot satisfy
+        the request (caller falls back to the non-paged path)."""
+        if n <= 0:
+            return []
+        while len(self._free) < n and self._reclaim_one():
+            pass
+        if len(self._free) < n:
+            self.alloc_failures += 1
+            return None
+        pages, self._free = self._free[:n], self._free[n:]
+        return pages
+
+    def retain(self, pages: Sequence[int]):
+        for p in pages:
+            self._refs[p] += 1
+
+    def free(self, pages: Sequence[int]):
+        """Return private pages to the free list (drops the slot's ref)."""
+        for p in pages:
+            self._refs[p] -= 1
+            assert self._refs[p] == 0, f"freeing referenced page {p}"
+        self._free.extend(int(p) for p in pages)
+
+    def _reclaim_one(self) -> bool:
+        for key, g in self._groups.items():
+            if g.refs == 0:
+                del self._groups[key]
+                self._free.extend(g.pages)
+                self.reclaims += 1
+                return True
+        return False
+
+    # -- shared-group directory ---------------------------------------
+    def lookup(self, key: Tuple[str, int]) -> Optional[_PageGroup]:
+        g = self._groups.get(key)
+        if g is None:
+            self.page_misses += 1
+            return None
+        self._groups.move_to_end(key)
+        self.page_hits += 1
+        return g
+
+    def register(self, key: Tuple[str, int], pages: Sequence[int],
+                 num_tokens: int) -> _PageGroup:
+        assert key not in self._groups, f"duplicate group {key}"
+        g = _PageGroup(pages=tuple(int(p) for p in pages),
+                       num_tokens=int(num_tokens))
+        self._groups[key] = g
+        return g
+
+    def acquire(self, key: Tuple[str, int]) -> _PageGroup:
+        g = self._groups[key]
+        g.refs += 1
+        for p in g.pages:
+            self._refs[p] += 1
+        self._groups.move_to_end(key)
+        return g
+
+    def release(self, key: Tuple[str, int]):
+        g = self._groups.get(key)
+        if g is None:
+            return
+        g.refs -= 1
+        for p in g.pages:
+            self._refs[p] -= 1
+
+    def drop(self, key: Tuple[str, int]):
+        """Remove a zero-ref group and free its pages immediately (store
+        eviction of a page-backed entry)."""
+        g = self._groups.get(key)
+        if g is None:
+            return
+        assert g.refs == 0, f"dropping referenced group {key}"
+        del self._groups[key]
+        self._free.extend(g.pages)
+
+    def stats(self) -> Dict[str, int]:
+        return {"num_pages": self.num_pages, "page_size": self.page_size,
+                "used_pages": self.used_pages, "free_pages": self.free_pages,
+                "unique_blocks": self.unique_blocks,
+                "resident_block_bytes": self.resident_block_bytes,
+                "page_hits": self.page_hits, "page_misses": self.page_misses,
+                "reclaims": self.reclaims,
+                "alloc_failures": self.alloc_failures}
+
+
+# ---------------------------------------------------------------------------
 # Cross-request block store (the paper's contribution)
 # ---------------------------------------------------------------------------
 def block_key(tokens: np.ndarray, model_tag: str = "") -> str:
@@ -89,9 +315,17 @@ def block_key(tokens: np.ndarray, model_tag: str = "") -> str:
 
 @dataclasses.dataclass
 class BlockEntry:
+    """One cached block. ``kv`` owns standalone zero-based arrays UNLESS the
+    entry is pool-backed, in which case ``kv is None`` and ``pages`` names
+    the ``PagedKVPool`` pages holding the (delta-0) KV — the store then
+    *references* pool memory instead of owning a second copy. ``refs`` pins
+    the entry against LRU eviction while a request in flight depends on it
+    (admitted but not yet assembled)."""
     kv: Any                 # pytree of zero-based KV arrays (per group-pos)
     num_tokens: int
     nbytes: int
+    refs: int = 0
+    pages: Optional[Tuple[int, ...]] = None
 
 
 class BlockKVStore:
@@ -104,7 +338,11 @@ class BlockKVStore:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.eviction_skips = 0
         self._bytes = 0
+        # Called as on_evict(key, entry) when an entry leaves the store —
+        # the paged serving layer uses it to release the entry's pool pages.
+        self.on_evict: Optional[Callable[[str, BlockEntry], None]] = None
 
     # -- stats ---------------------------------------------------------
     @property
@@ -136,19 +374,72 @@ class BlockKVStore:
                          for a in jax.tree.leaves(kv)))
         ent = BlockEntry(kv=kv, num_tokens=int(tokens.shape[0]), nbytes=nbytes)
         if key in self._entries:           # refresh
-            self._bytes -= self._entries[key].nbytes
+            old = self._entries[key]
+            self._bytes -= old.nbytes
+            ent.refs = old.refs            # carry pins across the refresh
+            if old.pages is not None and self.on_evict is not None:
+                self.on_evict(key, old)    # drop the store-held pool ref
         self._entries[key] = ent
         self._entries.move_to_end(key)
         self._bytes += nbytes
         self._evict()
         return ent
 
+    # -- pinning (in-flight protection) --------------------------------
+    def pin(self, tokens: np.ndarray) -> Optional[BlockEntry]:
+        """Pin an entry against eviction for the admit -> assemble window.
+        Balanced by ``unpin``; no LRU touch, no hit/miss accounting."""
+        ent = self._entries.get(block_key(tokens, self.model_tag))
+        if ent is not None:
+            ent.refs += 1
+        return ent
+
+    def unpin(self, tokens: np.ndarray):
+        ent = self._entries.get(block_key(tokens, self.model_tag))
+        if ent is not None:
+            ent.refs = max(0, ent.refs - 1)
+
+    def link_pages(self, tokens: np.ndarray,
+                   pages: Sequence[int]) -> Optional[BlockEntry]:
+        """Convert an entry to pool-page backing: drop its standalone
+        arrays and reference ``pages`` instead. The pool owns the bytes
+        (its slabs are a fixed allocation), so the entry stops counting
+        against the store budget; pool pressure, not store pressure,
+        reclaims the physical KV."""
+        ent = self._entries.get(block_key(tokens, self.model_tag))
+        if ent is None:
+            return None
+        self._bytes -= ent.nbytes
+        ent.kv = None
+        ent.pages = tuple(int(p) for p in pages)
+        ent.nbytes = 0
+        return ent
+
     def _evict(self):
         while self._bytes > self.budget_bytes and len(self._entries) > 1:
-            _, old = self._entries.popitem(last=False)
+            victim = None
+            for key, ent in self._entries.items():
+                if ent.refs > 0:          # pinned: in flight, skip
+                    self.eviction_skips += 1
+                    continue
+                victim = key
+                break
+            if victim is None:            # everything pinned: over budget
+                break                     # beats corrupting live requests
+            old = self._entries.pop(victim)
             self._bytes -= old.nbytes
             self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(victim, old)
+
+    def reset_stats(self):
+        self.hits = self.misses = 0
+        self.evictions = self.eviction_skips = 0
 
     def clear(self):
+        if self.on_evict is not None:
+            for key, ent in self._entries.items():
+                self.on_evict(key, ent)
         self._entries.clear()
         self._bytes = 0
+        self.reset_stats()

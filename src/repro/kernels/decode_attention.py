@@ -18,6 +18,25 @@ A scalar / (1,)-shaped operand broadcasts to all rows (the legacy shared
 An optional sliding ``window`` restricts attention to the trailing positions —
 the long_500k dense-arch variant.
 
+**Paged mode** (``block_tables``/``page_starts`` given): the k/v operands are
+the shared *pool* slabs (num_pages, page_size, D) instead of per-row caches,
+and the k/v ``index_map`` gathers each grid step's tile through a
+scalar-prefetched per-row ``(N, num_tiles)`` block table — the dead-tile
+clamping above generalizes directly, since the index_map already computes a
+data-dependent tile id; here the id is ``tables[n, j]`` clamped to the row's
+last live table slot. ``page_starts`` (N, num_tiles+1) carries cumulative
+page occupancy so partially-filled pages (a block whose length is not a
+page multiple) mask their dead tail. Rows thus share physical KV: one copy
+per distinct block in the pool, every slot reading through its own table.
+Sliding ``window`` is not supported in paged mode (block order in the table
+is logical, not physical).
+
+**Odd-``Skv`` contract** (non-paged): ``Skv`` must be a multiple of the tile
+``tk``. ``ops.decode_attention`` pads the cache view to the next multiple
+(the padded tail is masked dead because ``kv_pos >= cache_len``); direct
+callers with an odd ``Skv`` must pad the same way — `flash_decode` asserts
+rather than silently mis-tiling.
+
 VMEM: q (G, D) + k/v tiles (TK, D) + acc (G, D) f32 — trivially small; the
 kernel is HBM-bandwidth-bound by the cache stream, as the roofline confirms.
 """
@@ -84,10 +103,105 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(len_ref, nlive_ref, tbl_ref, starts_ref,
+                         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                         *, scale: float, ps: int, softcap: float):
+    n = pl.program_id(0)
+    j = pl.program_id(1)
+    mp = pl.num_programs(1)
+    cache_len = len_ref[n]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start_j = starts_ref[n, j]           # first token position of this page
+    occ = starts_ref[n, j + 1] - start_j  # page occupancy (0 = dead slot)
+    live = (start_j < cache_len) & (occ > 0)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale               # (G, D)
+        k = k_ref[0].astype(jnp.float32)                       # (PS, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, PS)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        off = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)[0]
+        mask = (off < occ) & (start_j + off < cache_len)
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == mp - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def _paged_flash_decode(q, pool_k, pool_v, cache_len, block_tables,
+                        page_starts, *, scale, softcap, interpret):
+    N, G, D = q.shape
+    ps = pool_k.shape[1]
+    MP = block_tables.shape[1]
+    assert page_starts.shape == (N, MP + 1), (page_starts.shape, N, MP)
+    cache_len = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (N,))
+    block_tables = jnp.asarray(block_tables, jnp.int32)
+    page_starts = jnp.asarray(page_starts, jnp.int32)
+    # last live table slot per row: dead slots past it clamp onto it (the
+    # page is already resident -> the pipeline elides the DMA, so the HBM
+    # stream scales with live pages, not N * max_pages)
+    occ = page_starts[:, 1:] - page_starts[:, :-1]
+    nlive = jnp.maximum(jnp.sum(
+        ((page_starts[:, :-1] < cache_len[:, None]) & (occ > 0))
+        .astype(jnp.int32), axis=1), 1)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, ps=ps,
+                               softcap=softcap)
+
+    def kv_index(n, j, lens, nlv, tbl, starts):
+        jj = jnp.minimum(j, nlv[n] - 1)
+        return (tbl[n, jj], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(N, MP),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda n, j, *refs: (n, 0, 0)),
+            pl.BlockSpec((1, ps, D), kv_index),
+            pl.BlockSpec((1, ps, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda n, j, *refs: (n, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, G, D), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len, nlive, block_tables, page_starts, q, pool_k, pool_v)
+
+
 def flash_decode(
     q: jax.Array,            # (N, G, D)  N = batch * kv_heads
-    k_cache: jax.Array,      # (N, Skv, D)
-    v_cache: jax.Array,      # (N, Skv, D)
+    k_cache: jax.Array,      # (N, Skv, D) — paged mode: (num_pages, PS, D)
+    v_cache: jax.Array,      # same shape as k_cache
     cache_len: jax.Array,    # (N,) int32 per-row valid length incl. the new
                              # token; scalar-ish shapes broadcast to all rows
     *,
@@ -96,7 +210,15 @@ def flash_decode(
     tk: int = DEFAULT_TK,
     softcap: float = 0.0,
     interpret: bool = True,
+    block_tables: jax.Array = None,   # (N, num_tiles) int32 page ids
+    page_starts: jax.Array = None,    # (N, num_tiles+1) int32 cum. occupancy
 ) -> jax.Array:
+    if block_tables is not None:
+        assert page_starts is not None, "paged mode needs page_starts"
+        assert window == 0, "sliding window unsupported in paged mode"
+        return _paged_flash_decode(q, k_cache, v_cache, cache_len,
+                                   block_tables, page_starts, scale=scale,
+                                   softcap=softcap, interpret=interpret)
     N, G, D = q.shape
     Skv = k_cache.shape[1]
     tk = min(tk, Skv)

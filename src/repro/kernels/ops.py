@@ -228,6 +228,40 @@ def decode_attention(q, k_cache, v_cache, cache_len, scale: float,
 
 
 @functools.partial(jax.jit, static_argnames=(
+    "scale", "softcap", "interpret"))
+def paged_decode_attention(q, pool_k, pool_v, tables, page_starts, cache_len,
+                           scale: float, softcap: float = 0.0,
+                           interpret: bool = INTERPRET):
+    """Single-token decode through the shared paged pool.
+
+    q (B,1,H,D); pool_k/v (num_pages, PS, KV, D) — the SHARED slabs, not
+    per-row caches; tables (B, MP) int32 page ids; page_starts (B, MP+1)
+    int32 cumulative page occupancy; cache_len as in ``decode_attention``.
+    GQA folds the head axis into both the pool (page p of head h becomes
+    folded page ``p*KV + h``) and the tables, so the kernel still sees
+    plain (P', PS, D) slabs and a per-row (N, MP) table.
+    """
+    B, _, H, D = q.shape
+    PS, KV = pool_k.shape[1], pool_k.shape[2]
+    G = H // KV
+    MP = tables.shape[1]
+    qf = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kf = pool_k.transpose(0, 2, 1, 3).reshape(-1, PS, D)     # (P*KV, PS, D)
+    vf = pool_v.transpose(0, 2, 1, 3).reshape(-1, PS, D)
+    heads = jnp.arange(KV, dtype=jnp.int32)[None, :, None]
+    tbl = (jnp.asarray(tables, jnp.int32)[:, None, :] * KV
+           + heads).reshape(B * KV, MP)
+    starts = jnp.repeat(jnp.asarray(page_starts, jnp.int32), KV, axis=0)
+    cl = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (B,))
+    cl = jnp.repeat(cl, KV)                                  # (B*KV,)
+    o = flash_decode(qf, kf, vf, cl, scale=scale, softcap=softcap,
+                     interpret=interpret, block_tables=tbl,
+                     page_starts=starts)
+    return o.reshape(B, KV, G, D).reshape(B, 1, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=(
     "rotary_dim", "theta", "interleaved", "interpret"))
 def reencode_block_kv(k, delta, rotary_dim: int, theta: float,
                       interleaved: bool = False, interpret: bool = INTERPRET):

@@ -77,6 +77,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="shared-block paged KV pool (DESIGN.md §8): one "
+                         "physical copy per distinct block, slots gather "
+                         "through block tables")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--stream", action="store_true",
                     help="print a line per streamed token")
     ap.add_argument("--seed", type=int, default=0)
@@ -123,7 +128,8 @@ def main():
         trailer = {}
     else:
         server = BlockServer(engine, num_slots=args.slots,
-                             decode_segment=args.decode_segment)
+                             decode_segment=args.decode_segment,
+                             paged=args.paged, page_size=args.page_size)
         cb = (lambda ev: print(json.dumps({
             "rid": ev.rid, "token": int(ev.token), "index": ev.index,
             "finished": ev.finished}), flush=True)) if args.stream else None

@@ -214,12 +214,17 @@ def decode_step(
     caches: dict, states: dict, cache_len: jax.Array,
     enc_out: Optional[jax.Array] = None,
     unroll: bool = False,
+    paged=None,
 ) -> Tuple[jax.Array, dict, dict]:
     """One serve step: tokens (B, T) -> (logits (B,T,V), caches, states).
 
     ``cache_len``: int32 tokens already in the cache (write offset) — a
     scalar (all rows aligned) or a (B,) per-row vector (paged ragged batch:
     row ``b`` writes at ``cache_len[b]`` and attends ``[0, cache_len[b]]``).
+
+    ``paged``: a ``core.kv_cache.PagedView`` — then ``caches`` are the
+    SHARED pool slabs (one physical copy per distinct block) and each row
+    reads/writes through its own page table (DESIGN.md §8).
     """
     if cfg.arch_type == "audio":
         logits, cache = encdec.decode_step(
@@ -231,7 +236,8 @@ def decode_step(
     positions = (jnp.reshape(cache_len, (-1, 1))
                  + jnp.arange(Tq, dtype=jnp.int32)[None, :])
     positions = jnp.broadcast_to(positions, (B, Tq))
-    ctx = T.AttnCtx(kind="decode", positions=positions, cache_len=cache_len)
+    ctx = T.AttnCtx(kind="decode", positions=positions, cache_len=cache_len,
+                    paged=paged)
     h = T.embed_tokens(params, cfg, tokens)
     h, aux, new_caches, new_states, _ = T.forward_hidden(
         params, cfg, h, ctx, caches=caches, states=states, unroll=unroll)

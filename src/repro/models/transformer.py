@@ -40,7 +40,7 @@ from repro.core.config import (
     ATTN, FFN_DENSE, FFN_MOE, FFN_NONE, MAMBA2, MLSTM, SHARED_ATTN, SLSTM,
     ModelConfig,
 )
-from repro.core.kv_cache import cache_update
+from repro.core.kv_cache import PagedView, cache_update, paged_cache_update
 from repro.core.rope import apply_rope
 from repro.kernels import ops
 from repro.nn import layers as L
@@ -178,6 +178,9 @@ class AttnCtx:
                                               # else THE dispatch object
     cache_len: Optional[jax.Array] = None     # decode: len before write —
                                               # scalar or (B,) per-row (paged)
+    paged: Optional[PagedView] = None         # decode: caches are SHARED pool
+                                              # slabs read through per-row
+                                              # page tables (DESIGN.md §8)
     kv_chunk: int = 512
     collect_kv: bool = False                  # prefill: return per-layer KV
     impl: str = "flash"                       # flash | dense (dry-run/tests)
@@ -209,9 +212,20 @@ def _attn_sublayer(p, cfg: ModelConfig, spec: LayerSpec, h, ctx: AttnCtx,
     new_cache = None
     if ctx.kind == "decode":
         assert cache is not None
-        ck, cv = cache_update(cache["k"], cache["v"], k, v, ctx.cache_len)
-        o = A.decode_attention(q, ck, cv, ctx.cache_len, scale,
-                               window=window or (chunk and _chunk_window(ctx, chunk)))
+        if ctx.paged is not None:
+            # shared paged pool: append into this row's private tail pages,
+            # attend through the per-row page table (DESIGN.md §8)
+            assert not window and not chunk, \
+                "paged decode: sliding window / chunked layers unsupported"
+            ck, cv = paged_cache_update(cache["k"], cache["v"], k, v,
+                                        ctx.paged, ctx.cache_len)
+            o = A.paged_decode_attention(q, ck, cv, ctx.paged.tables,
+                                         ctx.paged.page_starts,
+                                         ctx.cache_len, scale)
+        else:
+            ck, cv = cache_update(cache["k"], cache["v"], k, v, ctx.cache_len)
+            o = A.decode_attention(q, ck, cv, ctx.cache_len, scale,
+                                   window=window or (chunk and _chunk_window(ctx, chunk)))
         new_cache = {"k": ck, "v": cv}
     else:
         o = _prefill_attention(q, k, v, cfg, ctx, scale, window, chunk)
@@ -521,3 +535,23 @@ def init_decode_caches(cfg: ModelConfig, batch: int, max_seq: int,
         states[key] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (groups,) + a.shape), st)
     return caches, states
+
+
+def init_paged_pool_slabs(cfg: ModelConfig, num_pages: int, page_size: int,
+                          dtype=jnp.bfloat16):
+    """Shared paged KV slabs: per-pos {"k","v": (G, num_pages, PS, KV, D)}.
+
+    The same dict-of-positions pytree shape as ``init_decode_caches``, so
+    the layer-group scan threads pool slabs exactly like per-row caches —
+    only the per-slab array shape differs (pages replace the batch × seq
+    plane). Page 0 is the sink page by PagedKVPool contract.
+    """
+    specs = build_layer_specs(cfg)
+    period = find_period(specs)
+    groups = cfg.num_layers // period
+    slabs = {}
+    for key in num_attn_positions(cfg):
+        shape = (groups, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+        slabs[key] = {"k": jnp.zeros(shape, dtype),
+                      "v": jnp.zeros(shape, dtype)}
+    return slabs

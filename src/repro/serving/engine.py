@@ -199,11 +199,72 @@ class BlockAttentionEngine:
                 out[pos_key] = {"k": ck, "v": cv}
             return out
 
+        @jax.jit
+        def _write_pool_pages(flat, slabs, idx, pos_vec, valid, page_ids):
+            """Write NEW distinct blocks into shared pool pages (§8).
+
+            The paged twin of ``_assemble_paged``, with pages in place of
+            slot rows: each *distinct* block instance is written ONCE into
+            its pool pages instead of once per referencing slot. flat:
+            {pos: {"k","v": (G, NP*PS, KV, D)}} — the new blocks' zero-
+            based KV concatenated end to end (zero tail to the bucket
+            size); idx (NP, PS) gathers page p's tokens out of the flat
+            stream; pos_vec (NP, PS) carries each token's Eq.-3 delta (the
+            block's offset in the referencing prompt — identical for every
+            sharer by the (content, delta) dedup key); valid masks partial
+            pages; page_ids (NP,) are the target pages (pad entries write
+            the sink page 0). Compile key is the NP pow2 bucket.
+            """
+            out = dict(slabs)
+            m = valid[None, :, :, None, None]
+            for pos_key, kv in flat.items():
+                k = jnp.where(m, kv["k"][:, idx], 0)  # (G, NP, PS, KV, D)
+                v = jnp.where(m, kv["v"][:, idx], 0)
+                if self.reencode:
+                    if self._rope_kernel:
+                        k = ops.reencode_tokens_kv(
+                            k, pos_vec, rotary_dim=cfg.rotary_dim,
+                            theta=cfg.rope_theta,
+                            interleaved=cfg.rope_interleaved)
+                    else:
+                        k = apply_rope(k, pos_vec, cfg)
+                ck = out[pos_key]["k"].at[:, page_ids].set(
+                    k.astype(self.dtype))
+                cv = out[pos_key]["v"].at[:, page_ids].set(
+                    v.astype(self.dtype))
+                out[pos_key] = {"k": ck, "v": cv}
+            return out
+
+        @jax.jit
+        def _final_block_pass_paged(params, tokens, slabs, view, cache_len,
+                                    last_idx):
+            """Final (query) block through the model against the SHARED
+            paged pool: per-row query tokens append into the row's private
+            tail pages and attend its page table (prefix pages are shared
+            physical KV). Same contract as ``_final_block_pass`` otherwise;
+            width-padding rows carry all-sink tables and write/read only
+            the sink page."""
+            B, Tq = tokens.shape
+            cache_len = jnp.broadcast_to(
+                jnp.asarray(cache_len, jnp.int32), (B,))
+            positions = (cache_len[:, None]
+                         + jnp.arange(Tq, dtype=jnp.int32)[None, :])
+            ctx = T.AttnCtx(kind="decode", positions=positions,
+                            cache_len=cache_len, paged=view)
+            h = T.embed_tokens(params, cfg, tokens)
+            h, _, new_slabs, _, _ = T.forward_hidden(
+                params, cfg, h, ctx, caches=slabs, states={})
+            h_last = jnp.take_along_axis(
+                h, jnp.reshape(jnp.asarray(last_idx, jnp.int32), (B, 1, 1)),
+                axis=1)
+            logits = T.logits_from_hidden(params, cfg, h_last)
+            return logits, new_slabs
+
         @functools.partial(jax.jit, static_argnames=("steps", "greedy",
                                                      "top_k_active"))
         def _decode_scan(params, cur, caches, states, pos, active, remaining,
                          stop_toks, keys, temps, top_ks, steps, greedy,
-                         top_k_active=True):
+                         top_k_active=True, paged=None):
             """ONE lifecycle-aware decode segment as an on-device scan.
 
             This is THE decode loop for every path — the lifecycle server
@@ -243,7 +304,8 @@ class BlockAttentionEngine:
             def body(carry, _):
                 cur, pos, active, remaining, keys, caches, states = carry
                 logits, caches, states = api.decode_step(
-                    params, cfg, cur[:, None], caches, states, pos)
+                    params, cfg, cur[:, None], caches, states, pos,
+                    paged=paged)
                 lg = logits[:, -1]
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
@@ -284,12 +346,19 @@ class BlockAttentionEngine:
 
         self._encode_block = _encode_block
         self._final_block_pass = _final_block_pass
+        self._final_block_pass_paged = _final_block_pass_paged
         self._full_prefix_pass = _full_prefix_pass
         self._assemble_paged = _assemble_paged
+        self._write_pool_pages = _write_pool_pages
         self._decode_scan = _decode_scan
         self._scatter_rows = _scatter_rows
         self._sample = jax.jit(api.sample_tokens,
                                static_argnames=("use_top_k",))
+        # set by a paged BlockServer: callable (pages, num_tokens) -> kv
+        # pytree, materialising a pool-page-backed store entry back to
+        # contiguous arrays (the non-paged fallback path's view of shared
+        # physical KV)
+        self._page_reader = None
 
     # ------------------------------------------------------------------
     def _fresh_caches(self, batch: int):
@@ -306,10 +375,18 @@ class BlockAttentionEngine:
     # Block path (attention archs)
     # ------------------------------------------------------------------
     def _get_block_kv(self, tokens: np.ndarray):
-        """Zero-based KV pytree for one block (cache or fresh encode)."""
+        """Zero-based KV pytree for one block (cache or fresh encode).
+
+        Page-backed entries (``ent.kv is None``, ``ent.pages`` set —
+        DESIGN.md §8: the pool owns the physical KV) are materialised
+        through the owning server's ``_page_reader``; if no reader is
+        installed (pool torn down) the block is re-encoded as a miss."""
         ent = self.store.lookup(tokens)
         if ent is not None:
-            return ent.kv, True
+            if ent.kv is not None:
+                return ent.kv, True
+            if ent.pages is not None and self._page_reader is not None:
+                return self._page_reader(ent.pages, ent.num_tokens), True
         collected = self._encode_block(self.params,
                                        jnp.asarray(tokens)[None, :])
         # squeeze batch: {pos: {"k": (G, 1, L, KV, D)}} -> (G, L, KV, D)

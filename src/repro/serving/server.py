@@ -56,8 +56,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import kv_cache as KV
 from repro.core.blocks import from_row_lens
-from repro.models import api
+from repro.models import api, transformer as T
 from repro.serving.scheduler import Request, Scheduler, pow2_bucket
 
 
@@ -138,11 +139,36 @@ class BlockServer:
                         the whole submitted batch must co-serve as one
                         group); True = one bucket per admission group so
                         each group shares one assembly compile signature.
+    ``paged``           True = shared-block paged KV serving (DESIGN.md
+                        §8): instead of ``num_slots`` private contiguous
+                        cache rows, KV lives in a ``PagedKVPool`` of
+                        fixed-size pages — each DISTINCT (block content,
+                        rope delta) is written once and every slot that
+                        references it attends the same physical pages
+                        through its block table. Decode tokens append
+                        into per-slot private tail pages. Resident KV
+                        therefore scales with *unique* blocks, not
+                        ``num_slots × prefix_len``.
+    ``page_size``       tokens per pool page (paged mode).
+    ``pool_pages``      total pool pages incl. the sink page 0 (default:
+                        enough for every slot at max_seq — shrink it to
+                        exercise reclaim / the exhaustion fallback).
+    ``max_row_pages``   static width of the per-row block table (default
+                        covers max_seq plus per-block fragmentation).
+    ``admit_hysteresis`` >0 = hold a TINY admission group (a single
+                        pending request) for up to that many steps while
+                        decode is active, letting it coalesce with later
+                        arrivals instead of paying a width-1 prefill
+                        under light load. Never delays when slots idle.
     """
 
     def __init__(self, engine, *, num_slots: int = 4,
                  decode_segment: int = 8, max_stop_tokens: int = 4,
-                 bucket_admission: bool = True):
+                 bucket_admission: bool = True,
+                 paged: bool = False, page_size: int = 16,
+                 pool_pages: Optional[int] = None,
+                 max_row_pages: Optional[int] = None,
+                 admit_hysteresis: int = 0):
         assert not engine._is_recurrent, \
             "BlockServer needs KV-cache attention archs (recurrent archs " \
             "use engine.generate's prefix path)"
@@ -152,10 +178,47 @@ class BlockServer:
         self.decode_segment = decode_segment
         self.max_stop_tokens = max_stop_tokens
         self.bucket_admission = bucket_admission
+        self.paged = paged
+        self.admit_hysteresis = int(admit_hysteresis)
+        self.admission_deferrals = 0
+        self._hold_count = 0
         self._queue = Scheduler(max_batch=num_slots, max_wait_s=0.0)
 
         B = num_slots
-        self._caches = engine._fresh_caches(B)   # THE pool: allocated once
+        if paged:
+            cfg = engine.cfg
+            assert not (cfg.sliding_window or cfg.attention_chunk), \
+                "paged serving: sliding-window / chunked attention layers " \
+                "have no paged decode path"
+            ps = int(page_size)
+            assert ps >= 1
+            # worst case per row: every prefix block wastes < 1 page of
+            # fragmentation; 8 covers any realistic RAG block count, and
+            # admission falls back (never corrupts) past it
+            self._max_row_pages = int(max_row_pages) if max_row_pages \
+                else -(-engine.max_seq // ps) + 8
+            if pool_pages is None:
+                pool_pages = 1 + B * self._max_row_pages
+            slabs = T.init_paged_pool_slabs(cfg, pool_pages, ps,
+                                            dtype=engine.dtype)
+            self.pool = KV.PagedKVPool(slabs, pool_pages, ps)
+            engine.store.on_evict = self._on_store_evict
+            engine._page_reader = self._read_pages
+            self.pool_fallbacks = 0
+            self._caches = None          # the pool slabs ARE the cache
+            MP = self._max_row_pages
+            self._tables = np.zeros((B, MP), np.int32)
+            self._pstarts = np.zeros((B, MP + 1), np.int32)
+            self._tail_base = np.zeros(B, np.int32)
+            self._tail_page0 = np.zeros(B, np.int32)
+            # per-slot held resources: acquired (key, delta) directory
+            # groups and retained private tail pages
+            self._slot_groups: List[List[Tuple[str, int]]] = \
+                [[] for _ in range(B)]
+            self._slot_tail: List[List[int]] = [[] for _ in range(B)]
+        else:
+            self.pool = None
+            self._caches = engine._fresh_caches(B)  # THE pool: allocated once
         self._states: dict = {}
         # per-slot lifecycle vectors (host mirrors of the scan carry)
         self._rids: List[Optional[int]] = [None] * B
@@ -200,6 +263,15 @@ class BlockServer:
              total, max_new_tokens, self.engine.max_seq)
         assert len(stop_tokens) <= self.max_stop_tokens, \
             (len(stop_tokens), self.max_stop_tokens)
+        if self.paged:
+            # best-effort table-width check (the group's shared final pad
+            # can still push a row over — admission then falls back)
+            ps = self.pool.page_size
+            need = sum(-(-len(b) // ps) for b in blocks[:-1]) + max(
+                1, -(-(len(blocks[-1]) + max_new_tokens) // ps))
+            assert need <= self._max_row_pages, \
+                ("request needs more pages than the per-row block table "
+                 "holds", need, self._max_row_pages)
         return self._queue.submit(blocks, max_new_tokens, sampling=sampling,
                                   stop_tokens=stop_tokens,
                                   stream_cb=stream_cb)
@@ -250,6 +322,17 @@ class BlockServer:
             free = self._free_slots()
             if not free or not self._queue.pending():
                 return done
+            # admission hysteresis: a lone request arriving while decode is
+            # busy waits up to ``admit_hysteresis`` steps for company — a
+            # width-1 prefill amortises badly against a running pool. Idle
+            # servers (nothing active) always admit immediately.
+            if (self.admit_hysteresis > 0 and self._active.any()
+                    and self._queue.pending() == 1
+                    and self._hold_count < self.admit_hysteresis):
+                self._hold_count += 1
+                self.admission_deferrals += 1
+                return done
+            self._hold_count = 0
             reqs = self._queue.take(len(free),
                                     any_bucket=not self.bucket_admission)
             if not reqs:
@@ -257,7 +340,14 @@ class BlockServer:
             P = np.asarray([r.prefix_len for r in reqs], np.int32)
             F = np.asarray([r.final_len for r in reqs], np.int32)
             for g in self.engine._coservable_groups(P, F):
-                done.extend(self._admit_group([reqs[i] for i in g]))
+                sub = [reqs[i] for i in g]
+                if self.paged:
+                    out = self._admit_group_paged(sub)
+                    if out is None:      # pool exhausted / table overflow
+                        out = self._serve_group_blocking(sub)
+                    done.extend(out)
+                else:
+                    done.extend(self._admit_group(sub))
 
     def _admit_group(self, reqs: List[Request]) -> List[Completion]:
         """Prefill one co-servable group and install it into free slots.
@@ -325,24 +415,7 @@ class BlockServer:
             eng.params, jnp.asarray(finals), caches,
             jnp.asarray(P), jnp.asarray(F - 1))
 
-        # first token: per-row sampled like every later one
-        temps = np.zeros(W, np.float32)
-        top_ks = np.zeros(W, np.int32)
-        keys = np.zeros((W, 2), np.uint32)
-        for j, r in enumerate(reqs):
-            sp = r.sampling
-            if sp is not None:
-                temps[j] = sp.temperature
-                top_ks[j] = sp.top_k
-                keys[j] = np.asarray(jax.random.PRNGKey(sp.seed))
-        if (temps > 0).any():
-            jkeys, sub = self._split(jnp.asarray(keys))
-            firsts = np.asarray(eng._sample(
-                logits[:, -1], sub, jnp.asarray(temps),
-                jnp.asarray(top_ks), use_top_k=bool((top_ks > 0).any())))
-            keys = np.asarray(jkeys)
-        else:
-            firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        firsts, temps, top_ks, keys = self._first_tokens(reqs, W, logits)
 
         if pool_direct:
             self._caches = caches
@@ -385,6 +458,465 @@ class BlockServer:
             self._stops[s, :len(r.stop_tokens)] = r.stop_tokens
         return done
 
+    def _first_tokens(self, reqs: List[Request], W: int, logits):
+        """First token per row, sampled exactly like every later one:
+        (B,) temperature / top-k vectors, per-request PRNG keys (split once
+        here, the carry half installed into the slot). Returns
+        (firsts, temps, top_ks, keys) as host arrays at width W."""
+        eng = self.engine
+        temps = np.zeros(W, np.float32)
+        top_ks = np.zeros(W, np.int32)
+        keys = np.zeros((W, 2), np.uint32)
+        for j, r in enumerate(reqs):
+            sp = r.sampling
+            if sp is not None:
+                temps[j] = sp.temperature
+                top_ks[j] = sp.top_k
+                keys[j] = np.asarray(jax.random.PRNGKey(sp.seed))
+        if (temps > 0).any():
+            jkeys, sub = self._split(jnp.asarray(keys))
+            firsts = np.asarray(eng._sample(
+                logits[:, -1], sub, jnp.asarray(temps),
+                jnp.asarray(top_ks), use_top_k=bool((top_ks > 0).any())))
+            keys = np.asarray(jkeys)
+        else:
+            firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        return firsts, temps, top_ks, keys
+
+    # ------------------------------------------------------------------
+    # Paged (shared-block pool) admission — DESIGN.md §8
+    # ------------------------------------------------------------------
+    def _on_store_evict(self, key: str, ent: KV.BlockEntry):
+        """Store hook: a page-backed entry leaving the store drops the
+        store-held ref on its delta-0 pool group (pages stay warm in the
+        directory until pool pressure reclaims them)."""
+        if ent.pages is not None:
+            self.pool.release((key, 0))
+
+    def _read_pages(self, pages: Sequence[int], num_tokens: int):
+        """Materialise a pool page group back to contiguous zero-based
+        arrays {pos: {"k"/"v": (G, L, KV, D)}} — the engine's
+        ``_page_reader`` for the non-paged fallback / store handoff."""
+        idx = jnp.asarray([int(p) for p in pages], jnp.int32)
+        out = {}
+        for pos_key, kv in self.pool.slabs.items():
+            arrs = {}
+            for c in ("k", "v"):
+                a = kv[c][:, idx]            # (G, n_pages, PS, KV, D)
+                arrs[c] = a.reshape(a.shape[0], -1,
+                                    *a.shape[3:])[:, :num_tokens]
+            out[pos_key] = arrs
+        return out
+
+    def _release_slot(self, s: int):
+        """Retire slot ``s``'s pool resources: release its shared-group
+        refs, free its private tail pages, reset its table row to the
+        all-sink state (page 0, zero occupancy)."""
+        for gkey in self._slot_groups[s]:
+            self.pool.release(gkey)
+        self._slot_groups[s] = []
+        if self._slot_tail[s]:
+            self.pool.free(self._slot_tail[s])
+            self._slot_tail[s] = []
+        self._tables[s] = 0
+        self._pstarts[s] = 0
+        self._tail_base[s] = 0
+        self._tail_page0[s] = 0
+
+    def _flatten_new_groups(self, srcs, deltas, lens, page_rows, NP_pad):
+        """New distinct block instances -> ``_write_pool_pages`` operands.
+
+        srcs: per-instance zero-based KV pytrees {pos: {"k"/"v":
+        (G, L, KV, D)}}; deltas/lens: per-instance Eq.-3 delta and token
+        count; page_rows: per-instance target page ids. Returns (flat,
+        idx, pos_vec, valid, page_ids) where the flat stream concatenates
+        every instance end to end (zero tail to ``NP_pad * page_size``)
+        and each PAGE becomes one scatter row (pad rows -> sink page 0).
+        """
+        ps = self.pool.page_size
+        S_flat = NP_pad * ps
+        idx = np.zeros((NP_pad, ps), np.int32)
+        valid = np.zeros((NP_pad, ps), bool)
+        pos_vec = np.zeros((NP_pad, ps), np.int32)
+        page_ids = np.zeros(NP_pad, np.int32)      # pads write the sink
+        row = 0
+        off = 0
+        for src, delta, L, pages in zip(srcs, deltas, lens, page_rows):
+            for i, pg in enumerate(pages):
+                occ = min(ps, L - i * ps)
+                idx[row, :occ] = off + i * ps + np.arange(occ)
+                valid[row, :occ] = True
+                pos_vec[row, :occ] = delta
+                page_ids[row] = pg
+                row += 1
+            off += L
+        total = off
+        template = srcs[0]
+        flat = {}
+        for pos_key in template:
+            parts_k = [s[pos_key]["k"] for s in srcs]
+            parts_v = [s[pos_key]["v"] for s in srcs]
+            G, _, KVh, D = parts_k[0].shape
+            if total < S_flat:
+                tail = jnp.zeros((G, S_flat - total, KVh, D),
+                                 parts_k[0].dtype)
+                parts_k.append(tail)
+                parts_v.append(tail)
+            flat[pos_key] = {"k": jnp.concatenate(parts_k, axis=1),
+                             "v": jnp.concatenate(parts_v, axis=1)}
+        return (flat, jnp.asarray(idx), jnp.asarray(pos_vec),
+                jnp.asarray(valid), jnp.asarray(page_ids))
+
+    def _admit_group_paged(self, reqs: List[Request]
+                           ) -> Optional[List[Completion]]:
+        """Admit one co-servable group through the shared paged pool.
+
+        Two host phases around the device dispatches:
+
+        PLAN — walk each row's prefix blocks resolving ``(content key,
+        Eq.-3 delta)`` instances against the pool directory: hits are
+        ``acquire``-d immediately (pinning them against reclaim for the
+        rest of the admission), new instances collect their zero-based
+        source KV (store arrays, pool pages of the delta-0 twin, or a
+        fresh encode) with the store entry pinned for the window.
+
+        COMMIT — ONE ``alloc`` for every new-instance page plus every
+        row's private tail pages (so a failure leaves nothing half-built:
+        unwind = release the plan's acquires and unpin); register + write
+        the new instances in ONE ``_write_pool_pages`` dispatch; delta-0
+        instances hand their pages to the store (``link_pages`` — the
+        store drops its array copy and holds a pool ref instead); build
+        the per-row page tables and run the paged final pass, whose query
+        KV lands in the tail pages.
+
+        Returns None when the pool cannot hold the group (exhausted after
+        reclaim, or a row overflows the static table width) — the caller
+        serves the group through the contiguous fallback instead.
+        """
+        eng = self.engine
+        pool = self.pool
+        ps = pool.page_size
+        MP = self._max_row_pages
+        t0 = time.perf_counter()
+        n = len(reqs)
+        free = self._free_slots()
+        assert n <= len(free)
+        slots = free[:n]
+        W = min(pow2_bucket(n), self.num_slots)
+
+        P = np.asarray([r.prefix_len for r in reqs], np.int32)
+        F = np.asarray([r.final_len for r in reqs], np.int32)
+        total = P + F
+        F_pad = eng._shared_final_pad(int(P.max()), int(F.max()))
+        assert int((P + F_pad).max()) <= eng.max_seq, \
+            (P.tolist(), F_pad, eng.max_seq)
+        for j, r in enumerate(reqs):
+            assert int(total[j]) + r.max_new_tokens <= eng.max_seq, \
+                (int(total[j]), r.max_new_tokens, eng.max_seq)
+
+        # ---- PLAN ----------------------------------------------------
+        acquired: List[Tuple[str, int]] = []   # to undo on failure
+        pinned: List[np.ndarray] = []
+        new_keys: List[Tuple[str, int]] = []   # insertion-ordered
+        new_info: Dict[Tuple[str, int], dict] = {}
+        fresh_kv: Dict[str, object] = {}       # encoded THIS admission
+        row_plan: List[List[Tuple[Tuple[str, int], int]]] = []
+        row_gids: List[List[int]] = []         # block-graph instance ids
+        inst_ids: Dict[Tuple[str, int], int] = {}
+        computed = [0] * n
+
+        def unwind():
+            for k in acquired:
+                pool.release(k)
+            for blk in pinned:
+                eng.store.unpin(blk)
+
+        for j, r in enumerate(reqs):
+            off = 0
+            plan: List[Tuple[Tuple[str, int], int]] = []
+            gids: List[int] = []
+            for blk in r.blocks[:-1]:
+                L = len(blk)
+                if L == 0:
+                    continue
+                delta = off if eng.reencode else 0
+                off += L
+                bkey = KV.block_key(blk, eng.store.model_tag)
+                gkey = (bkey, delta)
+                plan.append((gkey, L))
+                gids.append(inst_ids.setdefault(gkey, len(inst_ids)))
+                if gkey in new_info:
+                    continue
+                if pool.lookup(gkey) is not None:
+                    pool.acquire(gkey)
+                    acquired.append(gkey)
+                    continue
+                # new instance: resolve zero-based source KV
+                src = fresh_kv.get(bkey)
+                if src is None:
+                    ent = eng.store.lookup(blk)
+                    if ent is not None and ent.kv is not None:
+                        src = ent.kv
+                    elif ent is not None and ent.pages is not None \
+                            and (bkey, 0) in pool._groups:
+                        src = ("pool", ent.pages)
+                    else:
+                        kv0 = jax.tree.map(
+                            lambda a: a[:, 0],
+                            eng._encode_block(eng.params,
+                                              jnp.asarray(blk)[None, :]))
+                        eng.store.insert(blk, kv0)
+                        src = kv0
+                        computed[j] += L
+                    fresh_kv[bkey] = src
+                    eng.store.pin(blk)
+                    pinned.append(blk)
+                new_keys.append(gkey)
+                new_info[gkey] = {"tokens": blk, "src": src, "ntok": L,
+                                  "delta": delta, "bkey": bkey}
+            # each row's final (query) block is its own private instance
+            gids.append(len(inst_ids) + j)
+            row_plan.append(plan)
+            row_gids.append(gids)
+            prefix_pages = sum(pool.pages_for(L) for _, L in plan)
+            tail_cap = max(F_pad, int(F[j]) + r.max_new_tokens)
+            if prefix_pages + max(1, pool.pages_for(tail_cap)) > MP:
+                unwind()
+                return None
+
+        lay = from_row_lens(
+            [[len(b) for b in r.blocks] for r in reqs], graph_ids=row_gids)
+        assert np.array_equal(np.asarray(lay.prefix_lens, np.int32), P)
+
+        # ---- COMMIT --------------------------------------------------
+        n_new_pages = sum(pool.pages_for(new_info[k]["ntok"])
+                          for k in new_keys)
+        tail_counts = [max(1, pool.pages_for(
+            max(F_pad, int(F[j]) + reqs[j].max_new_tokens)))
+            for j in range(n)]
+        got = pool.alloc(n_new_pages + sum(tail_counts))
+        if got is None:
+            unwind()
+            return None
+        # slice the allocation: new-instance pages first, then tails
+        page_rows: List[List[int]] = []
+        cur = 0
+        for k in new_keys:
+            npg = pool.pages_for(new_info[k]["ntok"])
+            page_rows.append(got[cur:cur + npg])
+            cur += npg
+        tail_rows: List[List[int]] = []
+        for tc in tail_counts:
+            tail_rows.append(got[cur:cur + tc])
+            cur += tc
+
+        for k, pages in zip(new_keys, page_rows):
+            info = new_info[k]
+            pool.register(k, pages, info["ntok"])
+            if info["delta"] == 0 and not isinstance(info["src"], tuple):
+                # hand the physical KV to the pool: the store entry now
+                # references these pages (one pool ref held by the store)
+                pool.acquire(k)
+                eng.store.link_pages(info["tokens"], pages)
+        # per-row references (hit groups were acquired at plan time)
+        for plan in row_plan:
+            for gkey, _ in plan:
+                if gkey in new_info:
+                    pool.acquire(gkey)
+        for pages in tail_rows:
+            pool.retain(pages)
+
+        # ONE write dispatch for every new distinct instance
+        if new_keys:
+            srcs = []
+            for k in new_keys:
+                src = new_info[k]["src"]
+                if isinstance(src, tuple):           # delta-0 pool pages
+                    src = self._read_pages(src[1], new_info[k]["ntok"])
+                srcs.append(src)
+            NP = sum(len(pr) for pr in page_rows)
+            flat, idx, pos_vec, valid, page_ids = self._flatten_new_groups(
+                srcs, [new_info[k]["delta"] for k in new_keys],
+                [new_info[k]["ntok"] for k in new_keys],
+                page_rows, pow2_bucket(NP))
+            pool.slabs = eng._write_pool_pages(flat, pool.slabs, idx,
+                                               pos_vec, valid, page_ids)
+        for blk in pinned:
+            eng.store.unpin(blk)
+
+        # ---- per-row page tables + paged final pass ------------------
+        tables = np.zeros((W, MP), np.int32)
+        pstarts = np.zeros((W, MP + 1), np.int32)
+        tail_base = np.zeros(W, np.int32)
+        tail_page0 = np.zeros(W, np.int32)
+        for j in range(n):
+            col, pos = 0, 0
+            for gkey, L in row_plan[j]:
+                g = pool._groups[gkey]
+                for i, pg in enumerate(g.pages):
+                    tables[j, col] = pg
+                    pstarts[j, col] = pos + i * ps
+                    col += 1
+                pos += L
+            tail_base[j] = pos
+            tail_page0[j] = col
+            for i, pg in enumerate(tail_rows[j]):
+                tables[j, col] = pg
+                pstarts[j, col] = pos + i * ps
+                col += 1
+            # dead slots: occupancy 0 (repeat the final cumulative value)
+            pstarts[j, col:] = pos + len(tail_rows[j]) * ps
+        # width-padding rows stay all-sink / zero-occupancy: their final
+        # pass attends nothing (uniform over sink garbage -> finite,
+        # dropped) and writes only the sink page
+        view = KV.PagedView(jnp.asarray(tables), jnp.asarray(pstarts),
+                            jnp.asarray(tail_base), jnp.asarray(tail_page0))
+
+        finals = np.zeros((W, F_pad), np.int32)
+        last_idx = np.zeros(W, np.int32)
+        cache_len = np.zeros(W, np.int32)
+        for j, r in enumerate(reqs):
+            finals[j, :F[j]] = r.blocks[-1]
+            last_idx[j] = F[j] - 1
+            cache_len[j] = P[j]
+        logits, pool.slabs = eng._final_block_pass_paged(
+            eng.params, jnp.asarray(finals), pool.slabs, view,
+            jnp.asarray(cache_len), jnp.asarray(last_idx))
+
+        firsts, temps, top_ks, keys = self._first_tokens(reqs, W, logits)
+        self.prefill_wall_s += time.perf_counter() - t0
+        self.admitted_groups += 1
+        self.admission_log.append(
+            (tuple(r.rid for r in reqs), tuple(slots)))
+
+        # ---- install slot state / retire admission completions -------
+        now = time.perf_counter()
+        done: List[Completion] = []
+        for j, r in enumerate(reqs):
+            s = slots[j]
+            live = _Live(req=r, computed=int(computed[j]),
+                         total=int(total[j]), first_s=now)
+            self._live[r.rid] = live
+            first = int(firsts[j])
+            live.tokens.append(first)
+            finished = (first in r.stop_tokens) or r.max_new_tokens == 1
+            reason = "stop" if first in r.stop_tokens else "length"
+            self._emit(r, first, 0, finished, reason if finished else None)
+            if finished:
+                # never held a slot: drop its pool resources right here
+                for gkey, _ in row_plan[j]:
+                    pool.release(gkey)
+                pool.free(tail_rows[j])
+                done.append(self._complete(r.rid, reason, now))
+                continue
+            self._rids[s] = r.rid
+            self._cur[s] = first
+            self._pos[s] = int(total[j])
+            self._active[s] = True
+            self._remaining[s] = r.max_new_tokens - 1
+            self._temps[s] = temps[j]
+            self._top_ks[s] = top_ks[j]
+            self._keys[s] = keys[j]
+            self._stops[s] = -1
+            self._stops[s, :len(r.stop_tokens)] = r.stop_tokens
+            self._tables[s] = tables[j]
+            self._pstarts[s] = pstarts[j]
+            self._tail_base[s] = tail_base[j]
+            self._tail_page0[s] = tail_page0[j]
+            self._slot_groups[s] = [gkey for gkey, _ in row_plan[j]]
+            self._slot_tail[s] = list(tail_rows[j])
+        return done
+
+    def _serve_group_blocking(self, reqs: List[Request]) -> List[Completion]:
+        """Pool-exhaustion fallback: serve the group to completion through
+        the engine's contiguous non-paged machinery — a throwaway width-W
+        cache, the dense assembly/final pass, ONE full-budget decode scan —
+        without touching the paged pool. Slower (blocks the server loop,
+        no cross-request physical sharing) but never wrong; counted in
+        ``pool_fallbacks``."""
+        eng = self.engine
+        self.pool_fallbacks += 1
+        t0 = time.perf_counter()
+        n = len(reqs)
+        W = min(pow2_bucket(n), self.num_slots)
+        kv_rows, computed = [], []
+        for r in reqs:
+            kv, c = eng._fetch_blocks(r.blocks[:-1])
+            kv_rows.append(kv)
+            computed.append(c)
+        rows_blocks = [r.blocks for r in reqs] + [reqs[0].blocks] * (W - n)
+        kv_rows += [kv_rows[0]] * (W - n)
+        lay = from_row_lens([[len(b) for b in blocks]
+                             for blocks in rows_blocks])
+        P = np.asarray(lay.prefix_lens, np.int32)
+        F = np.asarray(lay.final_lens, np.int32)
+        total = np.asarray(lay.total_lens, np.int32)
+        P_pad = min(pow2_bucket(int(P.max())), eng.max_seq) if P.max() else 0
+        F_pad = eng._shared_final_pad(int(P.max()), int(F.max()))
+        caches = eng._fresh_caches(W)
+        if P_pad:
+            flat, idx, pos_vec, valid = eng._flatten_rows(kv_rows, lay,
+                                                          P_pad)
+            caches = eng._assemble_paged(flat, caches, idx, pos_vec, valid)
+        finals = np.zeros((W, F_pad), np.int32)
+        for j, blocks in enumerate(rows_blocks):
+            finals[j, :F[j]] = blocks[-1]
+        logits, caches, _ = eng._final_block_pass(
+            eng.params, jnp.asarray(finals), caches,
+            jnp.asarray(P), jnp.asarray(F - 1))
+        firsts, temps, top_ks, keys = self._first_tokens(reqs, W, logits)
+        self.prefill_wall_s += time.perf_counter() - t0
+
+        now = time.perf_counter()
+        done: List[Completion] = []
+        stops = np.full((W, self.max_stop_tokens), -1, np.int32)
+        active = np.zeros(W, bool)
+        remaining = np.zeros(W, np.int32)
+        rows: List[int] = []
+        for j, r in enumerate(reqs):
+            live = _Live(req=r, computed=int(computed[j]),
+                         total=int(total[j]), first_s=now)
+            self._live[r.rid] = live
+            first = int(firsts[j])
+            live.tokens.append(first)
+            finished = (first in r.stop_tokens) or r.max_new_tokens == 1
+            reason = "stop" if first in r.stop_tokens else "length"
+            self._emit(r, first, 0, finished, reason if finished else None)
+            if finished:
+                done.append(self._complete(r.rid, reason, now))
+                continue
+            active[j] = True
+            remaining[j] = r.max_new_tokens - 1
+            stops[j, :len(r.stop_tokens)] = r.stop_tokens
+            rows.append(j)
+        if rows:
+            steps = int(remaining.max())
+            t1 = time.perf_counter()
+            toks, emits, _ = eng._decode_scan(
+                eng.params, jnp.asarray(firsts.astype(np.int32)), caches,
+                {}, jnp.asarray(total), jnp.asarray(active),
+                jnp.asarray(remaining), jnp.asarray(stops),
+                jnp.asarray(keys), jnp.asarray(temps),
+                jnp.asarray(top_ks), steps=steps,
+                greedy=not bool((temps[active] > 0).any()),
+                top_k_active=bool((top_ks[active] > 0).any()))
+            toks = np.asarray(toks)
+            emits = np.asarray(emits)
+            now = time.perf_counter()
+            self.decode_wall_s += now - t1
+            for j in rows:
+                r = reqs[j]
+                seq = [int(t) for t in toks[emits[:, j], j]]
+                self._live[r.rid].tokens.extend(seq)
+                reason = ("stop" if seq and seq[-1] in r.stop_tokens
+                          else "length")
+                for i, tok in enumerate(seq):
+                    last = i == len(seq) - 1
+                    self._emit(r, tok, 1 + i, last,
+                               reason if last else None)
+                done.append(self._complete(r.rid, reason, now))
+        return done
+
     # ------------------------------------------------------------------
     # Decode segments
     # ------------------------------------------------------------------
@@ -398,15 +930,29 @@ class BlockServer:
         was_active = self._active.copy()
         greedy = not bool((self._temps[was_active] > 0).any())
         top_k_active = bool((self._top_ks[was_active] > 0).any())
+        if self.paged:
+            # the slot pool's caches ARE the shared pool slabs; each row
+            # reads/writes through its page-table view (tail appends)
+            view = KV.PagedView(
+                jnp.asarray(self._tables), jnp.asarray(self._pstarts),
+                jnp.asarray(self._tail_base), jnp.asarray(self._tail_page0))
+            caches = self.pool.slabs
+        else:
+            view = None
+            caches = self._caches
         toks, emits, carry = eng._decode_scan(
-            eng.params, jnp.asarray(self._cur), self._caches, self._states,
+            eng.params, jnp.asarray(self._cur), caches, self._states,
             jnp.asarray(self._pos), jnp.asarray(self._active),
             jnp.asarray(self._remaining), jnp.asarray(self._stops),
             jnp.asarray(self._keys), jnp.asarray(self._temps),
             jnp.asarray(self._top_ks),
             steps=self.decode_segment, greedy=greedy,
-            top_k_active=top_k_active)
-        cur, pos, active, remaining, keys, self._caches, self._states = carry
+            top_k_active=top_k_active, paged=view)
+        cur, pos, active, remaining, keys, caches, self._states = carry
+        if self.paged:
+            self.pool.slabs = caches
+        else:
+            self._caches = caches
         toks = np.asarray(toks)
         emits = np.asarray(emits)
         # np.array(...): host mirrors stay writable (np.asarray of a jax
@@ -440,6 +986,8 @@ class BlockServer:
                            reason if last else None)
             if finished:
                 self._rids[s] = None
+                if self.paged:
+                    self._release_slot(s)
                 done.append(self._complete(rid, reason, now))
         return done
 
@@ -466,7 +1014,7 @@ class BlockServer:
 
     def stats(self) -> dict:
         """Serving telemetry for benchmarks / launchers."""
-        return {
+        out = {
             "num_slots": self.num_slots,
             "decode_segment": self.decode_segment,
             "segments": self.segments,
@@ -474,4 +1022,9 @@ class BlockServer:
             "prefill_wall_s": round(self.prefill_wall_s, 4),
             "decode_wall_s": round(self.decode_wall_s, 4),
             "admitted_groups": self.admitted_groups,
+            "admission_deferrals": self.admission_deferrals,
         }
+        if self.paged:
+            out["pool"] = self.pool.stats()
+            out["pool_fallbacks"] = self.pool_fallbacks
+        return out

@@ -130,6 +130,54 @@ def test_serving_latency_committed_baseline_schema():
     assert r["continuous"]["ttft_p95_s"] <= r["static"]["ttft_p95_s"]
 
 
+@pytest.mark.bench
+def test_serving_shared_json_contract(tmp_path):
+    """serving_latency.run_shared writes the BENCH_serving_shared.json
+    schema future PRs compare on — paged vs contiguous serving on the
+    SAME Zipf-hot shared-prefix traffic, parity-gated."""
+    from benchmarks import serving_latency
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=256, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_serving_shared.json"
+    lines = []
+    res = serving_latency.run_shared(
+        n_requests=6, pool_size=2, plen=16, slots=2, decode_segment=2,
+        page_size=8, mean_gap_s=0.01, repeats=1, emit=lines.append,
+        json_path=str(path), cfg=micro, query_lens=(8, 12),
+        new_tokens=(2, 4))
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "serving_shared"
+    r = payload["results"]
+    assert r["bitwise_token_parity"] is True
+    assert {"dedup", "pool", "contiguous", "paged",
+            "paged_vs_contiguous"} <= set(r)
+    assert r["dedup"]["unique_blocks"] == 2
+    assert r["dedup"]["reduction_x"] > 1.0
+    assert r["pool"]["page_hits"] > 0 and r["pool_fallbacks"] == 0
+    assert res["paged"]["tokens_per_s"] > 0
+    assert any(line.startswith("serving_shared_paged,") for line in lines)
+
+
+def test_serving_shared_committed_baseline_schema():
+    """The committed BENCH_serving_shared.json satisfies the acceptance
+    bar: bitwise token parity with the contiguous path, and >= 2x
+    resident-KV reduction at 8 slots sharing 3 passages."""
+    payload = json.loads(
+        open(os.path.join(REPO, "BENCH_serving_shared.json")).read())
+    assert payload["benchmark"] == "serving_shared"
+    r = payload["results"]
+    assert r["bitwise_token_parity"] is True
+    assert r["num_slots"] == 8 and r["dedup"]["headline_rows"] == 8
+    assert r["dedup"]["unique_blocks"] == 3
+    assert r["dedup"]["reduction_x"] >= 2.0
+    assert r["dedup"]["pool_resident_block_bytes"] * 2 <= \
+        r["dedup"]["per_slot_copy_bytes"]
+    assert r["pool"]["page_hits"] > 0 and r["pool_fallbacks"] == 0
+    assert r["paged"]["tokens_per_s"] > 0
+
+
 def test_train_step_json_contract(tmp_path):
     """train_step.run writes the BENCH_train_step.json schema future PRs
     compare on — masked vs structural ragged on the SAME batch."""
@@ -180,5 +228,6 @@ def test_run_smoke_mode():
     assert "cache_shared_pool_request," in out.stdout
     assert "attn_block_S256_nb4," in out.stdout
     assert "batch_decode_mixed," in out.stdout
+    assert "serving_shared_paged," in out.stdout
     assert "serving_continuous," in out.stdout
     assert "train_step_struct_168," in out.stdout

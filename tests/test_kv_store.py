@@ -63,6 +63,81 @@ def test_reinsert_refreshes_bytes():
     assert len(store) == 1
 
 
+def test_clear_resets_stats_and_bytes():
+    """Regression: ``clear()`` used to drop entries but KEEP hits/misses/
+    evictions, so a cleared store reported stale telemetry forever."""
+    store = BlockKVStore(budget_bytes=2 * 2048)
+    a, b, c = (np.full(4, i, np.int32) for i in range(3))
+    store.insert(a, _kv())
+    store.insert(b, _kv())
+    store.insert(c, _kv())              # evicts a
+    store.lookup(b)
+    store.lookup(a)                     # miss
+    assert store.hits and store.misses and store.evictions
+    store.clear()
+    assert len(store) == 0 and store.nbytes == 0
+    assert store.hits == 0 and store.misses == 0
+    assert store.evictions == 0 and store.eviction_skips == 0
+    assert store.hit_rate == 0.0
+
+
+def test_reset_stats_keeps_entries():
+    store = BlockKVStore()
+    t = np.arange(8, dtype=np.int32)
+    store.insert(t, _kv())
+    store.lookup(t)
+    store.reset_stats()
+    assert store.hits == 0 and store.misses == 0
+    assert store.lookup(t) is not None          # entries survive
+
+
+def test_pinned_entries_skip_eviction():
+    """In-flight blocks (admitted, not yet assembled) must not be LRU
+    victims; eviction skips them (counted) and takes the next candidate."""
+    store = BlockKVStore(budget_bytes=2 * 2048)
+    a, b, c = (np.full(4, i, np.int32) for i in range(3))
+    store.insert(a, _kv())
+    store.insert(b, _kv())
+    assert store.pin(a) is not None
+    store.insert(c, _kv())              # over budget: a pinned -> b evicted
+    assert store.eviction_skips == 1
+    assert store.lookup(a) is not None
+    assert store.lookup(b) is None
+    store.unpin(a)
+    store.insert(b, _kv())              # LRU (c) evicted; no skip needed
+    assert store.eviction_skips == 1
+    assert store.lookup(c) is None
+
+
+def test_all_pinned_beats_budget():
+    """Everything pinned: the store stays over budget rather than
+    corrupting live requests."""
+    store = BlockKVStore(budget_bytes=2 * 2048)
+    a, b = (np.full(4, i, np.int32) for i in range(2))
+    store.insert(a, _kv())
+    store.insert(b, _kv())
+    store.pin(a)
+    store.pin(b)
+    store.budget_bytes = 1024           # now far over budget
+    store.insert(np.full(4, 9, np.int32), _kv())
+    # the unpinned newcomer is the only victim; the pinned pair survives
+    # even though the store stays over budget
+    assert store.lookup(a) is not None and store.lookup(b) is not None
+    assert store.nbytes > store.budget_bytes
+
+
+def test_on_evict_hook_fires():
+    seen = []
+    store = BlockKVStore(budget_bytes=1 * 2048)
+    store.on_evict = lambda key, ent: seen.append(key)
+    a, b = (np.full(4, i, np.int32) for i in range(2))
+    store.insert(a, _kv())
+    store.insert(b, _kv())              # evicts a
+    assert seen == [block_key(a)]
+    store.clear()                       # clear releases the rest
+    assert seen == [block_key(a), block_key(b)]
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.lists(st.integers(0, 100), min_size=1, max_size=8),
                 min_size=1, max_size=30))

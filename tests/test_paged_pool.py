@@ -1,0 +1,299 @@
+"""PagedKVPool + paged attention paths (DESIGN.md §8).
+
+The contract under test: a logical per-row KV sequence laid out as shared
+pool pages behind a block table is attention-equivalent to the same
+sequence in a private contiguous cache — for the jnp twin, the Pallas
+kernel, and the tail-page append — and the host-side pool bookkeeping
+(free list, refcounts, directory, reclaim) never loses or double-frees a
+page.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.attention as A
+from repro.core.kv_cache import PagedKVPool, PagedView, paged_cache_update
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# Host bookkeeping
+# ---------------------------------------------------------------------------
+def _mk_pool(num_pages=8, ps=4):
+    slabs = {"g0": {"k": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32),
+                    "v": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32)}}
+    return PagedKVPool(slabs, num_pages, ps)
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = _mk_pool(num_pages=8, ps=4)
+    assert pool.free_pages == 7                  # page 0 is the sink
+    pages = pool.alloc(3)
+    assert pages is not None and 0 not in pages
+    assert pool.free_pages == 4
+    pool.retain(pages)
+    pool.free(pages)
+    assert pool.free_pages == 7
+    assert pool.pages_for(1) == 1 and pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+
+
+def test_pool_exhaustion_returns_none():
+    pool = _mk_pool(num_pages=4, ps=4)           # 3 allocatable
+    got = pool.alloc(3)
+    pool.retain(got)
+    assert pool.alloc(1) is None
+    assert pool.alloc_failures == 1
+    pool.free(got)
+    assert pool.alloc(1) is not None
+
+
+def test_pool_directory_refcounts_and_reclaim():
+    pool = _mk_pool(num_pages=6, ps=4)           # 5 allocatable
+    pa = pool.alloc(2)
+    pool.register(("a", 0), pa, 7)
+    pool.acquire(("a", 0))
+    pb = pool.alloc(2)
+    pool.register(("b", 16), pb, 8)
+    pool.acquire(("b", 16))
+    assert pool.unique_blocks == 2 and pool.free_pages == 1
+    # zero-ref groups survive until allocation pressure
+    pool.release(("a", 0))
+    assert pool.unique_blocks == 2
+    got = pool.alloc(3)                          # needs a reclaim of "a"
+    assert got is not None and pool.reclaims == 1
+    assert pool.unique_blocks == 1 and ("a", 0) not in pool._groups
+    # "b" is still referenced: reclaim must never touch it
+    pool.retain(got)
+    assert pool.alloc(1) is None
+    assert ("b", 16) in pool._groups
+
+
+def test_pool_lru_reclaim_order():
+    pool = _mk_pool(num_pages=6, ps=4)
+    for name in ("a", "b"):
+        pg = pool.alloc(2)
+        pool.register((name, 0), pg, 8)
+    pool.lookup(("a", 0))                        # touch: b becomes LRU
+    pool.alloc(2)
+    assert ("a", 0) in pool._groups and ("b", 0) not in pool._groups
+
+
+def test_pool_drop_and_double_free_guard():
+    pool = _mk_pool()
+    pg = pool.alloc(1)
+    pool.register(("x", 0), pg, 4)
+    pool.acquire(("x", 0))
+    with pytest.raises(AssertionError):
+        pool.drop(("x", 0))                      # still referenced
+    pool.release(("x", 0))
+    pool.drop(("x", 0))
+    assert pool.free_pages == 7
+
+
+def test_pool_stats_and_bytes():
+    pool = _mk_pool(num_pages=8, ps=4)
+    pg = pool.alloc(2)
+    pool.register(("a", 0), pg, 8)
+    per_page = 2 * (1 * 4 * 2 * 8) * 4           # k+v floats per page
+    assert pool.page_nbytes == per_page
+    assert pool.resident_block_bytes == 2 * per_page
+    s = pool.stats()
+    assert s["unique_blocks"] == 1 and s["used_pages"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Device paths: layout helpers
+# ---------------------------------------------------------------------------
+def _paged_layout(row_block_lens, ps, max_new=0):
+    """Rows of block lengths -> (tables, page_starts, tail_base,
+    tail_page0, dense_map) with every block page-aligned fresh pages,
+    partial last pages masked. dense_map[b] = list of (page, off) in
+    logical token order."""
+    B = len(row_block_lens)
+    rows = []
+    next_page = 1                                 # 0 is the sink
+    MP = 0
+    for lens in row_block_lens:
+        ents = []                                 # (page, start, occ)
+        pos = 0
+        for L in lens:
+            npg = -(-L // ps)
+            for i in range(npg):
+                occ = min(ps, L - i * ps)
+                ents.append((next_page, pos + i * ps, occ))
+                next_page += 1
+            pos += L
+        tail_cap = max(1, -(-(max_new + 1) // ps))
+        tail0 = len(ents)
+        for i in range(tail_cap):
+            ents.append((next_page, pos + i * ps, ps))
+            next_page += 1
+        rows.append((ents, pos, tail0))
+        MP = max(MP, len(ents))
+    tables = np.zeros((B, MP), np.int32)
+    starts = np.zeros((B, MP + 1), np.int32)
+    tail_base = np.zeros(B, np.int32)
+    tail_page0 = np.zeros(B, np.int32)
+    for b, (ents, pos, tail0) in enumerate(rows):
+        for j, (pg, st, occ) in enumerate(ents):
+            tables[b, j] = pg
+            starts[b, j] = st
+            starts[b, j + 1] = st + occ
+        starts[b, len(ents):] = starts[b, len(ents)]
+        tail_base[b] = pos
+        tail_page0[b] = tail0
+    return tables, starts, tail_base, tail_page0, next_page
+
+
+def _fill_pool(key, num_pages, ps, KV, D, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    pk = jax.random.normal(k1, (num_pages, ps, KV, D),
+                           jnp.float32).astype(dtype)
+    pv = jax.random.normal(k2, (num_pages, ps, KV, D),
+                           jnp.float32).astype(dtype)
+    return pk, pv
+
+
+def _dense_from_pages(pool_k, tables, starts, Smax):
+    """Gather each row's logical sequence out of the pool (numpy oracle)."""
+    pk = np.asarray(pool_k)
+    B, MP = tables.shape
+    ps = pk.shape[1]
+    out = np.zeros((B, Smax) + pk.shape[2:], pk.dtype)
+    for b in range(B):
+        for j in range(MP):
+            occ = starts[b, j + 1] - starts[b, j]
+            if occ > 0:
+                st = starts[b, j]
+                out[b, st:st + occ] = pk[tables[b, j], :occ]
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# jnp twin == dense decode_attention on the gathered cache
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows,ps", [
+    ([(16, 16), (12,)], 8),            # aligned + ragged rows
+    ([(7, 9, 3), (20,), (5, 5)], 8),   # partial pages everywhere
+    ([(16,)], 16),                     # single full page
+])
+@pytest.mark.parametrize("Sq", [1, 4])
+def test_paged_twin_matches_dense(rows, ps, Sq):
+    KV, G, D = 2, 2, 16
+    H = KV * G
+    tables, starts, *_ , npages = _paged_layout(rows, ps)
+    pk, pv = _fill_pool(jax.random.PRNGKey(0), npages, ps, KV, D)
+    totals = np.asarray([sum(r) for r in rows], np.int32)
+    B = len(rows)
+    Smax = int(starts.max()) + ps
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, Sq, H, D), jnp.float32)
+    # model-path convention: cache_len = tokens BEFORE the query tokens
+    cl = totals - Sq
+    got = A.paged_decode_attention(q, pk, pv, jnp.asarray(tables),
+                                   jnp.asarray(starts), jnp.asarray(cl),
+                                   D ** -0.5)
+    dk = _dense_from_pages(pk, tables, starts, Smax)
+    dv = _dense_from_pages(pv, tables, starts, Smax)
+    want = A.decode_attention(q, dk, dv, jnp.asarray(cl), D ** -0.5)
+    np.testing.assert_allclose(got, want, atol=2e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret) == jnp twin, GQA folding included
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows,ps,H,KV", [
+    ([(128, 128), (100,)], 128, 8, 4),        # GQA 2:1, tile-sized pages
+    ([(100, 60, 40), (256,), (30,)], 128, 4, 4),  # MHA, partial pages
+    ([(250,)], 128, 8, 1),                    # MQA
+])
+def test_paged_flash_decode_matches_twin(rows, ps, H, KV):
+    D = 64
+    tables, starts, *_ , npages = _paged_layout(rows, ps)
+    pk, pv = _fill_pool(jax.random.PRNGKey(2), npages, ps, KV, D)
+    totals = np.asarray([sum(r) for r in rows], np.int32)
+    B = len(rows)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, 1, H, D), jnp.float32)
+    # kernel convention: cache_len = valid length INCLUDING the new token
+    got = ops.paged_decode_attention(q, pk, pv, jnp.asarray(tables),
+                                     jnp.asarray(starts), jnp.asarray(totals),
+                                     D ** -0.5, interpret=True)
+    want = A.paged_decode_attention(q, pk, pv, jnp.asarray(tables),
+                                    jnp.asarray(starts),
+                                    jnp.asarray(totals - 1), D ** -0.5)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=1e-2)
+
+
+def test_paged_flash_decode_rows_independent():
+    """A row's output must not depend on its batch neighbours' tables."""
+    rows = [(100, 60), (256,)]
+    ps, H, KV, D = 128, 4, 2, 64
+    tables, starts, *_ , npages = _paged_layout(rows, ps)
+    pk, pv = _fill_pool(jax.random.PRNGKey(4), npages, ps, KV, D)
+    totals = np.asarray([sum(r) for r in rows], np.int32)
+    q = jax.random.normal(jax.random.PRNGKey(5), (2, 1, H, D), jnp.float32)
+    both = ops.paged_decode_attention(q, pk, pv, jnp.asarray(tables),
+                                      jnp.asarray(starts),
+                                      jnp.asarray(totals), D ** -0.5,
+                                      interpret=True)
+    for b in range(2):
+        solo = ops.paged_decode_attention(
+            q[b:b + 1], pk, pv, jnp.asarray(tables[b:b + 1]),
+            jnp.asarray(starts[b:b + 1]), jnp.asarray(totals[b:b + 1]),
+            D ** -0.5, interpret=True)
+        np.testing.assert_allclose(both[b], solo[0], atol=3e-5, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Tail-page append
+# ---------------------------------------------------------------------------
+def test_paged_cache_update_lands_in_tail_pages():
+    rows = [(6,), (11, 3)]
+    ps = 4
+    T = 3
+    tables, starts, tail_base, tail_page0, npages = _paged_layout(
+        rows, ps, max_new=2 * ps)
+    KV, D = 2, 8
+    pk = jnp.zeros((npages, ps, KV, D), jnp.float32)
+    pv = jnp.zeros((npages, ps, KV, D), jnp.float32)
+    view = PagedView(jnp.asarray(tables), jnp.asarray(starts),
+                     jnp.asarray(tail_base), jnp.asarray(tail_page0))
+    kn = jnp.arange(2 * T * KV * D, dtype=jnp.float32).reshape(2, T, KV, D) + 1
+    start = jnp.asarray([sum(r) for r in rows], jnp.int32)
+    nk, nv = paged_cache_update(pk, pv, kn, kn, view, start)
+    nk = np.asarray(nk)
+    for b, lens in enumerate(rows):
+        pos0 = sum(lens)
+        for t in range(T):
+            p = pos0 + t
+            toff = p - tail_base[b]
+            slot = tail_page0[b] + toff // ps
+            page, off = tables[b, slot], toff % ps
+            np.testing.assert_array_equal(nk[page, off],
+                                          np.asarray(kn[b, t]))
+    # nothing else was touched (prefix pages + sink stay zero)
+    written = {(tables[b, tail_page0[b] + (sum(l) + t - tail_base[b]) // ps],
+                (sum(l) + t - tail_base[b]) % ps)
+               for b, l in enumerate(rows) for t in range(T)}
+    for pg in range(npages):
+        for off in range(ps):
+            if (pg, off) not in written:
+                assert not nk[pg, off].any(), (pg, off)
+
+
+def test_paged_cache_update_sink_rows_harmless():
+    """Idle/retired rows (all-sink tables, frozen pos 0) write only the
+    sink page — live pages are never corrupted."""
+    ps, KV, D = 4, 2, 8
+    npages = 3
+    pk = jnp.ones((npages, ps, KV, D), jnp.float32)
+    view = PagedView(jnp.zeros((1, 2), jnp.int32),
+                     jnp.zeros((1, 3), jnp.int32),
+                     jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32))
+    kn = jnp.full((1, 1, KV, D), 9.0)
+    nk, _ = paged_cache_update(pk, pk, kn, kn, view, jnp.zeros((1,),
+                                                               jnp.int32))
+    nk = np.asarray(nk)
+    assert (nk[1:] == 1).all()                   # real pages untouched
+    assert (nk[0, 0] == 9).all()                 # dead write -> sink

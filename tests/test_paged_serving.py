@@ -1,0 +1,196 @@
+"""Shared-block paged serving (DESIGN.md §8): parity, dedup, lifecycle.
+
+The headline contracts:
+  * N slots sharing a passage produce BITWISE the tokens of the per-slot-
+    copy (contiguous) path — masked positions contribute exact zeros, so
+    physical sharing is observationally invisible;
+  * resident pool KV scales with *unique* blocks (>= 2x below the
+    per-slot-copy footprint when 8 slots share 3 passages);
+  * page refcounts follow the request lifecycle admit -> retire -> evict;
+  * pool exhaustion falls back to the contiguous path, never wrong.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+from repro.serving.server import BlockServer, SamplingParams
+
+from conftest import tiny_dense
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_dense()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+
+    def mk(n):
+        return rng.integers(5, cfg.vocab_size, n).astype(np.int32)
+
+    passages = [mk(16), mk(16), mk(16)]
+
+    def req(ids, qlen):
+        return [passages[i] for i in ids] + [mk(qlen)]
+
+    return cfg, params, passages, req
+
+
+def _paged_server(params, cfg, **kw):
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    return BlockServer(eng, paged=True, **kw)
+
+
+def _run(server, reqs, max_new=6, sampling=None, stop=()):
+    sampling = sampling or [None] * len(reqs)
+    rids = [server.submit(b, max_new_tokens=max_new, sampling=s,
+                          stop_tokens=stop)
+            for b, s in zip(reqs, sampling)]
+    done = {c.rid: c for c in server.run()}
+    return [done[r].tokens.tolist() for r in rids]
+
+
+def test_shared_blocks_bitwise_parity(setup):
+    """THE dedup invariant: slots sharing passages through one physical
+    copy emit bitwise the tokens of the private-copy path — mixed traffic,
+    narrow pool, mid-stream refills, sampling and stop tokens included."""
+    cfg, params, passages, req = setup
+    reqs = [req([0, 1], 8), req([0, 1], 6), req([2], 10),
+            req([0, 2, 1], 7), req([1], 5), req([2, 0], 9)]
+    sampling = [None, SamplingParams(temperature=0.7, top_k=5, seed=11),
+                None, SamplingParams(temperature=0.4, seed=5), None, None]
+
+    eng_ref = BlockAttentionEngine(params, cfg, max_seq=128)
+    ref_srv = BlockServer(eng_ref, num_slots=2, decode_segment=3)
+    want = _run(ref_srv, reqs, sampling=sampling, stop=(66,))
+
+    srv = _paged_server(params, cfg, num_slots=2, decode_segment=3,
+                        page_size=8)
+    got = _run(srv, reqs, sampling=sampling, stop=(66,))
+    assert got == want
+    assert srv.pool_fallbacks == 0
+    assert srv.stats()["pool"]["page_hits"] > 0      # dedup actually fired
+
+
+def test_resident_bytes_scale_with_unique_blocks(setup):
+    """8 slots sharing 3 passages: pool-resident prefix KV must be at
+    least 2x below the per-slot-copy footprint (it is ~8x here)."""
+    cfg, params, passages, req = setup
+    reqs = [req([0, 1, 2], 4 + j) for j in range(8)]
+    srv = _paged_server(params, cfg, num_slots=8, decode_segment=4,
+                        page_size=8)
+    out = _run(srv, reqs)
+    assert all(len(t) == 6 for t in out)
+    pool = srv.pool
+    prefix_tokens = sum(len(p) for p in passages)        # unique: 48
+    per_token = pool.page_nbytes / pool.page_size
+    dense_bytes = len(reqs) * prefix_tokens * per_token  # per-slot copies
+    assert pool.unique_blocks == 3
+    assert pool.resident_block_bytes <= dense_bytes / 2
+    # identical prefixes -> one admission writes them, later rows share
+    assert pool.stats()["page_misses"] == 3
+
+
+def test_refcount_lifecycle_admit_retire_evict(setup):
+    """Pages are referenced while a slot is live, survive retirement as
+    zero-ref warm directory entries, and are reclaimed under pressure."""
+    cfg, params, passages, req = setup
+    srv = _paged_server(params, cfg, num_slots=2, decode_segment=4,
+                        page_size=8)
+    pool = srv.pool
+    eng = srv.engine
+    rid = srv.submit(req([0, 1], 6), max_new_tokens=8)
+    srv.step()                                   # admit + first segment
+    gkeys = list(srv._slot_groups[0]) or list(srv._slot_groups[1])
+    assert gkeys, "request should hold shared groups while live"
+    for gk in gkeys:
+        assert pool._groups[gk].refs >= 1
+    done = srv.run()
+    assert done[0].rid == rid
+    # retired: the row's refs dropped; delta-0 store-linked groups keep
+    # exactly the store's ref, derived-delta groups go to zero (warm)
+    for gk in gkeys:
+        expect = 1 if gk[1] == 0 else 0
+        assert pool._groups[gk].refs == expect, (gk, pool._groups[gk].refs)
+    assert all(not g for g in srv._slot_groups)
+    assert all(not t for t in srv._slot_tail)
+    # evict: clearing the store releases the store-held refs, pressure
+    # reclaims every warm group
+    eng.store.clear()
+    assert all(g.refs == 0 for g in pool._groups.values())
+    got = pool.alloc(pool.num_pages - 1)         # force full reclaim
+    assert got is not None and pool.unique_blocks == 0
+    pool.retain(got)
+    pool.free(got)
+
+
+def test_pool_exhaustion_falls_back_contiguous(setup):
+    """A pool too small for even one group serves every request through
+    the blocking contiguous path — tokens identical, fallbacks counted."""
+    cfg, params, passages, req = setup
+    reqs = [req([0, 1], 8), req([2], 10), req([0, 2, 1], 7)]
+    eng_ref = BlockAttentionEngine(params, cfg, max_seq=128)
+    want = _run(BlockServer(eng_ref, num_slots=2, decode_segment=3), reqs)
+    srv = _paged_server(params, cfg, num_slots=2, decode_segment=3,
+                        page_size=8, pool_pages=4)
+    got = _run(srv, reqs)
+    assert got == want
+    assert srv.pool_fallbacks == 3
+    assert srv.pool.alloc_failures >= 3
+
+
+def test_reclaim_under_pressure_keeps_parity(setup):
+    """A pool with room for the working set but not the history must
+    reclaim warm groups instead of falling back, with identical tokens."""
+    cfg, params, passages, req = setup
+    reqs = [req([0, 1], 8), req([2], 10), req([1], 5), req([2, 0], 9)]
+    eng_ref = BlockAttentionEngine(params, cfg, max_seq=128)
+    want = _run(BlockServer(eng_ref, num_slots=2, decode_segment=3), reqs)
+    srv = _paged_server(params, cfg, num_slots=2, decode_segment=3,
+                        page_size=8, pool_pages=14)
+    got = _run(srv, reqs)
+    assert got == want
+    assert srv.pool_fallbacks == 0
+    assert srv.pool.stats()["reclaims"] > 0
+
+
+def test_admission_hysteresis_defers_tiny_groups(setup):
+    """A lone arrival while decode is busy waits ``admit_hysteresis``
+    steps for company; tokens are unchanged and idle admission is never
+    delayed."""
+    cfg, params, passages, req = setup
+    r_a, r_b = req([0, 1], 8), req([2], 10)
+    srv0 = _paged_server(params, cfg, num_slots=2, decode_segment=2,
+                         page_size=8)
+    w_a = _run(srv0, [r_a], max_new=8)[0]
+    srv1 = _paged_server(params, cfg, num_slots=2, decode_segment=2,
+                         page_size=8)
+    w_b = _run(srv1, [r_b], max_new=8)[0]
+
+    srv = _paged_server(params, cfg, num_slots=2, decode_segment=2,
+                        page_size=8, admit_hysteresis=2)
+    ra = srv.submit(r_a, max_new_tokens=8)
+    srv.step()                                   # idle -> admits instantly
+    assert srv.admission_deferrals == 0 and srv.num_active == 1
+    rb = srv.submit(r_b, max_new_tokens=8)
+    srv.step()
+    srv.step()                                   # held twice
+    assert srv.admission_deferrals == 2
+    done = {c.rid: c for c in srv.run()}         # then admitted + drained
+    assert done[ra].tokens.tolist() == w_a
+    assert done[rb].tokens.tolist() == w_b
+
+
+def test_generate_batch_unaffected_by_paged_server(setup):
+    """The synchronous wrappers stay on the contiguous path: a paged
+    server coexisting with generate_batch must not perturb its tokens."""
+    cfg, params, passages, req = setup
+    reqs = [req([0, 1], 8), req([2], 6)]
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    want = eng.generate_batch(reqs, 5).tokens
+    srv = BlockServer(BlockAttentionEngine(params, cfg, max_seq=128),
+                      paged=True, num_slots=2, page_size=8)
+    _run(srv, reqs, max_new=5)
+    got = eng.generate_batch(reqs, 5).tokens
+    np.testing.assert_array_equal(want, got)

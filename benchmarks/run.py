@@ -8,6 +8,8 @@
                       Poisson mixed traffic: tokens/s, p50/p95 TTFT)
   DESIGN §8 paged pool -> shared (Zipf-hot shared prefixes: paged parity,
                       resident-KV dedup, paged vs contiguous tokens/s)
+  DESIGN §9 failure semantics -> chaos (goodput / p95 TTFT vs injected
+                      fault rate; token parity with the fault-free run)
   §2.3 training  -> train_step (masked vs structural ragged block training)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
@@ -30,9 +32,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
                     default=["ttft", "cache", "kernels", "batch", "serving",
-                             "shared", "train"],
+                             "shared", "chaos", "train"],
                     choices=["ttft", "cache", "kernels", "batch", "serving",
-                             "shared", "train"])
+                             "shared", "chaos", "train"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -84,6 +86,16 @@ def main() -> None:
                                        "query_lens": (8, 12),
                                        "new_tokens": (2, 4)}
                                       if args.smoke else {}))
+    if "chaos" in args.sections:
+        from benchmarks import serving_latency
+        serving_latency.run_chaos(**({"n_requests": 6, "pool_size": 4,
+                                      "passages_per_req": 2, "slots": 2,
+                                      "decode_segment": 2, "page_size": 8,
+                                      "rates": (0.0, 0.2), "repeats": 1,
+                                      "passage_lens": (16, 24),
+                                      "query_lens": (8, 12),
+                                      "new_tokens": (2, 4)}
+                                     if args.smoke else {}))
     if "train" in args.sections:
         from benchmarks import train_step
         train_step.run([168] if args.smoke else [512, 2048],

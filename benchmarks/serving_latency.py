@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.config import ModelConfig
 from repro.models import api
 from repro.serving.engine import BlockAttentionEngine, pow2_bucket
+from repro.serving.faults import POINTS, FaultInjector
 from repro.serving.server import BlockServer
 
 PASSAGE_LENS = (48, 64, 96)     # ragged retrieved-passage lengths
@@ -408,6 +409,172 @@ def run_shared(n_requests: int = 24, pool_size: int = 3,
     return results
 
 
+CHAOS_RATES = (0.0, 0.05, 0.1, 0.2)
+
+
+def run_chaos(n_requests: int = 16, pool_size: int = 8,
+              passages_per_req: int = 3, slots: int = 4,
+              decode_segment: int = 4, page_size: int = 16,
+              rates=CHAOS_RATES, seed: int = 0, repeats: int = 2,
+              verify_every: int = 3,
+              emit=print, json_path: Optional[str] = None,
+              cfg: Optional[ModelConfig] = None,
+              passage_lens=PASSAGE_LENS, query_lens=QUERY_LENS,
+              new_tokens=(4, 8, 16)):
+    """Goodput / tail-TTFT vs injected fault rate (DESIGN.md §9).
+
+    The SAME mixed traffic drains through a paged ``BlockServer`` at each
+    fault rate, every named injection point (pool alloc exhaustion, store
+    lookup loss, store corruption, admission delay) firing at that rate
+    from one seeded schedule. The contract this bench pins:
+
+      * parity      — every request's tokens are bitwise identical to the
+        fault-free (rate 0) run: degraded paths recompute, never corrupt;
+      * clean end   — every run ends with ``server.check()`` clean and,
+        once the store drops its references, zero pool refcounts held;
+      * graceful    — goodput (useful tokens/s) and p95 TTFT degrade
+        smoothly, no crash, up to a 20% fault rate.
+
+    The store is cleared before every replay (cold store -> identical
+    encode work at every rate); ``repeats`` replays per rate re-run the
+    identical injector schedule, min-wall reported (first replay also
+    warms the jit programs the chaos-dependent fallback widths need).
+    """
+    cfg = cfg or bench_model()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    traffic = make_traffic(rng, n_requests, pool_size, passages_per_req,
+                           passage_lens, query_lens, new_tokens,
+                           vocab=cfg.vocab_size)
+    max_prefix = max(sum(len(b) for b in blocks[:-1])
+                     for blocks, _ in traffic)
+    max_final = max(len(blocks[-1]) for blocks, _ in traffic)
+    max_seq = (pow2_bucket(max_prefix) + pow2_bucket(max_final)
+               + max(new_tokens) + 8)
+    engine = BlockAttentionEngine(params, cfg, max_seq=max_seq,
+                                  store_verify_every=verify_every)
+    tokens_total = sum(nt for _, nt in traffic)
+
+    def one_replay(rate):
+        engine.store.clear()            # cold store: same work every rate
+        faults = None
+        if rate > 0:
+            faults = FaultInjector(seed=seed,
+                                   rates={p: rate for p in POINTS})
+        server = BlockServer(engine, num_slots=slots,
+                             decode_segment=decode_segment,
+                             paged=True, page_size=page_size,
+                             pool_verify_every=verify_every, faults=faults)
+        tokens, wall = _drain(server, traffic)
+        bad = server.check()
+        engine.store.clear()            # store drops its pool refs
+        leaked = int(server.pool._refs[1:].sum())
+        stats = server.stats()
+        return tokens, wall, leaked, stats, bad
+
+    def replay_ttfts(rate):
+        # separate accounting drain for TTFT percentiles (same schedule)
+        engine.store.clear()
+        faults = None
+        if rate > 0:
+            faults = FaultInjector(seed=seed,
+                                   rates={p: rate for p in POINTS})
+        server = BlockServer(engine, num_slots=slots,
+                             decode_segment=decode_segment,
+                             paged=True, page_size=page_size,
+                             pool_verify_every=verify_every, faults=faults)
+        for b, nt in traffic:
+            server.submit(b, max_new_tokens=nt)
+        comps = server.run()
+        return np.asarray([c.ttft_s for c in comps])
+
+    ref_tokens = None
+    by_rate = {}
+    parity_all = True
+    check_clean = True
+    zero_leaked = True
+    for rate in rates:
+        runs = [one_replay(rate) for _ in range(repeats)]
+        tokens, wall, leaked, stats, bad = \
+            runs[int(np.argmin([r[1] for r in runs]))]
+        for t2, _, lk, _, bad2 in runs:
+            parity_all &= (t2 == tokens)
+            zero_leaked &= (lk == 0)
+            check_clean &= not bad2
+        ttfts = replay_ttfts(rate)
+        if ref_tokens is None:
+            ref_tokens = tokens
+        else:
+            parity_all &= (tokens == ref_tokens)
+        emitted = sum(len(t) for t in tokens)
+        row = {
+            "completed": len(tokens),
+            "goodput_tokens_per_s": round(emitted / wall, 2),
+            "wall_s": round(wall, 4),
+            "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
+            "ttft_p95_s": round(float(np.percentile(ttfts, 95)), 4),
+            "fallback_serves": stats["fallback_serves"],
+            "integrity_failures": stats["integrity_failures"],
+            "pool_fallbacks": stats["pool_fallbacks"],
+            "faults_fired": (stats["faults"]["fired"]
+                             if "faults" in stats else
+                             {p: 0 for p in POINTS}),
+        }
+        by_rate[f"{rate:g}"] = row
+        emit(f"serving_chaos_r{rate:g},{wall * 1e6 / n_requests:.0f},"
+             f"{row['goodput_tokens_per_s']:.1f} tok/s "
+             f"(p95 ttft {row['ttft_p95_s'] * 1e3:.0f}ms, "
+             f"fallbacks {row['fallback_serves']}, "
+             f"integrity {row['integrity_failures']})")
+
+    base = by_rate[f"{rates[0]:g}"]["goodput_tokens_per_s"]
+    worst = by_rate[f"{rates[-1]:g}"]["goodput_tokens_per_s"]
+    results = {
+        "requests": n_requests,
+        "tokens_total": tokens_total,
+        "seed": seed,
+        "rates": [float(r) for r in rates],
+        "num_slots": slots,
+        "decode_segment": decode_segment,
+        "page_size": page_size,
+        "verify_every": verify_every,
+        "parity_all_rates": bool(parity_all),
+        "check_clean_all_rates": bool(check_clean),
+        "zero_leaked_refs": bool(zero_leaked),
+        "goodput_retention_at_max_rate": round(worst / base, 3),
+        "by_rate": by_rate,
+    }
+    assert parity_all, "chaos run broke token parity with fault-free run"
+    assert check_clean, "chaos run ended with pool invariants violated"
+    assert zero_leaked, "chaos run leaked pool page refcounts"
+
+    if json_path:
+        payload = {
+            "benchmark": "serving_chaos",
+            "protocol": {
+                "model": cfg.name, "passage_lens": list(passage_lens),
+                "query_lens": list(query_lens),
+                "new_tokens": list(new_tokens),
+                "passages_per_req": passages_per_req,
+                "pool_size": pool_size, "repeats": repeats,
+                "fault_points": list(POINTS),
+                "backend": jax.default_backend(),
+                "machine": platform.machine(),
+                "note": "same drained traffic at every fault rate, cold "
+                        "store per replay, seeded fault schedules; token "
+                        "parity with the fault-free run is asserted, "
+                        "pool invariants audited at every end state; "
+                        "min-wall of repeats",
+            },
+            "results": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        emit(f"# wrote {json_path}")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -422,9 +589,19 @@ def main():
     ap.add_argument("--shared", action="store_true",
                     help="Zipf-hot shared-prefix scenario: paged pool "
                          "parity/dedup/speed (BENCH_serving_shared.json)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injection scenario: goodput / p95 TTFT "
+                         "vs injected fault rate, token parity asserted "
+                         "(BENCH_serving_chaos.json)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
-    if args.shared:
+    if args.chaos:
+        run_chaos(args.requests, args.pool, args.passages, args.slots,
+                  args.decode_segment, page_size=args.page_size,
+                  seed=args.seed, repeats=args.repeats,
+                  json_path=args.json)
+    elif args.shared:
         run_shared(args.requests, pool_size=3, slots=args.slots,
                    decode_segment=args.decode_segment,
                    page_size=args.page_size, mean_gap_s=args.mean_gap,

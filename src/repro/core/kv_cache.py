@@ -23,12 +23,28 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from collections import OrderedDict
+import zlib
+from collections import Counter, OrderedDict
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def kv_checksum(kv: Any) -> int:
+    """Cheap content checksum of a KV pytree (crc32 over raw leaf bytes).
+
+    Used by the integrity layer (DESIGN.md §9): computed once at
+    insert/seal, re-computed on a configurable cadence at lookup. A
+    mismatch means the cached bytes no longer match what was stored —
+    the entry is dropped and the block re-encodes (recompute beats
+    poisoned outputs). Device leaves sync to host; gate the cadence
+    accordingly (``verify_every``)."""
+    crc = 0
+    for leaf in jax.tree.leaves(kv):
+        crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+    return crc
 
 
 # ---------------------------------------------------------------------------
@@ -139,10 +155,13 @@ def paged_cache_update(pool_k, pool_v, k_new, v_new, view: PagedView, start):
 @dataclasses.dataclass
 class _PageGroup:
     """One distinct block instance resident in the pool: the pages holding
-    its KV (in token order) and how many requests currently reference it."""
+    its KV (in token order) and how many requests currently reference it.
+    ``checksum`` (set by ``seal`` after the page write) lets ``lookup``
+    verify the physical bytes on a cadence."""
     pages: Tuple[int, ...]
     num_tokens: int
     refs: int = 0
+    checksum: Optional[int] = None
 
 
 class PagedKVPool:
@@ -167,7 +186,8 @@ class PagedKVPool:
     are ``register``-ed then ``acquire``/``release``-d per referencing row.
     """
 
-    def __init__(self, slabs: Dict[str, Any], num_pages: int, page_size: int):
+    def __init__(self, slabs: Dict[str, Any], num_pages: int, page_size: int,
+                 verify_every: int = 0):
         self.slabs = slabs
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
@@ -181,6 +201,16 @@ class PagedKVPool:
         self.page_misses = 0
         self.reclaims = 0
         self.alloc_failures = 0
+        # integrity layer (DESIGN.md §9): ``reader(pages, num_tokens)``
+        # materialises a group's physical bytes (the owning server installs
+        # its ``_read_pages``); ``verify_every`` > 0 re-checksums every Nth
+        # directory hit; a mismatch drops the group -> miss -> re-encode
+        self.verify_every = int(verify_every)
+        self.reader: Optional[Callable] = None
+        self.integrity_failures = 0
+        self._lookups = 0
+        # fault injection (serving.faults.FaultInjector); None in prod
+        self.faults = None
 
     # -- capacity ------------------------------------------------------
     @property
@@ -221,6 +251,11 @@ class PagedKVPool:
         the request (caller falls back to the non-paged path)."""
         if n <= 0:
             return []
+        if self.faults is not None and self.faults.fire("pool_alloc"):
+            # injected exhaustion: the caller must unwind its PLAN and
+            # take the contiguous fallback exactly as on a real OOM
+            self.alloc_failures += 1
+            return None
         while len(self._free) < n and self._reclaim_one():
             pass
         if len(self._free) < n:
@@ -255,9 +290,30 @@ class PagedKVPool:
         if g is None:
             self.page_misses += 1
             return None
+        self._lookups += 1
+        # cadence integrity check: only droppable (zero-ref) groups — a
+        # referenced group is being attended by live slots and cannot be
+        # yanked; its sharers pin it until retirement anyway
+        if (self.verify_every > 0 and g.refs == 0
+                and g.checksum is not None and self.reader is not None
+                and self._lookups % self.verify_every == 0):
+            if kv_checksum(self.reader(g.pages, g.num_tokens)) != g.checksum:
+                self.integrity_failures += 1
+                self.drop(key)
+                self.page_misses += 1
+                return None                    # miss path: re-encode
         self._groups.move_to_end(key)
         self.page_hits += 1
         return g
+
+    def seal(self, key: Tuple[str, int]):
+        """Record the group's physical-content checksum (call after its
+        page write lands). No-op unless verification is configured —
+        sealing reads the pages back, which costs a device sync."""
+        if self.verify_every <= 0 or self.reader is None:
+            return
+        g = self._groups[key]
+        g.checksum = kv_checksum(self.reader(g.pages, g.num_tokens))
 
     def register(self, key: Tuple[str, int], pages: Sequence[int],
                  num_tokens: int) -> _PageGroup:
@@ -293,6 +349,71 @@ class PagedKVPool:
         del self._groups[key]
         self._free.extend(g.pages)
 
+    def check(self, retained: Optional[Sequence[int]] = None) -> List[str]:
+        """Invariant audit; returns violations ([] = clean).
+
+        Always checked: the sink page stays pinned and unallocatable; the
+        free list is duplicate-free, zero-ref and disjoint from directory
+        pages; directory groups never share or own the sink; every
+        group-owned page's refcount equals its group's refcount (acquire/
+        release move them in lockstep); no negative refcounts.
+
+        ``retained``: the privately-held (tail) page ids, with
+        multiplicity, as the owning server knows them — enables the full
+        partition check: every page is free, sink, group-owned or
+        retained (anything else leaked), and retained pages' refcounts
+        match their retain multiplicity.
+        """
+        bad: List[str] = []
+        free_set = set(self._free)
+        if len(free_set) != len(self._free):
+            bad.append("duplicate pages in free list")
+        if 0 in free_set:
+            bad.append("sink page 0 in free list")
+        if self._refs[0] < 1:
+            bad.append(f"sink page 0 unpinned (refs {self._refs[0]})")
+        if (self._refs < 0).any():
+            bad.append(f"negative page refcounts at "
+                       f"{np.nonzero(self._refs < 0)[0].tolist()}")
+        owner: Dict[int, Tuple[str, int]] = {}
+        for key, g in self._groups.items():
+            if g.refs < 0:
+                bad.append(f"group {key} has negative refs {g.refs}")
+            for p in g.pages:
+                if p == 0:
+                    bad.append(f"group {key} owns the sink page")
+                elif p in owner:
+                    bad.append(f"page {p} owned by both {owner[p]} "
+                               f"and {key}")
+                elif p in free_set:
+                    bad.append(f"page {p} of group {key} is on the "
+                               f"free list")
+                else:
+                    if self._refs[p] != g.refs:
+                        bad.append(f"page {p} refs {self._refs[p]} != "
+                                   f"group {key} refs {g.refs}")
+                owner[p] = key
+        for p in free_set:
+            if 0 < p < self.num_pages and self._refs[p] != 0:
+                bad.append(f"free page {p} has refs {self._refs[p]}")
+        if retained is not None:
+            held = Counter(int(p) for p in retained)
+            for p, n in held.items():
+                if p in owner:
+                    bad.append(f"retained page {p} also owned by "
+                               f"group {owner[p]}")
+                elif p in free_set:
+                    bad.append(f"retained page {p} is on the free list")
+                elif self._refs[p] != n:
+                    bad.append(f"retained page {p} refs {self._refs[p]} "
+                               f"!= retain count {n}")
+            accounted = free_set | set(owner) | set(held) | {0}
+            leaked = [p for p in range(1, self.num_pages)
+                      if p not in accounted]
+            if leaked:
+                bad.append(f"leaked pages (allocated, unowned): {leaked}")
+        return bad
+
     def stats(self) -> Dict[str, int]:
         return {"num_pages": self.num_pages, "page_size": self.page_size,
                 "used_pages": self.used_pages, "free_pages": self.free_pages,
@@ -300,7 +421,8 @@ class PagedKVPool:
                 "resident_block_bytes": self.resident_block_bytes,
                 "page_hits": self.page_hits, "page_misses": self.page_misses,
                 "reclaims": self.reclaims,
-                "alloc_failures": self.alloc_failures}
+                "alloc_failures": self.alloc_failures,
+                "integrity_failures": self.integrity_failures}
 
 
 # ---------------------------------------------------------------------------
@@ -320,29 +442,45 @@ class BlockEntry:
     the ``PagedKVPool`` pages holding the (delta-0) KV — the store then
     *references* pool memory instead of owning a second copy. ``refs`` pins
     the entry against LRU eviction while a request in flight depends on it
-    (admitted but not yet assembled)."""
+    (admitted but not yet assembled). ``checksum`` (computed at insert when
+    verification is configured) lets ``lookup`` detect corrupted bytes and
+    degrade to recompute instead of serving them."""
     kv: Any                 # pytree of zero-based KV arrays (per group-pos)
     num_tokens: int
     nbytes: int
     refs: int = 0
     pages: Optional[Tuple[int, ...]] = None
+    checksum: Optional[int] = None
 
 
 class BlockKVStore:
-    """Content-addressed LRU store of zero-based block KV states."""
+    """Content-addressed LRU store of zero-based block KV states.
 
-    def __init__(self, budget_bytes: int = 8 << 30, model_tag: str = ""):
+    ``verify_every`` > 0 enables the integrity layer (DESIGN.md §9):
+    inserts checksum the entry's bytes and every Nth lookup re-verifies;
+    a mismatch drops the entry, bumps ``integrity_failures`` and falls
+    through to the miss path, so the block re-encodes and the request
+    succeeds with correct tokens."""
+
+    def __init__(self, budget_bytes: int = 8 << 30, model_tag: str = "",
+                 verify_every: int = 0):
         self._entries: "OrderedDict[str, BlockEntry]" = OrderedDict()
         self.budget_bytes = budget_bytes
         self.model_tag = model_tag
+        self.verify_every = int(verify_every)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.eviction_skips = 0
+        self.integrity_failures = 0
+        self.unpin_underflow = 0
         self._bytes = 0
+        self._lookups = 0
         # Called as on_evict(key, entry) when an entry leaves the store —
         # the paged serving layer uses it to release the entry's pool pages.
         self.on_evict: Optional[Callable[[str, BlockEntry], None]] = None
+        # fault injection (serving.faults.FaultInjector); None in prod
+        self.faults = None
 
     # -- stats ---------------------------------------------------------
     @property
@@ -358,12 +496,58 @@ class BlockKVStore:
         return self.hits / tot if tot else 0.0
 
     # -- core ops ------------------------------------------------------
+    def _drop_entry(self, key: str, ent: BlockEntry):
+        """Remove an entry outright (integrity failure / injected loss);
+        page-backed entries release their pool ref through ``on_evict``."""
+        self._entries.pop(key)
+        self._bytes -= ent.nbytes
+        if self.on_evict is not None:
+            self.on_evict(key, ent)
+
     def lookup(self, tokens: np.ndarray) -> Optional[BlockEntry]:
         key = block_key(tokens, self.model_tag)
         ent = self._entries.get(key)
         if ent is None:
             self.misses += 1
             return None
+        self._lookups += 1
+        # -- fault injection: only unpinned entries can be yanked (a
+        # pinned entry is an in-flight admission's source KV) ----------
+        force_verify = False
+        if self.faults is not None and ent.refs == 0:
+            if self.faults.fire("store_lookup_miss"):
+                # lost KV: report a miss; the caller re-encodes and the
+                # refreshed insert replaces this entry
+                self.misses += 1
+                return None
+            if self.faults.fire("store_corrupt"):
+                if ent.kv is not None and ent.checksum is not None:
+                    # flip the bytes IN the entry and force the integrity
+                    # check below — serving the corrupted KV would break
+                    # token parity, so detection MUST catch this
+                    leaves, treedef = jax.tree.flatten(ent.kv)
+                    first = jnp.asarray(leaves[0])
+                    leaves[0] = first.at[(0,) * first.ndim].add(
+                        jnp.asarray(1, first.dtype))
+                    ent.kv = jax.tree.unflatten(treedef, leaves)
+                    force_verify = True
+                else:
+                    # unverifiable (page-backed or unchecksummed): treat
+                    # the entry as lost rather than risk serving garbage
+                    self._drop_entry(key, ent)
+                    self.integrity_failures += 1
+                    self.misses += 1
+                    return None
+        # -- integrity verification (cadence, or forced by injection) --
+        if (ent.kv is not None and ent.checksum is not None
+                and ent.refs == 0
+                and (force_verify or (self.verify_every > 0 and
+                     self._lookups % self.verify_every == 0))):
+            if kv_checksum(ent.kv) != ent.checksum:
+                self._drop_entry(key, ent)
+                self.integrity_failures += 1
+                self.misses += 1
+                return None                    # miss path: re-encode
         self._entries.move_to_end(key)   # LRU touch
         self.hits += 1
         return ent
@@ -373,6 +557,8 @@ class BlockKVStore:
         nbytes = int(sum(a.size * a.dtype.itemsize
                          for a in jax.tree.leaves(kv)))
         ent = BlockEntry(kv=kv, num_tokens=int(tokens.shape[0]), nbytes=nbytes)
+        if self.verify_every > 0 or self.faults is not None:
+            ent.checksum = kv_checksum(kv)
         if key in self._entries:           # refresh
             old = self._entries[key]
             self._bytes -= old.nbytes
@@ -396,8 +582,14 @@ class BlockKVStore:
 
     def unpin(self, tokens: np.ndarray):
         ent = self._entries.get(block_key(tokens, self.model_tag))
-        if ent is not None:
-            ent.refs = max(0, ent.refs - 1)
+        if ent is None:
+            return
+        if ent.refs <= 0:
+            # unbalanced unpin: clamping silently would hide the pin-leak
+            # bug upstream — count it so stats()/tests surface it
+            self.unpin_underflow += 1
+        else:
+            ent.refs -= 1
 
     def link_pages(self, tokens: np.ndarray,
                    pages: Sequence[int]) -> Optional[BlockEntry]:
@@ -432,9 +624,21 @@ class BlockKVStore:
             if self.on_evict is not None:
                 self.on_evict(victim, old)
 
+    def stats(self) -> Dict[str, Any]:
+        return {"entries": len(self._entries), "bytes": self._bytes,
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": round(self.hit_rate, 4),
+                "evictions": self.evictions,
+                "eviction_skips": self.eviction_skips,
+                "integrity_failures": self.integrity_failures,
+                "unpin_underflow": self.unpin_underflow}
+
     def reset_stats(self):
         self.hits = self.misses = 0
         self.evictions = self.eviction_skips = 0
+        self.integrity_failures = 0
+        self.unpin_underflow = 0
+        self._lookups = 0
 
     def clear(self):
         if self.on_evict is not None:

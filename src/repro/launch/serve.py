@@ -24,8 +24,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import api
 from repro.serving.engine import BlockAttentionEngine
+from repro.serving.faults import FaultInjector, POINTS
 from repro.serving.scheduler import pow2_bucket
-from repro.serving.server import BlockServer, SamplingParams
+from repro.serving.server import BlockServer, Rejected, SamplingParams
 
 
 def make_request_stream(rng, num_requests, passages_per_req, passage_len,
@@ -85,6 +86,19 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="print a line per streamed token")
     ap.add_argument("--seed", type=int, default=0)
+    # failure semantics (DESIGN.md §9)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission queue bound; a submit past it is "
+                         "rejected or sheds per --shed-policy")
+    ap.add_argument("--shed-policy", choices=("reject", "youngest"),
+                    default="reject")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request queueing deadline (seconds); "
+                         "queued past it -> finish_reason 'deadline'")
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help="fault-injection rate across every point "
+                         "(pool alloc / store lookup / admission); "
+                         "tokens stay correct, timing degrades")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -108,6 +122,7 @@ def main():
                          "--temperature > 0 as well (temperature 0 "
                          "takes the argmax and ignores top-k)")
     t0 = time.perf_counter()
+    interrupted = False
     if cfg.is_recurrent():
         if args.temperature > 0 or args.top_k > 0 or args.stream:
             raise SystemExit(
@@ -115,21 +130,37 @@ def main():
                 "no slot pool): --temperature/--top-k/--stream need an "
                 "attention arch")
         # no batched KV path: serve per-request (prefix reuse still applies)
-        for blocks, nt in stream:
-            res = engine.generate(blocks, nt)
-            print(json.dumps({
-                "ttft_s": round(res.ttft_s, 4),
-                "computed_tokens": res.prefill_tokens_computed,
-                "total_tokens": res.prefill_tokens_total,
-                "reuse_frac": round(1 - res.prefill_tokens_computed
-                                    / max(res.prefill_tokens_total, 1), 3),
-            }), flush=True)
-        done = len(stream)
-        trailer = {}
+        done = 0
+        try:
+            for blocks, nt in stream:
+                res = engine.generate(blocks, nt)
+                print(json.dumps({
+                    "ttft_s": round(res.ttft_s, 4),
+                    "computed_tokens": res.prefill_tokens_computed,
+                    "total_tokens": res.prefill_tokens_total,
+                    "reuse_frac": round(1 - res.prefill_tokens_computed
+                                        / max(res.prefill_tokens_total, 1),
+                                        3),
+                }), flush=True)
+                done += 1
+            trailer = {}
+        except KeyboardInterrupt:
+            interrupted = True
+            trailer = {}
     else:
+        faults = None
+        if args.chaos_rate > 0:
+            # admission_delay capped: at rate 1.0 an idle server would
+            # never admit and the drive loop would spin forever
+            rates = {p: min(args.chaos_rate, 0.9 if p == "admission_delay"
+                            else 1.0) for p in POINTS}
+            faults = FaultInjector(seed=args.seed, rates=rates)
         server = BlockServer(engine, num_slots=args.slots,
                              decode_segment=args.decode_segment,
-                             paged=args.paged, page_size=args.page_size)
+                             paged=args.paged, page_size=args.page_size,
+                             max_queue=args.max_queue,
+                             shed_policy=args.shed_policy,
+                             faults=faults)
         cb = (lambda ev: print(json.dumps({
             "rid": ev.rid, "token": int(ev.token), "index": ev.index,
             "finished": ev.finished}), flush=True)) if args.stream else None
@@ -139,9 +170,15 @@ def main():
                                       top_k=args.top_k,
                                       seed=args.seed * 100003 + i) \
                 if args.temperature > 0 else None
-            server.submit(blocks, max_new_tokens=nt, sampling=sampling,
-                          stream_cb=cb)
-        for c in server.run():
+            r = server.submit(blocks, max_new_tokens=nt, sampling=sampling,
+                              stream_cb=cb, deadline_s=args.deadline_s)
+            if isinstance(r, Rejected):
+                print(json.dumps({"rejected": True, "reason": r.reason,
+                                  "pending": r.pending}), flush=True)
+
+        done = 0
+
+        def emit(c):
             print(json.dumps({
                 "rid": c.rid, "tokens": len(c.tokens),
                 "finish": c.finish_reason,
@@ -152,9 +189,27 @@ def main():
                 "reuse_frac": round(c.cache_hit_tokens
                                     / max(c.prefill_tokens_total, 1), 3),
             }), flush=True)
-        done = args.requests
+
+        try:
+            while server.busy:
+                for c in server.step():
+                    emit(c)
+                    done += 1
+        except KeyboardInterrupt:
+            # graceful shutdown: stop admitting, retire the queue as
+            # cancelled, drain active slots to completion (bounded by one
+            # decode segment each), flush their Completions — then the
+            # final-stats trailer below still prints
+            interrupted = True
+            for c in server.shutdown():
+                emit(c)
+                done += 1
         trailer = server.stats()
+        bad = server.check()
+        assert not bad, f"pool invariants violated at shutdown: {bad}"
     wall = time.perf_counter() - t0
+    if interrupted:
+        trailer = dict(trailer, interrupted=True)
     print(json.dumps(dict(trailer, **{
         "requests": done, "wall_s": round(wall, 2),
         "store_blocks": len(engine.store), "store_hits": engine.store.hits,

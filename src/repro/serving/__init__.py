@@ -2,7 +2,8 @@
 streaming, per-request sampling — DESIGN.md §7) over the Block-attention
 device engine (Fig. 2 pipeline) + the pow2-bucketed admission queue."""
 from repro.serving.engine import BlockAttentionEngine, GenerationResult  # noqa: F401
+from repro.serving.faults import FaultInjector  # noqa: F401
 from repro.serving.scheduler import Batch, Request, Scheduler  # noqa: F401
 from repro.serving.server import (  # noqa: F401
-    BlockServer, Completion, SamplingParams, StreamEvent,
+    BlockServer, Completion, Rejected, SamplingParams, StreamEvent,
 )

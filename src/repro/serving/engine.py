@@ -87,7 +87,8 @@ class BlockAttentionEngine:
                  store_budget_bytes: int = 4 << 30,
                  dtype=jnp.float32,
                  reencode_positions: bool = True,
-                 rope_backend: str = "auto"):
+                 rope_backend: str = "auto",
+                 store_verify_every: int = 0):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
@@ -95,7 +96,10 @@ class BlockAttentionEngine:
         # False = the paper's "w/o-pos" ablation: cached zero-based keys are
         # used at their new offsets WITHOUT Eq.-3 re-rotation.
         self.reencode = reencode_positions
-        self.store = BlockKVStore(store_budget_bytes, model_tag=cfg.name)
+        # store_verify_every > 0: checksum block KV at insert and
+        # re-verify every Nth lookup (integrity layer, DESIGN.md §9)
+        self.store = BlockKVStore(store_budget_bytes, model_tag=cfg.name,
+                                  verify_every=store_verify_every)
         self.prefix_store = BlockKVStore(store_budget_bytes,
                                          model_tag=cfg.name + "/prefix")
         self._is_recurrent = cfg.is_recurrent()

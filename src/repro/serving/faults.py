@@ -1,0 +1,98 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md §9).
+
+Block-Attention's independent-block design makes failure semantics cheap:
+any single block's KV can be re-encoded in isolation, so lost or corrupted
+cache state degrades to recompute instead of poisoning outputs. This
+module drives those degraded paths with *randomized schedules* instead of
+hand-picked scenarios, so the PLAN/COMMIT unwind, the contiguous
+fallback, and the integrity-drop/recompute paths are exercised under
+compositions nobody thought to write down.
+
+Injection points (named, each with its own seeded substream so one
+point's rate does not perturb another's schedule):
+
+  * ``pool_alloc``        — ``PagedKVPool.alloc`` reports exhaustion even
+                            though pages are free: drives the PLAN unwind
+                            and the contiguous ``_serve_group_blocking``
+                            fallback.
+  * ``store_lookup_miss`` — ``BlockKVStore.lookup`` returns None for a
+                            resident entry: the lost-KV case (evicted on
+                            another host, dropped disk tier); the block
+                            re-encodes and the entry refreshes.
+  * ``store_corrupt``     — ``BlockKVStore.lookup`` flips the resident
+                            entry's bytes before the integrity check: the
+                            checksum must catch it, drop the entry and
+                            fall through to the miss path (page-backed
+                            entries are dropped as *lost* instead — their
+                            bytes live in the pool). Only unpinned
+                            (refs == 0) entries are corrupted: an
+                            in-flight admission's pinned source is never
+                            yanked mid-PLAN.
+  * ``admission_delay``   — the server skips one admission pass: arrival
+                            jitter, so group composition under load is
+                            randomized (tokens must not depend on it).
+
+Every chaos run must end with ``PagedKVPool.check()`` clean, all
+refcounts/pins released, and token-level parity with a fault-free run of
+the same traffic — the contract pinned by tests/test_faults.py and
+``benchmarks/serving_latency.py --chaos``.
+
+Determinism: each point draws from ``default_rng([seed, point_index])``,
+so a given (seed, per-point call sequence) always fires the same
+schedule. Keep rates < 1.0 for ``admission_delay`` — at 1.0 an idle
+server would never admit and ``run()`` would spin forever.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+# index doubles as the per-point RNG substream id — order is part of the
+# seed contract, append only
+POINTS = ("pool_alloc", "store_lookup_miss", "store_corrupt",
+          "admission_delay")
+
+
+class FaultInjector:
+    """Seedable, deterministic per-point Bernoulli fault schedule.
+
+    ``rates`` maps injection-point name -> probability in [0, 1]; points
+    not named never fire. Attach by passing ``BlockServer(faults=...)`` —
+    the server wires it into its store and pool — or set ``.faults`` on a
+    ``BlockKVStore`` / ``PagedKVPool`` directly.
+    """
+
+    def __init__(self, seed: int = 0, rates: Optional[Dict[str, float]] = None):
+        rates = dict(rates or {})
+        unknown = set(rates) - set(POINTS)
+        if unknown:
+            raise ValueError(f"unknown fault points {sorted(unknown)}; "
+                             f"valid: {POINTS}")
+        for point, rate in rates.items():
+            if not 0.0 <= float(rate) <= 1.0:
+                raise ValueError(f"rate for {point} must be in [0, 1], "
+                                 f"got {rate}")
+        self.seed = int(seed)
+        self.rates = {p: float(rates.get(p, 0.0)) for p in POINTS}
+        self._rngs = {p: np.random.default_rng([self.seed, i])
+                      for i, p in enumerate(POINTS)}
+        self.checked = {p: 0 for p in POINTS}
+        self.fired = {p: 0 for p in POINTS}
+
+    def fire(self, point: str) -> bool:
+        """One Bernoulli draw from ``point``'s substream; True = inject."""
+        rate = self.rates[point]               # KeyError = typo'd point
+        self.checked[point] += 1
+        if rate <= 0.0:
+            return False
+        hit = bool(self._rngs[point].random() < rate)
+        if hit:
+            self.fired[point] += 1
+        return hit
+
+    def stats(self) -> dict:
+        return {"seed": self.seed,
+                "rates": {p: r for p, r in self.rates.items() if r > 0},
+                "checked": dict(self.checked),
+                "fired": dict(self.fired)}

@@ -53,6 +53,9 @@ class Request:
     sampling: Optional[Any] = None    # SamplingParams (None -> greedy)
     stop_tokens: Tuple[int, ...] = ()
     stream_cb: Optional[Callable] = None
+    # absolute perf_counter deadline; a queued request past it is retired
+    # with finish_reason "deadline" before it ever touches a slot
+    deadline_s: Optional[float] = None
 
     @property
     def prefix_len(self) -> int:
@@ -97,19 +100,63 @@ class Scheduler:
     def submit(self, blocks: Sequence[np.ndarray],
                max_new_tokens: int = 8, *, sampling=None,
                stop_tokens: Sequence[int] = (),
-               stream_cb: Optional[Callable] = None) -> int:
+               stream_cb: Optional[Callable] = None,
+               deadline_s: Optional[float] = None) -> int:
+        now = time.perf_counter()
         req = Request(rid=next(self._next_rid),
                       blocks=[np.asarray(b, np.int32) for b in blocks],
                       max_new_tokens=max_new_tokens,
-                      arrived_s=time.perf_counter(),
+                      arrived_s=now,
                       sampling=sampling,
                       stop_tokens=tuple(int(t) for t in stop_tokens),
-                      stream_cb=stream_cb)
+                      stream_cb=stream_cb,
+                      deadline_s=(now + float(deadline_s)
+                                  if deadline_s is not None else None))
         self._queues[req.bucket_key].append(req)
         return req.rid
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    # -- overload control (DESIGN.md §9) ------------------------------
+    def remove(self, rid: int) -> Optional[Request]:
+        """Pull a queued request by rid (cancellation); None if absent."""
+        for key, q in self._queues.items():
+            for i, r in enumerate(q):
+                if r.rid == rid:
+                    return q.pop(i)
+        return None
+
+    def pop_youngest(self) -> Optional[Request]:
+        """Pull the most recently submitted queued request (shed victim
+        under ``shed_policy="youngest"`` — it has waited least, so
+        retiring it wastes the least queueing investment)."""
+        cands = [(q[-1].rid, key) for key, q in self._queues.items() if q]
+        if not cands:
+            return None
+        _, key = max(cands)
+        return self._queues[key].pop()
+
+    def expire(self, now: float) -> List[Request]:
+        """Pull every queued request whose deadline has passed (retired
+        with finish_reason "deadline" by the server). rid-sorted for a
+        deterministic retirement order."""
+        out: List[Request] = []
+        for key, q in self._queues.items():
+            keep = []
+            for r in q:
+                (out if r.deadline_s is not None and now >= r.deadline_s
+                 else keep).append(r)
+            self._queues[key] = keep
+        return sorted(out, key=lambda r: r.rid)
+
+    def drain(self) -> List[Request]:
+        """Pull EVERY queued request (graceful shutdown: the server
+        retires them as cancelled instead of serving them)."""
+        out = sorted((r for q in self._queues.values() for r in q),
+                     key=lambda r: r.rid)
+        self._queues.clear()
+        return out
 
     def _ready_key(self, limit: int) -> Optional[Tuple[int, int]]:
         """Readiest bucket key (oldest rid wins) or None.

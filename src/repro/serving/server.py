@@ -113,6 +113,16 @@ class Completion:
     cache_hit_tokens: int
 
 
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Explicit admission rejection — ``submit()`` under a full
+    ``max_queue`` with ``shed_policy="reject"``. The request was NOT
+    enqueued (no rid was assigned); ``pending`` is the queue depth the
+    caller hit. Callers distinguish it from a rid with isinstance."""
+    reason: str                      # "queue_full"
+    pending: int
+
+
 @dataclasses.dataclass
 class _Live:
     """Host-side bookkeeping for one in-flight request."""
@@ -160,6 +170,25 @@ class BlockServer:
                         decode is active, letting it coalesce with later
                         arrivals instead of paying a width-1 prefill
                         under light load. Never delays when slots idle.
+
+    Failure semantics (DESIGN.md §9):
+
+    ``max_queue``       bound on the admission queue. A ``submit`` past it
+                        either returns ``Rejected`` (shed_policy
+                        "reject") or sheds the YOUNGEST queued request
+                        (shed_policy "youngest" — the victim retires with
+                        finish_reason "shed" and the new request takes
+                        its place). None = unbounded (the legacy
+                        behaviour).
+    ``shed_policy``     "reject" | "youngest" (see ``max_queue``).
+    ``pool_verify_every`` >0 = paged-pool integrity cadence: every Nth
+                        directory hit re-checksums the group's physical
+                        pages; a mismatch drops the group and re-encodes
+                        (costs a device readback — keep the cadence
+                        coarse in production).
+    ``faults``          a ``serving.faults.FaultInjector`` wired into the
+                        pool, the block store and admission; None in
+                        production.
     """
 
     def __init__(self, engine, *, num_slots: int = 4,
@@ -168,7 +197,11 @@ class BlockServer:
                  paged: bool = False, page_size: int = 16,
                  pool_pages: Optional[int] = None,
                  max_row_pages: Optional[int] = None,
-                 admit_hysteresis: int = 0):
+                 admit_hysteresis: int = 0,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 pool_verify_every: int = 0,
+                 faults=None):
         assert not engine._is_recurrent, \
             "BlockServer needs KV-cache attention archs (recurrent archs " \
             "use engine.generate's prefix path)"
@@ -182,6 +215,22 @@ class BlockServer:
         self.admit_hysteresis = int(admit_hysteresis)
         self.admission_deferrals = 0
         self._hold_count = 0
+        if shed_policy not in ("reject", "youngest"):
+            raise ValueError(f"shed_policy must be 'reject' or 'youngest', "
+                             f"got {shed_policy!r}")
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.shed_policy = shed_policy
+        self.faults = faults
+        if faults is not None:
+            engine.store.faults = faults
+        # overload / integrity counters (DESIGN.md §9)
+        self.shed = 0
+        self.deadline_expired = 0
+        self.cancelled = 0
+        self.fallback_serves = 0
+        # completions produced OUTSIDE an admission/segment (shed,
+        # deadline, cancel-while-queued): drained by the next step()
+        self._retired: List[Completion] = []
         self._queue = Scheduler(max_batch=num_slots, max_wait_s=0.0)
 
         B = num_slots
@@ -201,7 +250,11 @@ class BlockServer:
                 pool_pages = 1 + B * self._max_row_pages
             slabs = T.init_paged_pool_slabs(cfg, pool_pages, ps,
                                             dtype=engine.dtype)
-            self.pool = KV.PagedKVPool(slabs, pool_pages, ps)
+            self.pool = KV.PagedKVPool(slabs, pool_pages, ps,
+                                       verify_every=pool_verify_every)
+            self.pool.reader = self._read_pages
+            if faults is not None:
+                self.pool.faults = faults
             engine.store.on_evict = self._on_store_evict
             engine._page_reader = self._read_pages
             self.pool_fallbacks = 0
@@ -252,10 +305,18 @@ class BlockServer:
                sampling: Optional[SamplingParams] = None,
                max_new_tokens: int = 8,
                stop_tokens: Sequence[int] = (),
-               stream_cb: Optional[Callable[[StreamEvent], None]] = None
-               ) -> int:
+               stream_cb: Optional[Callable[[StreamEvent], None]] = None,
+               deadline_s: Optional[float] = None):
         """Enqueue a request; returns its rid. Validates capacity upfront
-        so an unservable request fails HERE, not mid-traffic."""
+        so an unservable request fails HERE, not mid-traffic.
+
+        ``deadline_s`` (relative, seconds): a request still QUEUED past
+        its deadline retires with finish_reason "deadline" instead of
+        taking a slot (once admitted it runs to completion).
+
+        Under a full ``max_queue`` returns ``Rejected`` (shed_policy
+        "reject" — nothing was enqueued) or sheds the youngest queued
+        request to make room (shed_policy "youngest")."""
         total = sum(len(b) for b in blocks)
         assert blocks and max_new_tokens >= 1
         assert total + max_new_tokens <= self.engine.max_seq, \
@@ -272,12 +333,50 @@ class BlockServer:
             assert need <= self._max_row_pages, \
                 ("request needs more pages than the per-row block table "
                  "holds", need, self._max_row_pages)
+        if (self.max_queue is not None
+                and self._queue.pending() >= self.max_queue):
+            if self.shed_policy == "reject":
+                self.shed += 1
+                return Rejected(reason="queue_full",
+                                pending=self._queue.pending())
+            victim = self._queue.pop_youngest()   # "youngest" policy
+            if victim is not None:
+                self.shed += 1
+                self._retired.append(self._retire(
+                    victim, "shed", time.perf_counter()))
         return self._queue.submit(blocks, max_new_tokens, sampling=sampling,
                                   stop_tokens=stop_tokens,
-                                  stream_cb=stream_cb)
+                                  stream_cb=stream_cb,
+                                  deadline_s=deadline_s)
 
     def pending(self) -> int:
         return self._queue.pending()
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is. Queued: pulled from the
+        admission queue. In flight: its slot deactivates through the
+        existing in-scan retirement vectors (the next segment masks the
+        row) and its pool resources release immediately; the Completion
+        carries the tokens generated so far. Both retire with
+        finish_reason "cancelled" out of the next ``step()``. Returns
+        False when the rid is unknown (never submitted / already done)."""
+        now = time.perf_counter()
+        req = self._queue.remove(rid)
+        if req is not None:
+            self.cancelled += 1
+            self._retired.append(self._retire(req, "cancelled", now))
+            return True
+        for s in range(self.num_slots):
+            if self._rids[s] == rid:
+                self._rids[s] = None
+                self._active[s] = False
+                self._remaining[s] = 0
+                if self.paged:
+                    self._release_slot(s)
+                self.cancelled += 1
+                self._retired.append(self._complete(rid, "cancelled", now))
+                return True
+        return False
 
     @property
     def num_active(self) -> int:
@@ -295,19 +394,42 @@ class BlockServer:
         """One scheduling iteration: admit into free slots, then run ONE
         decode segment. Returns the requests completed this step (possibly
         at admission: max_new_tokens == 1, or a first token in the stop
-        set). Completion order is deterministic: admission completions in
-        slot order, then segment retirements in slot order."""
-        done = self._admit()
+        set). Completion order is deterministic: retirements (shed /
+        deadline / cancelled) first, then admission completions in slot
+        order, then segment retirements in slot order."""
+        done, self._retired = self._retired, []
+        done.extend(self._admit())
         if self._active.any():
             done.extend(self._run_segment())
         return done
+
+    @property
+    def busy(self) -> bool:
+        """True while anything remains to drive: queued requests, active
+        slots, or retirements waiting to flush out of the next step()."""
+        return bool(self._queue.pending() or self._active.any()
+                    or self._retired)
 
     def run(self) -> List[Completion]:
         """Drive ``step()`` until the queue is empty and every slot is
         drained; returns all completions in completion order."""
         done: List[Completion] = []
-        while self._queue.pending() or self._active.any():
+        while self.busy:
             done.extend(self.step())
+        return done
+
+    def shutdown(self) -> List[Completion]:
+        """Graceful shutdown: stop admitting, retire every queued request
+        as "cancelled", and drain the active slots to completion at
+        ``decode_segment`` granularity. Returns the final completions;
+        the server is reusable (empty) afterwards."""
+        done, self._retired = self._retired, []
+        now = time.perf_counter()
+        for req in self._queue.drain():
+            self.cancelled += 1
+            done.append(self._retire(req, "cancelled", now))
+        while self._active.any():
+            done.extend(self._run_segment())
         return done
 
     # ------------------------------------------------------------------
@@ -318,6 +440,16 @@ class BlockServer:
 
     def _admit(self) -> List[Completion]:
         done: List[Completion] = []
+        # deadline sweep: queued requests past deadline never take a slot
+        now = time.perf_counter()
+        for req in self._queue.expire(now):
+            self.deadline_expired += 1
+            done.append(self._retire(req, "deadline", now))
+        # injected arrival jitter: skip this admission pass (requests sit
+        # one more segment; group composition randomizes, tokens must not)
+        if (self.faults is not None and self._queue.pending()
+                and self.faults.fire("admission_delay")):
+            return done
         while True:
             free = self._free_slots()
             if not free or not self._queue.pending():
@@ -741,6 +873,8 @@ class BlockServer:
                 page_rows, pow2_bucket(NP))
             pool.slabs = eng._write_pool_pages(flat, pool.slabs, idx,
                                                pos_vec, valid, page_ids)
+            for k in new_keys:
+                pool.seal(k)     # integrity baseline (no-op unless on)
         for blk in pinned:
             eng.store.unpin(blk)
 
@@ -836,6 +970,7 @@ class BlockServer:
         ``pool_fallbacks``."""
         eng = self.engine
         self.pool_fallbacks += 1
+        self.fallback_serves += len(reqs)
         t0 = time.perf_counter()
         n = len(reqs)
         W = min(pow2_bucket(n), self.num_slots)
@@ -998,6 +1133,20 @@ class BlockServer:
             req.stream_cb(StreamEvent(rid=req.rid, token=token, index=index,
                                       finished=finished, reason=reason))
 
+    def _retire(self, req: Request, reason: str, now: float) -> Completion:
+        """Terminal record for a request that never reached a slot (shed /
+        deadline / cancelled-while-queued): zero tokens, zero compute;
+        ``ttft_s`` records the time it sat in the queue."""
+        return Completion(
+            rid=req.rid,
+            tokens=np.zeros(0, np.int32),
+            finish_reason=reason,
+            ttft_s=now - req.arrived_s,
+            decode_s=0.0,
+            prefill_tokens_computed=0,
+            prefill_tokens_total=req.prefix_len + req.final_len,
+            cache_hit_tokens=0)
+
     def _complete(self, rid: int, reason: str, now: float) -> Completion:
         live = self._live.pop(rid)
         r = live.req
@@ -1023,8 +1172,28 @@ class BlockServer:
             "decode_wall_s": round(self.decode_wall_s, 4),
             "admitted_groups": self.admitted_groups,
             "admission_deferrals": self.admission_deferrals,
+            # failure-semantics counters (DESIGN.md §9)
+            "shed": self.shed,
+            "deadline_expired": self.deadline_expired,
+            "cancelled": self.cancelled,
+            "fallback_serves": self.fallback_serves,
+            "integrity_failures": self.engine.store.integrity_failures
+            + (self.pool.integrity_failures if self.paged else 0),
+            "unpin_underflow": self.engine.store.unpin_underflow,
         }
         if self.paged:
             out["pool"] = self.pool.stats()
             out["pool_fallbacks"] = self.pool_fallbacks
+        if self.faults is not None:
+            out["faults"] = self.faults.stats()
         return out
+
+    def check(self) -> List[str]:
+        """Paged-pool invariant audit (DESIGN.md §9) with the server's
+        retained tail pages folded in, so the partition/leak checks run
+        over EVERYTHING: [] = clean. Non-paged servers are vacuously
+        clean (slot rows are private, nothing to leak)."""
+        if not self.paged:
+            return []
+        retained = [p for tail in self._slot_tail for p in tail]
+        return self.pool.check(retained=retained)

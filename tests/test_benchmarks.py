@@ -9,6 +9,7 @@ import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 from repro.core.config import ModelConfig
@@ -178,6 +179,62 @@ def test_serving_shared_committed_baseline_schema():
     assert r["paged"]["tokens_per_s"] > 0
 
 
+@pytest.mark.bench
+def test_serving_chaos_json_contract(tmp_path):
+    """serving_latency.run_chaos writes the BENCH_serving_chaos.json
+    schema future PRs compare on — token parity with the fault-free run,
+    clean pool end state and zero leaked refs are asserted INSIDE run."""
+    from benchmarks import serving_latency
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=256, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_serving_chaos.json"
+    lines = []
+    res = serving_latency.run_chaos(
+        n_requests=6, pool_size=4, passages_per_req=2, slots=2,
+        decode_segment=2, page_size=8, rates=(0.0, 0.2), repeats=1,
+        emit=lines.append, json_path=str(path), cfg=micro,
+        passage_lens=(16, 24), query_lens=(8, 12), new_tokens=(2, 4))
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "serving_chaos"
+    r = payload["results"]
+    assert r["parity_all_rates"] and r["check_clean_all_rates"]
+    assert r["zero_leaked_refs"]
+    assert set(r["by_rate"]) == {"0", "0.2"}
+    for row in r["by_rate"].values():
+        assert row["completed"] == 6
+        assert row["goodput_tokens_per_s"] > 0
+        assert np.isfinite(row["ttft_p95_s"])
+    assert sum(r["by_rate"]["0.2"]["faults_fired"].values()) > 0
+    assert res["goodput_retention_at_max_rate"] > 0
+    assert any(line.startswith("serving_chaos_r0.2,") for line in lines)
+
+
+def test_serving_chaos_committed_baseline_schema():
+    """The committed BENCH_serving_chaos.json satisfies the acceptance
+    bar: bitwise token parity at every injected fault rate up to 20%,
+    clean invariant audits and zero leaked refcounts at every end state,
+    goodput degrading gracefully (finite tail TTFT, no crash)."""
+    payload = json.loads(
+        open(os.path.join(REPO, "BENCH_serving_chaos.json")).read())
+    assert payload["benchmark"] == "serving_chaos"
+    r = payload["results"]
+    assert r["parity_all_rates"] is True
+    assert r["check_clean_all_rates"] is True
+    assert r["zero_leaked_refs"] is True
+    assert 0.2 in r["rates"] and 0.0 in r["rates"]
+    assert r["goodput_retention_at_max_rate"] > 0.3   # degraded, not dead
+    for rate in r["rates"]:
+        row = r["by_rate"][f"{rate:g}"]
+        assert row["completed"] == r["requests"]      # nothing lost
+        assert row["goodput_tokens_per_s"] > 0
+        assert np.isfinite(row["ttft_p95_s"])
+    worst = r["by_rate"][f"{max(r['rates']):g}"]
+    assert sum(worst["faults_fired"].values()) > 0    # chaos actually ran
+    assert worst["fallback_serves"] + worst["integrity_failures"] > 0
+
+
 def test_train_step_json_contract(tmp_path):
     """train_step.run writes the BENCH_train_step.json schema future PRs
     compare on — masked vs structural ragged on the SAME batch."""
@@ -230,4 +287,5 @@ def test_run_smoke_mode():
     assert "batch_decode_mixed," in out.stdout
     assert "serving_shared_paged," in out.stdout
     assert "serving_continuous," in out.stdout
+    assert "serving_chaos_r0.2," in out.stdout
     assert "train_step_struct_168," in out.stdout

@@ -1,0 +1,220 @@
+"""Fault injection + failure semantics (DESIGN.md §9).
+
+Tier-1 here: the injector's determinism contract and the cheap
+single-fault degradation paths. The randomized multi-rate chaos suite is
+``chaos``-marked (deselected by default, `pytest -m chaos` / the CI chaos
+step runs it): every chaos run must end with token parity against the
+fault-free run, a clean ``PagedKVPool.check()`` and zero leaked
+refcounts.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+from repro.serving.faults import POINTS, FaultInjector
+from repro.serving.server import BlockServer
+
+from conftest import tiny_dense
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector contract (tier-1)
+# ---------------------------------------------------------------------------
+def test_injector_deterministic_per_seed():
+    a = FaultInjector(seed=7, rates={p: 0.5 for p in POINTS})
+    b = FaultInjector(seed=7, rates={p: 0.5 for p in POINTS})
+    seq_a = [a.fire(p) for _ in range(50) for p in POINTS]
+    seq_b = [b.fire(p) for _ in range(50) for p in POINTS]
+    assert seq_a == seq_b
+    assert any(seq_a) and not all(seq_a)
+    assert a.stats() == b.stats()
+
+
+def test_injector_substreams_independent():
+    """One point's rate must not perturb another's schedule: the
+    pool_alloc stream is identical whether or not store faults fire."""
+    a = FaultInjector(seed=3, rates={"pool_alloc": 0.5})
+    b = FaultInjector(seed=3, rates={"pool_alloc": 0.5,
+                                     "store_lookup_miss": 0.9,
+                                     "store_corrupt": 0.9})
+    seq_a, seq_b = [], []
+    for _ in range(40):
+        seq_a.append(a.fire("pool_alloc"))
+        b.fire("store_lookup_miss")
+        b.fire("store_corrupt")
+        seq_b.append(b.fire("pool_alloc"))
+    assert seq_a == seq_b
+
+
+def test_injector_validation_and_zero_rate():
+    with pytest.raises(ValueError):
+        FaultInjector(rates={"bogus_point": 0.5})
+    with pytest.raises(ValueError):
+        FaultInjector(rates={"pool_alloc": 1.5})
+    with pytest.raises(KeyError):
+        FaultInjector().fire("bogus_point")
+    inj = FaultInjector(seed=0)                     # all rates 0
+    assert not any(inj.fire(p) for p in POINTS for _ in range(20))
+    assert inj.stats()["fired"] == {p: 0 for p in POINTS}
+    assert inj.stats()["checked"] == {p: 20 for p in POINTS}
+
+
+# ---------------------------------------------------------------------------
+# Single-point degradation paths (tier-1, tiny model)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_dense()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+
+    def mk(n):
+        return rng.integers(5, cfg.vocab_size, n).astype(np.int32)
+
+    passages = [mk(16), mk(16), mk(16)]
+
+    def req(ids, qlen):
+        return [passages[i] for i in ids] + [mk(qlen)]
+
+    return cfg, params, req
+
+
+def _drain(server, reqs, max_new=5):
+    rids = [server.submit(b, max_new_tokens=max_new) for b in reqs]
+    done = {c.rid: c for c in server.run()}
+    return [done[r].tokens.tolist() for r in rids]
+
+
+def _reference(params, cfg, reqs, max_new=5):
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, paged=True,
+                      page_size=8)
+    return _drain(srv, reqs, max_new)
+
+
+def test_forced_alloc_failure_falls_back_with_parity(setup):
+    cfg, params, req = setup
+    reqs = [req([0, 1], 8), req([1, 2], 6), req([0], 10), req([2, 0], 7)]
+    want = _reference(params, cfg, reqs)
+    faults = FaultInjector(seed=1, rates={"pool_alloc": 1.0})
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, paged=True,
+                      page_size=8, faults=faults)
+    assert _drain(srv, reqs) == want
+    assert srv.pool_fallbacks > 0 and srv.fallback_serves == len(reqs)
+    assert faults.fired["pool_alloc"] > 0
+    assert srv.check() == []
+
+
+def test_forced_store_loss_recomputes_with_parity(setup):
+    """Store faults hit the contiguous serve path, where every request
+    consults ``BlockKVStore.lookup`` (the paged path pins entries and
+    serves repeats from the pool directory, bypassing the store)."""
+    cfg, params, req = setup
+    reqs = [req([0, 1], 8), req([0, 1], 8), req([0, 1], 8)]
+    want = _reference(params, cfg, reqs)
+    faults = FaultInjector(seed=1, rates={"store_lookup_miss": 1.0})
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, faults=faults)
+    assert _drain(srv, reqs) == want
+    assert faults.fired["store_lookup_miss"] > 0
+    assert srv.check() == []
+
+
+def test_forced_corruption_detected_and_recomputed(setup):
+    """Injected bit-flips MUST be caught (forced verify on the corrupt
+    path) — the request is served off a re-encode, tokens unchanged."""
+    cfg, params, req = setup
+    reqs = [req([0, 1], 8), req([0, 1], 8), req([0, 1], 8)]
+    want = _reference(params, cfg, reqs)
+    faults = FaultInjector(seed=1, rates={"store_corrupt": 1.0})
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, faults=faults)
+    assert _drain(srv, reqs) == want
+    assert eng.store.integrity_failures > 0
+    assert srv.stats()["integrity_failures"] > 0
+    assert srv.check() == []
+
+
+def test_admission_delay_changes_timing_not_tokens(setup):
+    cfg, params, req = setup
+    reqs = [req([0], 8), req([1], 6), req([2], 10), req([0, 2], 7)]
+    want = _reference(params, cfg, reqs)
+    faults = FaultInjector(seed=5, rates={"admission_delay": 0.7})
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, paged=True,
+                      page_size=8, faults=faults)
+    assert _drain(srv, reqs) == want
+    assert faults.checked["admission_delay"] > 0
+    assert srv.check() == []
+
+
+# ---------------------------------------------------------------------------
+# Randomized chaos suite (chaos-marked; `pytest -m chaos`)
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("rate", [0.05, 0.2])
+def test_chaos_parity_and_clean_end_state(setup, seed, rate):
+    """All four points firing from one seeded schedule: bitwise token
+    parity with the fault-free run, clean pool invariants, zero leaked
+    refcounts once the store lets go."""
+    cfg, params, req = setup
+    rng = np.random.default_rng(seed)
+    reqs = [req(list(rng.choice(3, int(rng.integers(1, 4)),
+                                replace=False)),
+                int(rng.integers(5, 12))) for _ in range(8)]
+    new = [int(rng.integers(2, 7)) for _ in range(8)]
+
+    def serve(faults):
+        eng = BlockAttentionEngine(params, cfg, max_seq=128,
+                                   store_verify_every=2)
+        srv = BlockServer(eng, num_slots=2, decode_segment=3, paged=True,
+                          page_size=8, pool_verify_every=2, faults=faults)
+        rids = [srv.submit(b, max_new_tokens=nt)
+                for b, nt in zip(reqs, new)]
+        done = {c.rid: c for c in srv.run()}
+        toks = [done[r].tokens.tolist() for r in rids]
+        assert srv.check() == [], srv.check()
+        eng.store.clear()                    # store drops its pool refs
+        assert int(srv.pool._refs[1:].sum()) == 0     # nothing leaked
+        assert all(g.refs == 0 for g in srv.pool._groups.values())
+        return toks
+
+    want = serve(None)
+    got = serve(FaultInjector(seed=seed, rates={p: rate for p in POINTS}))
+    assert got == want
+
+
+@pytest.mark.chaos
+def test_chaos_with_overload_non_shed_parity(setup):
+    """Chaos + a bounded queue with youngest-shed: every request that was
+    NOT shed still matches the fault-free unbounded run bitwise; shed
+    requests retire with zero tokens; end state stays clean."""
+    cfg, params, req = setup
+    rng = np.random.default_rng(9)
+    reqs = [req(list(rng.choice(3, int(rng.integers(1, 4)),
+                                replace=False)),
+                int(rng.integers(5, 12))) for _ in range(10)]
+    want = _reference(params, cfg, reqs, max_new=4)
+
+    faults = FaultInjector(seed=9, rates={p: 0.2 for p in POINTS})
+    eng = BlockAttentionEngine(params, cfg, max_seq=128,
+                               store_verify_every=2)
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, paged=True,
+                      page_size=8, pool_verify_every=2, faults=faults,
+                      max_queue=4, shed_policy="youngest")
+    rids = [srv.submit(b, max_new_tokens=4) for b in reqs]
+    # interleave steps so the queue actually bounds mid-traffic
+    done = {c.rid: c for c in srv.run()}
+    assert set(done) == set(rids)            # every rid gets a Completion
+    shed = {r for r in rids if done[r].finish_reason == "shed"}
+    for i, r in enumerate(rids):
+        if r in shed:
+            assert done[r].tokens.size == 0
+        else:
+            assert done[r].tokens.tolist() == want[i]
+    assert srv.stats()["shed"] == len(shed)
+    assert srv.check() == []

@@ -146,3 +146,87 @@ def test_store_never_exceeds_budget(token_lists):
     for toks in token_lists:
         store.insert(np.asarray(toks, np.int32), _kv())
         assert store.nbytes <= store.budget_bytes or len(store) <= 1
+
+
+# ---------------------------------------------------------------------------
+# Failure semantics: unpin underflow + integrity (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def test_unpin_underflow_counted_not_clamped():
+    """An unbalanced unpin is a pin-leak bug upstream: it must be counted
+    (unpin_underflow), never silently clamped away."""
+    store = BlockKVStore()
+    t = np.arange(8, dtype=np.int32)
+    store.insert(t, _kv())
+    assert store.pin(t).refs == 1
+    store.unpin(t)
+    assert store.unpin_underflow == 0
+    store.unpin(t)                            # unbalanced
+    store.unpin(t)                            # and again
+    assert store.unpin_underflow == 2
+    assert store._entries[block_key(t)].refs == 0   # never negative
+    assert store.stats()["unpin_underflow"] == 2
+    store.reset_stats()
+    assert store.unpin_underflow == 0
+
+
+def test_insert_checksums_only_when_verifying():
+    t = np.arange(8, dtype=np.int32)
+    off = BlockKVStore()
+    assert off.insert(t, _kv()).checksum is None       # zero overhead
+    on = BlockKVStore(verify_every=4)
+    ent = on.insert(t, _kv())
+    assert ent.checksum is not None
+    from repro.core.kv_cache import kv_checksum
+    assert ent.checksum == kv_checksum(ent.kv)
+
+
+def test_corrupted_entry_dropped_on_cadence_verify():
+    """verify_every=1: every lookup re-checksums; corrupted bytes drop
+    the entry, bump integrity_failures and fall through to the miss path
+    (the caller re-encodes — the request still succeeds)."""
+    store = BlockKVStore(verify_every=1)
+    t = np.arange(8, dtype=np.int32)
+    store.insert(t, _kv())
+    assert store.lookup(t) is not None        # intact: verifies clean
+    ent = store._entries[block_key(t)]
+    ent.kv = {"k": ent.kv["k"] + 1.0, "v": ent.kv["v"]}   # corrupt
+    assert store.lookup(t) is None            # detected -> miss
+    assert store.integrity_failures == 1
+    assert store.lookup(t) is None            # entry really gone
+    refreshed = store.insert(t, _kv())        # re-encode path refreshes
+    assert store.lookup(t) is refreshed
+
+
+def test_corrupted_entry_survives_while_pinned():
+    """A pinned (in-flight) entry is never verification-dropped mid
+    admission; the drop happens on the next unpinned lookup."""
+    store = BlockKVStore(verify_every=1)
+    t = np.arange(8, dtype=np.int32)
+    store.insert(t, _kv())
+    store.pin(t)
+    ent = store._entries[block_key(t)]
+    ent.kv = {"k": ent.kv["k"] + 1.0, "v": ent.kv["v"]}
+    assert store.lookup(t) is ent             # pinned: served as-is
+    assert store.integrity_failures == 0
+    store.unpin(t)
+    assert store.lookup(t) is None            # now droppable -> caught
+    assert store.integrity_failures == 1
+
+
+def test_integrity_drop_releases_pool_ref_via_on_evict():
+    """Page-backed entries dropped by the integrity layer release their
+    pool reference through on_evict, exactly like an LRU eviction."""
+    released = []
+    store = BlockKVStore(verify_every=1)
+    store.on_evict = lambda key, ent: released.append((key, ent.pages))
+    t = np.arange(8, dtype=np.int32)
+    store.insert(t, _kv())
+    store.link_pages(t, (3, 4))
+    # page-backed + injected corruption -> dropped as lost
+    class _Always:
+        def fire(self, point):
+            return point == "store_corrupt"
+    store.faults = _Always()
+    assert store.lookup(t) is None
+    assert store.integrity_failures == 1
+    assert released == [(block_key(t), (3, 4))]

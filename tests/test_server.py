@@ -200,3 +200,127 @@ def test_scheduler_take_pops_buckets_then_rid_order():
     got = sched.take(2, any_bucket=True)
     assert [r.bucket_key != got[0].bucket_key for r in got] == [False, True]
     assert sched.pending() == 1
+
+
+# ---------------------------------------------------------------------------
+# Overload control: bounded queue, deadlines, cancellation (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+def test_bounded_queue_reject_policy(setup):
+    """A submit past max_queue returns Rejected WITHOUT enqueueing; the
+    already-queued traffic is untouched and serves normally."""
+    from repro.serving.server import Rejected
+    cfg, params, reqs, eng = setup
+    srv = BlockServer(eng, num_slots=2, decode_segment=2, max_queue=2)
+    r0 = srv.submit(reqs[0], max_new_tokens=3)
+    r1 = srv.submit(reqs[1], max_new_tokens=3)
+    rej = srv.submit(reqs[2], max_new_tokens=3)
+    assert isinstance(rej, Rejected)
+    assert rej.reason == "queue_full" and rej.pending == 2
+    assert srv.pending() == 2 and srv.stats()["shed"] == 1
+    done = {c.rid: c for c in srv.run()}
+    assert set(done) == {r0, r1}
+    assert all(c.finish_reason == "length" for c in done.values())
+
+
+def test_bounded_queue_youngest_shed_policy(setup):
+    """shed_policy="youngest": the newest queued request retires with
+    finish_reason "shed" (zero tokens) and the incoming one takes its
+    place — oldest requests keep their queueing investment."""
+    cfg, params, reqs, eng = setup
+    srv = BlockServer(eng, num_slots=2, decode_segment=2, max_queue=2,
+                      shed_policy="youngest")
+    r0 = srv.submit(reqs[0], max_new_tokens=3)
+    r1 = srv.submit(reqs[1], max_new_tokens=3)
+    r2 = srv.submit(reqs[2], max_new_tokens=3)      # sheds r1
+    assert isinstance(r2, int)
+    done = {c.rid: c for c in srv.run()}
+    assert set(done) == {r0, r1, r2}
+    assert done[r1].finish_reason == "shed" and done[r1].tokens.size == 0
+    assert done[r1].decode_s == 0.0
+    assert done[r0].finish_reason == "length"
+    assert done[r2].finish_reason == "length"
+    assert srv.stats()["shed"] == 1
+
+
+def test_deadline_expires_queued_request(setup):
+    """A queued request past its deadline retires with finish_reason
+    "deadline" at the next admission sweep, before taking a slot."""
+    cfg, params, reqs, eng = setup
+    srv = BlockServer(eng, num_slots=2, decode_segment=2)
+    r0 = srv.submit(reqs[0], max_new_tokens=3)
+    r1 = srv.submit(reqs[1], max_new_tokens=3, deadline_s=0.0)  # expired
+    r2 = srv.submit(reqs[2], max_new_tokens=3, deadline_s=60.0)
+    done = {c.rid: c for c in srv.run()}
+    assert done[r1].finish_reason == "deadline"
+    assert done[r1].tokens.size == 0
+    assert done[r0].finish_reason == "length"
+    assert done[r2].finish_reason == "length"   # generous deadline held
+    assert srv.stats()["deadline_expired"] == 1
+
+
+def test_cancel_queued_and_inflight(setup):
+    """cancel(rid): queued requests retire with zero tokens; in-flight
+    requests retire through the in-scan vectors with their tokens so far;
+    unknown rids return False."""
+    cfg, params, reqs, eng = setup
+    srv = BlockServer(eng, num_slots=1, decode_segment=2)
+    r0 = srv.submit(reqs[0], max_new_tokens=8)
+    r1 = srv.submit(reqs[1], max_new_tokens=8)
+    done = srv.step()                       # admits r0 into the one slot
+    assert done == [] and srv.num_active == 1
+    assert srv.cancel(r1)                   # still queued
+    assert srv.cancel(r0)                   # in flight
+    assert not srv.cancel(12345)
+    done = {c.rid: c for c in srv.run()}
+    assert set(done) == {r0, r1}
+    assert done[r1].finish_reason == "cancelled"
+    assert done[r1].tokens.size == 0
+    assert done[r0].finish_reason == "cancelled"
+    assert done[r0].tokens.size >= 1        # first token + segment tokens
+    assert done[r0].tokens.size < 8
+    assert srv.num_active == 0 and srv.stats()["cancelled"] == 2
+
+
+def test_cancel_inflight_paged_releases_pool(setup):
+    """Cancelling a paged in-flight request releases its group refs and
+    tail pages immediately — the audit stays clean, pages come back."""
+    cfg, params, reqs, eng = setup
+    eng2 = BlockAttentionEngine(params, cfg, max_seq=128)
+    srv = BlockServer(eng2, num_slots=2, decode_segment=2, paged=True,
+                      page_size=8)
+    r0 = srv.submit(reqs[0], max_new_tokens=8)
+    srv.step()
+    assert srv.num_active == 1
+    free_before = srv.pool.free_pages
+    assert srv.cancel(r0)
+    assert srv.pool.free_pages > free_before     # tail pages returned
+    assert srv.check() == []
+    done = {c.rid: c for c in srv.run()}
+    assert done[r0].finish_reason == "cancelled"
+
+
+def test_graceful_shutdown_drains_active_cancels_queued(setup):
+    """shutdown(): queued -> "cancelled" with zero tokens, active slots
+    drain TO COMPLETION (their tokens match an undisturbed run), and the
+    server ends empty/reusable."""
+    cfg, params, reqs, eng = setup
+    want = eng.generate_batch(reqs[:2], 6).tokens
+    srv = BlockServer(eng, num_slots=2, decode_segment=2)
+    r0 = srv.submit(reqs[0], max_new_tokens=6)
+    r1 = srv.submit(reqs[1], max_new_tokens=6)
+    r2 = srv.submit(reqs[2], max_new_tokens=6)
+    r3 = srv.submit(reqs[3], max_new_tokens=6)
+    srv.step()                              # r0, r1 admitted; r2, r3 queued
+    done = {c.rid: c for c in srv.shutdown()}
+    assert set(done) == {r0, r1, r2, r3}
+    for rid, row in ((r0, 0), (r1, 1)):
+        assert done[rid].finish_reason == "length"
+        assert done[rid].tokens.tolist() == list(want[row])
+    for rid in (r2, r3):
+        assert done[rid].finish_reason == "cancelled"
+        assert done[rid].tokens.size == 0
+    assert not srv.busy and srv.num_active == 0
+    assert srv.stats()["cancelled"] == 2
+    # reusable after shutdown
+    r4 = srv.submit(reqs[2], max_new_tokens=2)
+    assert {c.rid for c in srv.run()} == {r4}

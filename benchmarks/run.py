@@ -10,6 +10,9 @@
                       resident-KV dedup, paged vs contiguous tokens/s)
   DESIGN §9 failure semantics -> chaos (goodput / p95 TTFT vs injected
                       fault rate; token parity with the fault-free run)
+  DESIGN §10 selection -> selective (top-k block attention: kernel
+                      tile-skip ratio, Zipf-hot serving with / without
+                      selection, accuracy delta)
   §2.3 training  -> train_step (masked vs structural ragged block training)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
@@ -32,9 +35,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
                     default=["ttft", "cache", "kernels", "batch", "serving",
-                             "shared", "chaos", "train"],
+                             "shared", "chaos", "selective", "train"],
                     choices=["ttft", "cache", "kernels", "batch", "serving",
-                             "shared", "chaos", "train"])
+                             "shared", "chaos", "selective", "train"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -96,6 +99,16 @@ def main() -> None:
                                       "query_lens": (8, 12),
                                       "new_tokens": (2, 4)}
                                      if args.smoke else {}))
+    if "selective" in args.sections:
+        from benchmarks import selective
+        selective.run(**({"kernel_pages": 8, "kernel_keep": 2,
+                          "kernel_page_size": 64, "n_requests": 6,
+                          "pool_size": 4, "plen": 16, "slots": 2,
+                          "decode_segment": 2, "page_size": 8,
+                          "serve_topk": 1, "query_lens": (8, 12),
+                          "new_tokens": (2, 4), "train_steps": 0,
+                          "num_samples": 8, "repeats": 1}
+                         if args.smoke else {}))
     if "train" in args.sections:
         from benchmarks import train_step
         train_step.run([168] if args.smoke else [512, 2048],

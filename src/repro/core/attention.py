@@ -352,6 +352,18 @@ def ragged_blockwise_prefill(
     f_idx = jnp.minimum(f_pos, S - 1)
     qf = jnp.take_along_axis(q, f_idx[:, :, None, None], axis=1)
     mask_f = _structural_mask(f_pos, f_valid, kv_pos, kv_valid, window, chunk)
+    sel = getattr(layout, "selected", None)
+    if sel is not None:
+        # top-k block selection (DESIGN.md §10): final-pass queries only see
+        # kept non-final blocks; the final block itself is always kept.
+        # Within-block passes above are untouched — selection changes what
+        # the QUERY block reads, never how prefix blocks encode themselves.
+        selb = jnp.broadcast_to(jnp.asarray(sel, bool), (B, nb))
+        in_blk = (kv_pos[:, None, :] >= starts[:, :-1, None]) \
+            & (kv_pos[:, None, :] < starts[:, 1:, None])       # (B, nb, S)
+        keep_kv = jnp.any(in_blk & selb[:, :, None], axis=1) \
+            | (kv_pos >= starts[:, nb - 1][:, None])
+        mask_f &= keep_kv[:, None, :]
     o_final = _masked(qf, k, v, mask_f, scale, kv_chunk, softcap, dense)
     return out.at[jnp.arange(B)[:, None], f_idx].add(
         jnp.where(f_valid[:, :, None, None], o_final, 0))
@@ -366,12 +378,19 @@ def decode_attention(
     scale: float,
     window: int = 0,
     softcap: float = 0.0,
+    sel=None,                        # (sel_starts (B, NBS+1), sel_keep
+                                     #  (B, NBS)) — §10 selection operands
 ):
     """One new token (Sq small, usually 1) attending a cache of Skv slots.
 
     Memory O(B*H*Skv) — linear, fine even at 500K. ``window`` restricts
     attention to the trailing ``window`` positions (sliding-window decode
     for dense archs at long context).
+
+    ``sel`` is the contiguous selection contract from ``flash_decode``
+    (DESIGN.md §10): positions in deselected prefix blocks are masked,
+    positions at or past ``sel_starts[:, -1]`` (final block + decode tail)
+    are always kept; all-zeros operands are the neutral keep-all encoding.
     """
     B, Sq, H, D = q.shape
     Skv, KV = k_cache.shape[1], k_cache.shape[2]
@@ -386,6 +405,15 @@ def decode_attention(
     mask = kv_pos[:, None, :] < (q_pos[:, :, None] + 1)       # causal+valid
     if window:
         mask &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if sel is not None:
+        ss, sk = sel
+        ss = jnp.asarray(ss, jnp.int32)                       # (B, NBS+1)
+        sk = jnp.asarray(sk, jnp.int32)                       # (B, NBS)
+        in_blk = (kv_pos[:, None, :] >= ss[:, :-1, None]) \
+            & (kv_pos[:, None, :] < ss[:, 1:, None])          # (B, NBS, Skv)
+        keep = jnp.any(in_blk & (sk[:, :, None] > 0), axis=1) \
+            | (kv_pos >= ss[:, -1][:, None])                  # (B, Skv)
+        mask &= keep[:, None, :]
     logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
@@ -399,6 +427,7 @@ def paged_decode_attention(
     cache_len: jax.Array,            # (B,) tokens already in the cache
     scale: float,                    # (model-path convention, as in
     softcap: float = 0.0,            #  decode_attention: len BEFORE write)
+    keep: jax.Array = None,          # (B, MP) 0/1 table-slot selection (§10)
 ):
     """Decode attention gathering KV through per-row page tables.
 
@@ -426,6 +455,9 @@ def paged_decode_attention(
     occ = starts[:, 1:] - starts[:, :-1]                       # (B, MP)
     gidx = (starts[:, :-1, None] + off).reshape(B, MP * PS)    # kv positions
     valid = (off[None, None, :] < occ[:, :, None]).reshape(B, MP * PS)
+    if keep is not None:
+        # §10 selection: a deselected table slot contributes no keys at all
+        valid &= jnp.repeat(jnp.asarray(keep, jnp.int32) > 0, PS, axis=1)
     qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, D)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kg)
     if softcap:

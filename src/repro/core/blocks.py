@@ -56,6 +56,10 @@ class BlockLayout:
                                           # ids (-1 = pad slot) — the shared
                                           # paged pool's dedup operand; a
                                           # static-shape (batch, nb) child
+    selected: Optional[jax.Array] = None  # (batch, nb) bool/0-1 top-k block
+                                          # selection (DESIGN.md §10): final
+                                          # column is always kept; None =
+                                          # selection off (keep everything)
     # -- static signature (pytree aux data) --
     num_blocks: int = 0                   # 0 -> structure unknown (mask path)
     seq_len: int = 0
@@ -66,7 +70,7 @@ class BlockLayout:
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
         children = (self.block_ids, self.last_block_id, self.starts,
-                    self.graph_ids)
+                    self.graph_ids, self.selected)
         aux = (self.num_blocks, self.seq_len, self.max_block_len,
                self.max_final_len, self.uniform)
         return children, aux
@@ -128,15 +132,28 @@ class BlockLayout:
     def token_deltas(self, width: Optional[int] = None):
         """Per-PREFIX-token Eq.-3 delta: token t of block b shifts by
         ``starts[b]``. Host-side (numpy starts) helper for the serving
-        assembly; rows right-pad with zeros to ``width``."""
+        assembly; rows right-pad with zeros to ``width``.
+
+        With ``selected`` set, deselected blocks get delta 0 — rope at
+        delta 0 is the identity, so their KV stays zero-based and the
+        Eq.-3 re-encoding is skipped for them (the LazyAttention-style
+        saving, DESIGN.md §10; a deselected block's keys are never
+        attended, so the un-rotated bytes are harmless)."""
         s = np.asarray(self.row_starts())
         B = s.shape[0]
         width = int(s[:, -2].max()) if width is None else width
         out = np.zeros((B, width), np.int32)
+        sel = (None if self.selected is None
+               else np.broadcast_to(np.asarray(self.selected),
+                                    (B, s.shape[1] - 1)))
         for r in range(B):
             lens = np.diff(s[r, :-1])
             if lens.sum():
-                out[r, : lens.sum()] = np.repeat(s[r, :-2], lens)
+                deltas = np.asarray(s[r, :-2])
+                if sel is not None:
+                    deltas = np.where(sel[r, : deltas.shape[0]] > 0,
+                                      deltas, 0)
+                out[r, : lens.sum()] = np.repeat(deltas, lens)
         return out
 
 
@@ -237,7 +254,8 @@ def ragged_layout(row_lens, max_block_len: int = 0,
 
 
 def from_row_lens(row_lens: Sequence[Sequence[int]],
-                  graph_ids: Optional[Sequence[Sequence[int]]] = None
+                  graph_ids: Optional[Sequence[Sequence[int]]] = None,
+                  selected: Optional[Sequence[Sequence[int]]] = None
                   ) -> BlockLayout:
     """Bookkeeping layout for the serving engine: per-row block lengths that
     may DIFFER in count and total. Rows with fewer blocks are padded with
@@ -249,7 +267,11 @@ def from_row_lens(row_lens: Sequence[Sequence[int]],
     with each row's ORIGINAL (unpadded) block list — the block-graph
     operand of the shared paged pool. Stored padded to the same (B, nb)
     static shape with -1 in pad slots (zero-length pad blocks sit before
-    the final entry, mirroring the ``starts`` padding)."""
+    the final entry, mirroring the ``starts`` padding).
+
+    ``selected`` (optional): per-row 0/1 keep flags aligned like
+    ``graph_ids`` (final entry always forced kept, zero-length pad slots
+    deselected — they carry no tokens either way). None = selection off."""
     rows = [[int(l) for l in r] for r in row_lens]
     nb = max(len(r) for r in rows)
     B = len(rows)
@@ -266,9 +288,18 @@ def from_row_lens(row_lens: Sequence[Sequence[int]],
             assert len(ids) == len(rows[r]), (len(ids), len(rows[r]))
             gids[r, : len(ids) - 1] = ids[:-1]
             gids[r, nb - 1] = ids[-1]
+    sel = None
+    if selected is not None:
+        assert len(selected) == B, (len(selected), B)
+        sel = np.zeros((B, nb), np.int32)
+        for r, flags in enumerate(selected):
+            flags = [int(bool(f)) for f in flags]
+            assert len(flags) == len(rows[r]), (len(flags), len(rows[r]))
+            sel[r, : len(flags) - 1] = flags[:-1]
+            sel[r, nb - 1] = 1                     # final block always kept
     return BlockLayout(
         None, np.full((B,), nb - 1, np.int32), starts.astype(np.int32),
-        graph_ids=gids,
+        graph_ids=gids, selected=sel,
         num_blocks=nb, seq_len=0,
         max_block_len=int(max((max(r[:-1]) for r in rows if len(r) > 1),
                               default=0)),

@@ -47,6 +47,21 @@ def kv_checksum(kv: Any) -> int:
     return crc
 
 
+def pooled_key(kv: Any) -> np.ndarray:
+    """Mean-pooled key vector of a block's zero-based KV (DESIGN.md §10).
+
+    Pools the first layer-group's key slab over every axis but the head
+    dim -> (D,) float32. This is the cheap per-block relevance feature:
+    at admission the server dots it against the pooled final-segment
+    query projection to score blocks for top-k selection. Computed once
+    per cached block (stored on the entry/group), so warm blocks carry
+    their score feature for free. Deliberately un-rotated (zero-based
+    keys) — a documented heuristic proxy, not the exact attention score.
+    """
+    k = np.asarray(kv[sorted(kv)[0]]["k"], np.float32)
+    return k.mean(axis=tuple(range(k.ndim - 1)))
+
+
 # ---------------------------------------------------------------------------
 # Device-side decode cache (pytree)
 # ---------------------------------------------------------------------------
@@ -162,6 +177,7 @@ class _PageGroup:
     num_tokens: int
     refs: int = 0
     checksum: Optional[int] = None
+    pooled: Optional[np.ndarray] = None   # (D,) §10 block-score feature
 
 
 class PagedKVPool:
@@ -209,6 +225,12 @@ class PagedKVPool:
         self.reader: Optional[Callable] = None
         self.integrity_failures = 0
         self._lookups = 0
+        # deferred cadence verification (DESIGN.md §10 satellite): when
+        # True, cadence hits queue the group key instead of verifying
+        # inline on the lookup hot path; the owning server drains the
+        # queue via ``verify_pending()`` in its idle/admission gap.
+        self.defer_verify = False
+        self._pending_verify: List[Tuple[str, int]] = []
         # fault injection (serving.faults.FaultInjector); None in prod
         self.faults = None
 
@@ -297,7 +319,11 @@ class PagedKVPool:
         if (self.verify_every > 0 and g.refs == 0
                 and g.checksum is not None and self.reader is not None
                 and self._lookups % self.verify_every == 0):
-            if kv_checksum(self.reader(g.pages, g.num_tokens)) != g.checksum:
+            if self.defer_verify:
+                if key not in self._pending_verify:
+                    self._pending_verify.append(key)
+            elif kv_checksum(self.reader(g.pages, g.num_tokens)) \
+                    != g.checksum:
                 self.integrity_failures += 1
                 self.drop(key)
                 self.page_misses += 1
@@ -305,6 +331,24 @@ class PagedKVPool:
         self._groups.move_to_end(key)
         self.page_hits += 1
         return g
+
+    def verify_pending(self) -> int:
+        """Drain the deferred-cadence verification queue (off the lookup
+        hot path): re-checksum each still-droppable queued group, dropping
+        corrupt ones exactly as the inline check would — the next lookup
+        misses and re-encodes. Returns how many groups were dropped."""
+        pending, self._pending_verify = self._pending_verify, []
+        dropped = 0
+        for key in pending:
+            g = self._groups.get(key)
+            if (g is None or g.refs != 0 or g.checksum is None
+                    or self.reader is None):
+                continue   # gone, re-referenced, or unverifiable: skip
+            if kv_checksum(self.reader(g.pages, g.num_tokens)) != g.checksum:
+                self.integrity_failures += 1
+                self.drop(key)
+                dropped += 1
+        return dropped
 
     def seal(self, key: Tuple[str, int]):
         """Record the group's physical-content checksum (call after its
@@ -451,6 +495,8 @@ class BlockEntry:
     refs: int = 0
     pages: Optional[Tuple[int, ...]] = None
     checksum: Optional[int] = None
+    pooled: Optional[np.ndarray] = None   # (D,) §10 block-score feature,
+                                          # filled lazily on first scoring
 
 
 class BlockKVStore:
@@ -476,6 +522,10 @@ class BlockKVStore:
         self.unpin_underflow = 0
         self._bytes = 0
         self._lookups = 0
+        # deferred cadence verification — see PagedKVPool.defer_verify;
+        # default False keeps the store-level inline-drop contract
+        self.defer_verify = False
+        self._pending_verify: List[str] = []
         # Called as on_evict(key, entry) when an entry leaves the store —
         # the paged serving layer uses it to release the entry's pool pages.
         self.on_evict: Optional[Callable[[str, BlockEntry], None]] = None
@@ -543,7 +593,14 @@ class BlockKVStore:
                 and ent.refs == 0
                 and (force_verify or (self.verify_every > 0 and
                      self._lookups % self.verify_every == 0))):
-            if kv_checksum(ent.kv) != ent.checksum:
+            if not force_verify and self.defer_verify:
+                # off the hot path: queue for the server's idle gap
+                # (injected corruption above still verifies inline — the
+                # chaos-suite parity contract needs detection before the
+                # poisoned entry can be served)
+                if key not in self._pending_verify:
+                    self._pending_verify.append(key)
+            elif kv_checksum(ent.kv) != ent.checksum:
                 self._drop_entry(key, ent)
                 self.integrity_failures += 1
                 self.misses += 1
@@ -551,6 +608,30 @@ class BlockKVStore:
         self._entries.move_to_end(key)   # LRU touch
         self.hits += 1
         return ent
+
+    def verify_pending(self) -> int:
+        """Drain the deferred-cadence queue: verify each still-droppable
+        queued entry, dropping corrupt ones with identical semantics to
+        the inline check (DESIGN.md §9 — the next lookup re-encodes).
+        Returns how many entries were dropped."""
+        pending, self._pending_verify = self._pending_verify, []
+        dropped = 0
+        for key in pending:
+            ent = self._entries.get(key)
+            if (ent is None or ent.kv is None or ent.checksum is None
+                    or ent.refs != 0):
+                continue
+            if kv_checksum(ent.kv) != ent.checksum:
+                self._drop_entry(key, ent)
+                self.integrity_failures += 1
+                dropped += 1
+        return dropped
+
+    def peek(self, tokens: np.ndarray) -> Optional[BlockEntry]:
+        """Stat-free entry access: no LRU touch, no hit/miss accounting,
+        no verification — the §10 selection scorer's accessor (scoring a
+        block must not perturb cache statistics or cadence counters)."""
+        return self._entries.get(block_key(tokens, self.model_tag))
 
     def insert(self, tokens: np.ndarray, kv: Any) -> BlockEntry:
         key = block_key(tokens, self.model_tag)

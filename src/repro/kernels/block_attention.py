@@ -229,6 +229,89 @@ def _ragged_kernel(starts_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
 
 
+def _ragged_kernel_sel(starts_ref, keep_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, scale: float, nb: int,
+                       tq: int, tk: int, softcap: float, heads_per_row: int):
+    """Ragged-block prefill with top-k block selection on the FINAL-pass
+    rows (DESIGN.md §10): non-final rows attend their own block exactly as
+    in ``_ragged_kernel``; rows in the final (global) block additionally
+    mask out kv positions in deselected non-final blocks. ``keep_ref``
+    (SMEM) is (B, nb) 0/1 over blocks — its final column is ignored (the
+    final block is always kept). Tiles made of final rows only skip KV
+    tiles overlapping no kept range (grid-level selection sparsity)."""
+    n = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    b = n // heads_per_row
+    kv_len = starts_ref[b, nb]
+    final_start = starts_ref[b, nb - 1]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lo_first = jnp.int32(0)
+    for blk in range(1, nb):
+        sb = starts_ref[b, blk]
+        lo_first = jnp.where(i * tq >= sb, sb, lo_first)
+    q_hi = (i + 1) * tq - 1
+    tile_lo = jnp.where(q_hi >= final_start, 0, lo_first)
+    live = (j * tk <= jnp.minimum(q_hi, kv_len - 1)) & \
+        ((j + 1) * tk > tile_lo) & (i * tq < kv_len)
+    # selection refinement: a tile made of final rows ONLY is dead unless
+    # its kv tile overlaps the final region or a kept non-final block
+    sel_live = (j + 1) * tk > final_start
+    for blk in range(nb - 1):
+        sel_live |= ((keep_ref[b, blk] > 0)
+                     & ((j + 1) * tk > starts_ref[b, blk])
+                     & (j * tk < starts_ref[b, blk + 1]))
+    live &= jnp.where(i * tq >= final_start, sel_live, True)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale              # (G, TQ, D)
+        k = k_ref[0].astype(jnp.float32)                      # (TK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, TQ, TK)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, 1), 0)
+        lo = jnp.zeros((tq, 1), jnp.int32)
+        for blk in range(1, nb):
+            sb = starts_ref[b, blk]
+            lo = jnp.where(q_pos >= sb, sb, lo)
+        lo = jnp.where(q_pos >= final_start, 0, lo)           # global final blk
+        kv_pos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        mask = (kv_pos <= q_pos) & (kv_pos >= lo) & (kv_pos < kv_len)
+        # final-pass rows only see kept blocks (+ the final region itself)
+        keep_kv = kv_pos >= final_start
+        for blk in range(nb - 1):
+            keep_kv |= ((keep_ref[b, blk] > 0)
+                        & (kv_pos >= starts_ref[b, blk])
+                        & (kv_pos < starts_ref[b, blk + 1]))
+        mask &= (q_pos < final_start) | keep_kv
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_ref[...]                                   # (G, TQ)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (G, TQ, D)
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
 def flash_block_ragged(
     q: jax.Array,            # (N, G, Sp, D)   N = batch * kv_heads
     k: jax.Array,            # (N, Sp, D)      Sp padded to tile multiples
@@ -244,6 +327,9 @@ def flash_block_ragged(
     tk: int = DEFAULT_TK,
     softcap: float = 0.0,
     interpret: bool = True,
+    sel_keep: jax.Array = None,   # (B, nb) 0/1 block keep flags; final col
+                                  # ignored (final block always kept). None
+                                  # -> the original unselected program.
 ) -> jax.Array:
     """Whole (per-row ragged) Block-attention prefill in ONE kernel launch.
 
@@ -253,6 +339,9 @@ def flash_block_ragged(
     0 like final-block rows). Callers MUST slice/mask the output back to
     the valid length. Pad *keys* are always masked out via the boundary
     scalars.
+
+    With ``sel_keep``, final-block rows attend only kept blocks (plus the
+    final region); non-final rows are untouched (DESIGN.md §10).
     """
     N, G, Sq, D = q.shape
     Skv = k.shape[1]
@@ -267,19 +356,32 @@ def flash_block_ragged(
     assert Sq % tq == 0 and Skv % tk == 0, (Sq, tq, Skv, tk)
     grid = (N, Sq // tq, Skv // tk)
 
-    kernel = functools.partial(_ragged_kernel, scale=scale, nb=nb,
-                               tq=tq, tk=tk, softcap=softcap,
-                               heads_per_row=heads_per_row)
+    if sel_keep is not None:
+        sel_keep = jnp.asarray(sel_keep, jnp.int32)
+        if sel_keep.ndim == 1:
+            sel_keep = sel_keep[None]
+        assert sel_keep.shape == (B, nb), (sel_keep.shape, B, nb)
+        kernel = functools.partial(_ragged_kernel_sel, scale=scale, nb=nb,
+                                   tq=tq, tk=tk, softcap=softcap,
+                                   heads_per_row=heads_per_row)
+        n_scalar = 2
+        operands = (starts, sel_keep)
+    else:
+        kernel = functools.partial(_ragged_kernel, scale=scale, nb=nb,
+                                   tq=tq, tk=tk, softcap=softcap,
+                                   heads_per_row=heads_per_row)
+        n_scalar = 1
+        operands = (starts,)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=n_scalar,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, G, tq, D), lambda n, i, j, starts: (n, 0, i, 0)),
-            pl.BlockSpec((1, tk, D), lambda n, i, j, starts: (n, j, 0)),
-            pl.BlockSpec((1, tk, D), lambda n, i, j, starts: (n, j, 0)),
+            pl.BlockSpec((1, G, tq, D), lambda n, i, j, *refs: (n, 0, i, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, i, j, *refs: (n, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda n, i, j, *refs: (n, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, G, tq, D),
-                               lambda n, i, j, starts: (n, 0, i, 0)),
+                               lambda n, i, j, *refs: (n, 0, i, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, tq), jnp.float32),        # running max m
             pltpu.VMEM((G, tq), jnp.float32),        # denominator l
@@ -293,4 +395,4 @@ def flash_block_ragged(
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(starts, q, k, v)
+    )(*operands, q, k, v)

@@ -37,6 +37,22 @@ is logical, not physical).
 callers with an odd ``Skv`` must pad the same way — `flash_decode` asserts
 rather than silently mis-tiling.
 
+**Selective top-k block attention** (DESIGN.md §10): both modes accept an
+optional per-row block-selection operand, scalar-prefetched like the
+lengths. Contiguous mode takes ``sel_starts`` (N, NBS+1) cumulative prefix
+-block boundaries plus ``sel_keep`` (N, NBS) 0/1 flags: a kv position in a
+deselected block is masked out of the final/decode attention, positions at
+or past ``sel_starts[n, NBS]`` (the final block + decode tail) are always
+kept, and tiles overlapping no kept range clamp their index_map onto the
+row's last live tile (DMA elided) and ``pl.when``-skip the MXU work — the
+dead-tile mechanism applied to *selection* sparsity. The all-zeros operand
+is the neutral encoding (everything counts as tail -> all kept). Paged mode
+takes ``keep`` (N, num_tiles) over table slots; the caller additionally
+rewrites deselected slots' table entries onto the resident sink page so
+their DMA is free, and the kernel skips their whole tile. When the
+selection operands are None the ORIGINAL programs run with identical
+operands — ``select_topk=None`` parity is by construction.
+
 VMEM: q (G, D) + k/v tiles (TK, D) + acc (G, D) f32 — trivially small; the
 kernel is HBM-bandwidth-bound by the cache stream, as the roofline confirms.
 """
@@ -103,6 +119,74 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
 
 
+def _sel_tile_live(ss_ref, sk_ref, n, lo, hi, nbs: int):
+    """Does kv range [lo, hi) overlap the always-kept tail or a kept
+    prefix block? Static loop over the NBS boundary slots (tiny)."""
+    live = hi > ss_ref[n, nbs]                 # tail: final block + decode
+    for b in range(nbs):
+        live |= ((sk_ref[n, b] > 0) & (hi > ss_ref[n, b])
+                 & (lo < ss_ref[n, b + 1]))
+    return live
+
+
+def _sel_pos_keep(ss_ref, sk_ref, n, kv_pos, nbs: int):
+    """Per-position keep mask for the selection contract (§10)."""
+    keep = kv_pos >= ss_ref[n, nbs]
+    for b in range(nbs):
+        keep |= ((sk_ref[n, b] > 0) & (kv_pos >= ss_ref[n, b])
+                 & (kv_pos < ss_ref[n, b + 1]))
+    return keep
+
+
+def _decode_kernel_sel(len_ref, ss_ref, sk_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref, acc_ref,
+                       *, scale: float, tk: int, nbs: int, softcap: float):
+    """Contiguous decode with per-row top-k block selection: identical
+    online softmax to ``_decode_kernel`` (window-free), plus the selection
+    tile-liveness gate and per-position keep mask."""
+    n = pl.program_id(0)
+    j = pl.program_id(1)
+    nkv = pl.num_programs(1)
+    cache_len = len_ref[n]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = (j * tk < cache_len) & _sel_tile_live(
+        ss_ref, sk_ref, n, j * tk, (j + 1) * tk, nbs)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale               # (G, D)
+        k = k_ref[0].astype(jnp.float32)                       # (TK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, TK)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        kv_pos = j * tk + jax.lax.broadcasted_iota(jnp.int32, (1, tk), 1)[0]
+        mask = (kv_pos < cache_len) & _sel_pos_keep(ss_ref, sk_ref, n,
+                                                    kv_pos, nbs)
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
 def _paged_decode_kernel(len_ref, nlive_ref, tbl_ref, starts_ref,
                          q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                          *, scale: float, ps: int, softcap: float):
@@ -149,8 +233,60 @@ def _paged_decode_kernel(len_ref, nlive_ref, tbl_ref, starts_ref,
         o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel_sel(len_ref, nlive_ref, tbl_ref, starts_ref,
+                             keep_ref, q_ref, k_ref, v_ref, o_ref,
+                             m_ref, l_ref, acc_ref,
+                             *, scale: float, ps: int, softcap: float):
+    """Paged decode with per-row table-slot selection: one table slot ==
+    one grid tile, so a deselected slot skips its entire MXU step (its DMA
+    already lands on the resident sink page — the caller rewrote its table
+    entry to page 0)."""
+    n = pl.program_id(0)
+    j = pl.program_id(1)
+    mp = pl.num_programs(1)
+    cache_len = len_ref[n]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start_j = starts_ref[n, j]
+    occ = starts_ref[n, j + 1] - start_j
+    live = (start_j < cache_len) & (occ > 0) & (keep_ref[n, j] > 0)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale               # (G, D)
+        k = k_ref[0].astype(jnp.float32)                       # (PS, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, PS)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        off = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)[0]
+        mask = (off < occ) & (start_j + off < cache_len)
+        s = jnp.where(mask[None, :], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == mp - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
 def _paged_flash_decode(q, pool_k, pool_v, cache_len, block_tables,
-                        page_starts, *, scale, softcap, interpret):
+                        page_starts, *, scale, softcap, interpret,
+                        keep=None):
     N, G, D = q.shape
     ps = pool_k.shape[1]
     MP = block_tables.shape[1]
@@ -166,15 +302,34 @@ def _paged_flash_decode(q, pool_k, pool_v, cache_len, block_tables,
     nlive = jnp.maximum(jnp.sum(
         ((page_starts[:, :-1] < cache_len[:, None]) & (occ > 0))
         .astype(jnp.int32), axis=1), 1)
-    kernel = functools.partial(_paged_decode_kernel, scale=scale, ps=ps,
-                               softcap=softcap)
+    if keep is not None:
+        keep = jnp.asarray(keep, jnp.int32)
+        assert keep.shape == (N, MP), (keep.shape, N, MP)
+        # deselected slots read the permanently-resident sink page: their
+        # DMA is free, and the kernel skips their MXU step entirely
+        block_tables = jnp.where(keep > 0, block_tables, 0)
+        kernel = functools.partial(_paged_decode_kernel_sel, scale=scale,
+                                   ps=ps, softcap=softcap)
 
-    def kv_index(n, j, lens, nlv, tbl, starts):
-        jj = jnp.minimum(j, nlv[n] - 1)
-        return (tbl[n, jj], 0, 0)
+        def kv_index(n, j, lens, nlv, tbl, starts, kp):
+            jj = jnp.minimum(j, nlv[n] - 1)
+            return (tbl[n, jj], 0, 0)
+
+        n_scalar = 5
+        operands = (cache_len, nlive, block_tables, page_starts, keep)
+    else:
+        kernel = functools.partial(_paged_decode_kernel, scale=scale, ps=ps,
+                                   softcap=softcap)
+
+        def kv_index(n, j, lens, nlv, tbl, starts):
+            jj = jnp.minimum(j, nlv[n] - 1)
+            return (tbl[n, jj], 0, 0)
+
+        n_scalar = 4
+        operands = (cache_len, nlive, block_tables, page_starts)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=n_scalar,
         grid=(N, MP),
         in_specs=[
             pl.BlockSpec((1, G, D), lambda n, j, *refs: (n, 0, 0)),
@@ -195,7 +350,7 @@ def _paged_flash_decode(q, pool_k, pool_v, cache_len, block_tables,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(cache_len, nlive, block_tables, page_starts, q, pool_k, pool_v)
+    )(*operands, q, pool_k, pool_v)
 
 
 def flash_decode(
@@ -212,13 +367,20 @@ def flash_decode(
     interpret: bool = True,
     block_tables: jax.Array = None,   # (N, num_tiles) int32 page ids
     page_starts: jax.Array = None,    # (N, num_tiles+1) int32 cum. occupancy
+    keep: jax.Array = None,           # paged selection: (N, num_tiles) 0/1
+    sel_starts: jax.Array = None,     # contiguous selection: (N, NBS+1) int32
+    sel_keep: jax.Array = None,       # contiguous selection: (N, NBS) 0/1
 ) -> jax.Array:
     if block_tables is not None:
         assert page_starts is not None, "paged mode needs page_starts"
         assert window == 0, "sliding window unsupported in paged mode"
+        assert sel_starts is None and sel_keep is None, \
+            "paged mode selects via keep, not sel_starts/sel_keep"
         return _paged_flash_decode(q, k_cache, v_cache, cache_len,
                                    block_tables, page_starts, scale=scale,
-                                   softcap=softcap, interpret=interpret)
+                                   softcap=softcap, interpret=interpret,
+                                   keep=keep)
+    assert keep is None, "keep is a paged-mode operand"
     N, G, D = q.shape
     Skv = k_cache.shape[1]
     tk = min(tk, Skv)
@@ -228,28 +390,55 @@ def flash_decode(
     cache_len = jnp.broadcast_to(
         jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (N,))
     grid = (N, Skv // tk)
-    kernel = functools.partial(_decode_kernel, scale=scale, tk=tk,
-                               window=window, softcap=softcap)
+    if sel_starts is not None:
+        assert sel_keep is not None, "sel_starts needs sel_keep"
+        assert window == 0, "sliding window unsupported with selection"
+        sel_starts = jnp.asarray(sel_starts, jnp.int32)
+        sel_keep = jnp.asarray(sel_keep, jnp.int32)
+        nbs = sel_starts.shape[1] - 1
+        assert sel_starts.shape == (N, nbs + 1), (sel_starts.shape, N)
+        assert sel_keep.shape == (N, nbs), (sel_keep.shape, N, nbs)
+        kernel = functools.partial(_decode_kernel_sel, scale=scale, tk=tk,
+                                   nbs=nbs, softcap=softcap)
 
-    def kv_index(n, j, lens):
-        # clamp dead tiles onto the nearest live one: the block is already
-        # resident, so the pipeline skips the copy — per-row HBM sparsity
-        last = jnp.maximum(jax.lax.div(lens[n] - 1, tk), 0)
-        jj = jnp.minimum(j, last)
-        if window:
-            lo_tile = jnp.maximum(lens[n] - window, 0) // tk
-            jj = jnp.maximum(jj, jnp.minimum(lo_tile, last))
-        return (n, jj, 0)
+        def kv_index(n, j, lens, ss, sk):
+            # clamp both dead AND deselected tiles onto the row's last live
+            # tile (always kept: the tail starts at or before lens[n]-1)
+            last = jnp.maximum(jax.lax.div(lens[n] - 1, tk), 0)
+            jj = jnp.minimum(j, last)
+            live = _sel_tile_live(ss, sk, n, jj * tk, (jj + 1) * tk, nbs)
+            return (n, jnp.where(live, jj, last), 0)
+
+        n_scalar = 3
+        operands = (cache_len, sel_starts, sel_keep)
+    else:
+        assert sel_keep is None, "sel_keep needs sel_starts"
+        kernel = functools.partial(_decode_kernel, scale=scale, tk=tk,
+                                   window=window, softcap=softcap)
+
+        def kv_index(n, j, lens):
+            # clamp dead tiles onto the nearest live one: the block is
+            # already resident, so the pipeline skips the copy — per-row
+            # HBM sparsity
+            last = jnp.maximum(jax.lax.div(lens[n] - 1, tk), 0)
+            jj = jnp.minimum(j, last)
+            if window:
+                lo_tile = jnp.maximum(lens[n] - window, 0) // tk
+                jj = jnp.maximum(jj, jnp.minimum(lo_tile, last))
+            return (n, jj, 0)
+
+        n_scalar = 1
+        operands = (cache_len,)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=n_scalar,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, G, D), lambda n, j, lens: (n, 0, 0)),
+            pl.BlockSpec((1, G, D), lambda n, j, *refs: (n, 0, 0)),
             pl.BlockSpec((1, tk, D), kv_index),
             pl.BlockSpec((1, tk, D), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, G, D), lambda n, j, lens: (n, 0, 0)),
+        out_specs=pl.BlockSpec((1, G, D), lambda n, j, *refs: (n, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
@@ -263,4 +452,4 @@ def flash_decode(
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(cache_len, q, k_cache, v_cache)
+    )(*operands, q, k_cache, v_cache)

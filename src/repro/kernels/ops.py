@@ -84,6 +84,7 @@ def block_attention_prefill(q, k, v, num_blocks: int = 0, scale: float = None,
     """
     if scale is None:   # keyword-form callers must not silently get 1.0
         raise TypeError("block_attention_prefill: scale is required")
+    sel_keep = None
     if layout is not None:
         assert block_lens is None and num_blocks == 0, \
             "pass exactly one of layout / block_lens / num_blocks"
@@ -94,6 +95,23 @@ def block_attention_prefill(q, k, v, num_blocks: int = 0, scale: float = None,
             lens = lens[0]
         block_lens = (np.asarray(lens) if not isinstance(lens, jax.Array)
                       else lens)
+        sel = getattr(layout, "selected", None)
+        if sel is not None:
+            # §10 selection: always take the ragged kernel — it carries the
+            # per-row keep operand (the uniform fold has no final-pass rows
+            # to select against)
+            sel_keep = jnp.asarray(sel, jnp.int32)
+            if sel_keep.ndim == 1:
+                sel_keep = sel_keep[None]
+            if isinstance(block_lens, jax.Array):
+                tile = 256                # traced lens: no host info to adapt
+            else:
+                lens_arr = np.asarray(block_lens)
+                tile = min(256, max(64, _next_pow2(
+                    int(lens_arr[lens_arr > 0].min()))))
+            return _block_attention_ragged(
+                q, k, v, jnp.asarray(block_lens, jnp.int32), scale, softcap,
+                interpret, tile, sel_keep=sel_keep)
     if block_lens is not None and not isinstance(block_lens, jax.Array):
         # host-side lens: catch a bad block map here, before tracing would
         # silently mask the tail (device-array lens are the caller's
@@ -167,14 +185,22 @@ def _block_attention_uniform(q, k, v, num_blocks, scale, softcap, interpret):
 @functools.partial(jax.jit, static_argnames=(
     "scale", "softcap", "interpret", "tile"))
 def _block_attention_ragged(q, k, v, block_lens, scale, softcap, interpret,
-                            tile):
+                            tile, sel_keep=None):
     """One-launch ragged dispatch; ``block_lens`` (nb,) shared or (B, nb)
-    per-row — the kernel's batched boundary operand either way."""
+    per-row — the kernel's batched boundary operand either way. Optional
+    ``sel_keep`` (B, nb) threads the §10 final-pass block selection."""
     B, S, H, D = q.shape
     block_lens = jnp.asarray(block_lens, jnp.int32)
     zeros = jnp.zeros(block_lens.shape[:-1] + (1,), jnp.int32)
     starts = jnp.concatenate(
         [zeros, jnp.cumsum(block_lens, axis=-1, dtype=jnp.int32)], axis=-1)
+    if sel_keep is not None:
+        nb = starts.shape[-1] - 1
+        # the kernel maps grid row -> boundary row via starts' batch dim, so
+        # a shared layout with per-row selection must broadcast both to B
+        starts = jnp.broadcast_to(starts.reshape(-1, nb + 1), (B, nb + 1))
+        sel_keep = jnp.broadcast_to(
+            jnp.asarray(sel_keep, jnp.int32).reshape(-1, nb), (B, nb))
 
     tq = min(tile, _next_pow2(S))
     tk = min(max(tile, 512) if tile >= 256 else tile, _next_pow2(S))
@@ -183,7 +209,8 @@ def _block_attention_ragged(q, k, v, block_lens, scale, softcap, interpret,
     vp = _pad_seq(v, -(-S // tk) * tk)
     qf, kf, vf = _fold(qp, kp, vp)
     o = flash_block_ragged(qf, kf, vf, starts, scale=scale, tq=tq, tk=tk,
-                           softcap=softcap, interpret=interpret)
+                           softcap=softcap, interpret=interpret,
+                           sel_keep=sel_keep)
     return _unfold(o, B, H, D)[:, :S]
 
 
@@ -204,9 +231,13 @@ def causal_attention(q, k, v, scale: float, q_offset: int = 0,
     "scale", "window", "softcap", "interpret"))
 def decode_attention(q, k_cache, v_cache, cache_len, scale: float,
                      window: int = 0, softcap: float = 0.0,
-                     interpret: bool = INTERPRET):
+                     interpret: bool = INTERPRET,
+                     sel_starts=None, sel_keep=None):
     """Single-token decode. q (B,1,H,D); cache_len int32 incl. the new token —
-    a scalar (shared length) or a (B,) per-row vector (paged ragged batch)."""
+    a scalar (shared length) or a (B,) per-row vector (paged ragged batch).
+
+    ``sel_starts`` (B, NBS+1) / ``sel_keep`` (B, NBS) thread the §10 block
+    selection into the kernel (per-row operands repeat across KV heads)."""
     B, _, H, D = q.shape
     Skv, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -222,8 +253,13 @@ def decode_attention(q, k_cache, v_cache, cache_len, scale: float,
     cl = jnp.broadcast_to(
         jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (B,))
     cl = jnp.repeat(cl, KV)                                  # (B*KV,)
+    if sel_starts is not None:
+        sel_starts = jnp.repeat(jnp.asarray(sel_starts, jnp.int32), KV,
+                                axis=0)
+        sel_keep = jnp.repeat(jnp.asarray(sel_keep, jnp.int32), KV, axis=0)
     o = flash_decode(qf, kf, vf, cl, scale=scale, window=window, tk=tk,
-                     softcap=softcap, interpret=interpret)
+                     softcap=softcap, interpret=interpret,
+                     sel_starts=sel_starts, sel_keep=sel_keep)
     return o.reshape(B, KV, G, D).reshape(B, 1, H, D)
 
 
@@ -231,7 +267,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, scale: float,
     "scale", "softcap", "interpret"))
 def paged_decode_attention(q, pool_k, pool_v, tables, page_starts, cache_len,
                            scale: float, softcap: float = 0.0,
-                           interpret: bool = INTERPRET):
+                           interpret: bool = INTERPRET, keep=None):
     """Single-token decode through the shared paged pool.
 
     q (B,1,H,D); pool_k/v (num_pages, PS, KV, D) — the SHARED slabs, not
@@ -255,9 +291,11 @@ def paged_decode_attention(q, pool_k, pool_v, tables, page_starts, cache_len,
     cl = jnp.broadcast_to(
         jnp.reshape(jnp.asarray(cache_len, jnp.int32), (-1,)), (B,))
     cl = jnp.repeat(cl, KV)                                  # (B*KV,)
+    if keep is not None:   # §10 selection over table slots, folded per head
+        keep = jnp.repeat(jnp.asarray(keep, jnp.int32), KV, axis=0)
     o = flash_decode(qf, kf, vf, cl, scale=scale, softcap=softcap,
                      interpret=interpret, block_tables=tbl,
-                     page_starts=starts)
+                     page_starts=starts, keep=keep)
     return o.reshape(B, KV, G, D).reshape(B, 1, H, D)
 
 

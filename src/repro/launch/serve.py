@@ -83,6 +83,11 @@ def main():
                          "physical copy per distinct block, slots gather "
                          "through block tables")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--topk", type=int, default=None,
+                    help="selective top-k block attention (DESIGN.md "
+                         "§10): attend only the k best-scoring prefix "
+                         "blocks per request (plus sink + final); "
+                         "None/omitted = attend everything")
     ap.add_argument("--stream", action="store_true",
                     help="print a line per streamed token")
     ap.add_argument("--seed", type=int, default=0)
@@ -160,6 +165,7 @@ def main():
                              paged=args.paged, page_size=args.page_size,
                              max_queue=args.max_queue,
                              shed_policy=args.shed_policy,
+                             select_topk=args.topk,
                              faults=faults)
         cb = (lambda ev: print(json.dumps({
             "rid": ev.rid, "token": int(ev.token), "index": ev.index,

@@ -215,6 +215,7 @@ def decode_step(
     enc_out: Optional[jax.Array] = None,
     unroll: bool = False,
     paged=None,
+    sel=None,
 ) -> Tuple[jax.Array, dict, dict]:
     """One serve step: tokens (B, T) -> (logits (B,T,V), caches, states).
 
@@ -225,6 +226,10 @@ def decode_step(
     ``paged``: a ``core.kv_cache.PagedView`` — then ``caches`` are the
     SHARED pool slabs (one physical copy per distinct block) and each row
     reads/writes through its own page table (DESIGN.md §8).
+
+    ``sel``: §10 top-k block selection operands — contiguous mode a
+    ``(sel_starts, sel_keep)`` pair, paged mode a (B, MP) keep array over
+    table slots; None = attend every resident block.
     """
     if cfg.arch_type == "audio":
         logits, cache = encdec.decode_step(
@@ -237,7 +242,7 @@ def decode_step(
                  + jnp.arange(Tq, dtype=jnp.int32)[None, :])
     positions = jnp.broadcast_to(positions, (B, Tq))
     ctx = T.AttnCtx(kind="decode", positions=positions, cache_len=cache_len,
-                    paged=paged)
+                    paged=paged, sel=sel)
     h = T.embed_tokens(params, cfg, tokens)
     h, aux, new_caches, new_states, _ = T.forward_hidden(
         params, cfg, h, ctx, caches=caches, states=states, unroll=unroll)

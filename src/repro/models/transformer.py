@@ -189,6 +189,12 @@ class AttnCtx:
                                               # per-row arange (static fact;
                                               # gates index-based kernels)
     fold_spec: Any = None                     # §Perf block-parallel sharding
+    sel: Any = None                           # §10 top-k block selection:
+                                              # decode contiguous -> a
+                                              # (sel_starts, sel_keep) pair;
+                                              # decode paged -> a (B, MP)
+                                              # keep array over table slots;
+                                              # None = selection off
 
 
 def _attn_sublayer(p, cfg: ModelConfig, spec: LayerSpec, h, ctx: AttnCtx,
@@ -221,11 +227,13 @@ def _attn_sublayer(p, cfg: ModelConfig, spec: LayerSpec, h, ctx: AttnCtx,
                                         ctx.paged, ctx.cache_len)
             o = A.paged_decode_attention(q, ck, cv, ctx.paged.tables,
                                          ctx.paged.page_starts,
-                                         ctx.cache_len, scale)
+                                         ctx.cache_len, scale,
+                                         keep=ctx.sel)
         else:
             ck, cv = cache_update(cache["k"], cache["v"], k, v, ctx.cache_len)
             o = A.decode_attention(q, ck, cv, ctx.cache_len, scale,
-                                   window=window or (chunk and _chunk_window(ctx, chunk)))
+                                   window=window or (chunk and _chunk_window(ctx, chunk)),
+                                   sel=ctx.sel)
         new_cache = {"k": ck, "v": cv}
     else:
         o = _prefill_attention(q, k, v, cfg, ctx, scale, window, chunk)

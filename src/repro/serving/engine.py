@@ -67,6 +67,7 @@ from repro.core.kv_cache import BlockKVStore, cache_write_prefix
 from repro.core.rope import apply_rope
 from repro.kernels import ops
 from repro.models import api, transformer as T
+from repro.nn import layers as L
 # single source of truth: the scheduler's bucket key and the engine's
 # padded shapes MUST round identically for bucket == compile-key to hold
 from repro.serving.scheduler import pow2_bucket
@@ -125,14 +126,17 @@ class BlockAttentionEngine:
             return collected
 
         @jax.jit
-        def _final_block_pass(params, tokens, caches, cache_len, last_idx):
+        def _final_block_pass(params, tokens, caches, cache_len, last_idx,
+                              sel=None):
             """Final (query) block through the model in cache-filling mode.
 
             ``cache_len``: (B,) per-row prefix lengths (row b's query tokens
             sit at positions cache_len[b] + t and are written there);
             ``last_idx``: (B,) index of each row's TRUE last query token —
             right-padded final blocks gather their first-token logits from
-            there, not from the padded tail.
+            there, not from the padded tail. ``sel``: §10 selection
+            operands (a (sel_starts, sel_keep) pair) or None — None keeps
+            this closure's compile key identical to the pre-selection one.
             """
             B, Tq = tokens.shape
             cache_len = jnp.broadcast_to(
@@ -140,7 +144,7 @@ class BlockAttentionEngine:
             positions = (cache_len[:, None]
                          + jnp.arange(Tq, dtype=jnp.int32)[None, :])
             ctx = T.AttnCtx(kind="decode", positions=positions,
-                            cache_len=cache_len)
+                            cache_len=cache_len, sel=sel)
             h = T.embed_tokens(params, cfg, tokens)
             h, _, new_caches, new_states, _ = T.forward_hidden(
                 params, cfg, h, ctx, caches=caches,
@@ -241,20 +245,21 @@ class BlockAttentionEngine:
 
         @jax.jit
         def _final_block_pass_paged(params, tokens, slabs, view, cache_len,
-                                    last_idx):
+                                    last_idx, keep=None):
             """Final (query) block through the model against the SHARED
             paged pool: per-row query tokens append into the row's private
             tail pages and attend its page table (prefix pages are shared
             physical KV). Same contract as ``_final_block_pass`` otherwise;
             width-padding rows carry all-sink tables and write/read only
-            the sink page."""
+            the sink page. ``keep``: §10 (B, MP) selection mask over table
+            slots, or None (attend every resident page)."""
             B, Tq = tokens.shape
             cache_len = jnp.broadcast_to(
                 jnp.asarray(cache_len, jnp.int32), (B,))
             positions = (cache_len[:, None]
                          + jnp.arange(Tq, dtype=jnp.int32)[None, :])
             ctx = T.AttnCtx(kind="decode", positions=positions,
-                            cache_len=cache_len, paged=view)
+                            cache_len=cache_len, paged=view, sel=keep)
             h = T.embed_tokens(params, cfg, tokens)
             h, _, new_slabs, _, _ = T.forward_hidden(
                 params, cfg, h, ctx, caches=slabs, states={})
@@ -268,7 +273,7 @@ class BlockAttentionEngine:
                                                      "top_k_active"))
         def _decode_scan(params, cur, caches, states, pos, active, remaining,
                          stop_toks, keys, temps, top_ks, steps, greedy,
-                         top_k_active=True, paged=None):
+                         top_k_active=True, paged=None, sel=None):
             """ONE lifecycle-aware decode segment as an on-device scan.
 
             This is THE decode loop for every path — the lifecycle server
@@ -301,6 +306,11 @@ class BlockAttentionEngine:
                 (``top_k_active`` statically skips the top-k threshold
                 sort when no active row filters).
 
+            ``sel``: §10 top-k block-selection operands threaded into
+            every step's attention (contiguous: (sel_starts, sel_keep);
+            paged: the (B, MP) keep array); None = attend everything,
+            compile key unchanged.
+
             Returns (toks (steps, B), emits (steps, B) bool, carry) where
             carry = (cur, pos, active, remaining, keys, caches, states) is
             fed verbatim into the next segment.
@@ -309,7 +319,7 @@ class BlockAttentionEngine:
                 cur, pos, active, remaining, keys, caches, states = carry
                 logits, caches, states = api.decode_step(
                     params, cfg, cur[:, None], caches, states, pos,
-                    paged=paged)
+                    paged=paged, sel=sel)
                 lg = logits[:, -1]
                 if greedy:
                     nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
@@ -348,6 +358,38 @@ class BlockAttentionEngine:
                     for c in ("k", "v")}
             return out
 
+        @jax.jit
+        def _pooled_query(params, tokens, n):
+            """Mean-pooled query projection of the final block's tokens —
+            the §10 selection score's query-side feature.
+
+            Runs the (right-padded) final block through embed -> first-
+            attention-layer rmsnorm -> wq only (group-0 weights of the
+            first attention position; zamba2-style archs fall back to the
+            shared attn weights), then pools the ``n`` valid tokens over
+            tokens and heads -> (Dh,) f32. The compile key is the pow2
+            padded width, not the exact final length. Deliberately
+            un-rotated, matching the store's un-rotated ``pooled_key``
+            feature — a cheap documented heuristic proxy for final-block
+            attention mass, not the exact score.
+            """
+            ap = None
+            for pos_key in T.num_attn_positions(cfg):
+                g = params["groups"].get(pos_key, {})
+                if "attn" in g:
+                    ap = jax.tree.map(lambda a: a[0], g["attn"])
+                    break
+            if ap is None:
+                ap = params["shared_attn"]["attn"]
+            h = T.embed_tokens(params, cfg, tokens[None, :])
+            x = L.rmsnorm(ap["ln"], h, cfg.norm_eps)
+            q = L.linear(ap["wq"], x).astype(jnp.float32)
+            q = q.reshape(tokens.shape[0], cfg.num_heads, cfg.head_dim)
+            valid = (jnp.arange(tokens.shape[0]) < n)[:, None, None]
+            q = jnp.where(valid, q, 0.0)
+            denom = jnp.maximum(n * cfg.num_heads, 1).astype(jnp.float32)
+            return q.sum(axis=(0, 1)) / denom
+
         self._encode_block = _encode_block
         self._final_block_pass = _final_block_pass
         self._final_block_pass_paged = _final_block_pass_paged
@@ -356,6 +398,7 @@ class BlockAttentionEngine:
         self._write_pool_pages = _write_pool_pages
         self._decode_scan = _decode_scan
         self._scatter_rows = _scatter_rows
+        self._pooled_query = _pooled_query
         self._sample = jax.jit(api.sample_tokens,
                                static_argnames=("use_top_k",))
         # set by a paged BlockServer: callable (pages, num_tokens) -> kv
@@ -374,6 +417,16 @@ class BlockAttentionEngine:
         _, states = T.init_decode_caches(self.cfg, batch, self.max_seq,
                                          self.dtype)
         return states
+
+    def pooled_query(self, final_tokens: np.ndarray) -> np.ndarray:
+        """§10 selection scorer, query side: (Dh,) float32 for one
+        request's final block (pow2-padded so traffic shares compiles)."""
+        n = int(len(final_tokens))
+        pad = pow2_bucket(max(n, 1))
+        toks = np.zeros((pad,), np.int32)
+        toks[:n] = np.asarray(final_tokens, np.int32)
+        return np.asarray(self._pooled_query(
+            self.params, jnp.asarray(toks), jnp.asarray(n, jnp.int32)))
 
     # ------------------------------------------------------------------
     # Block path (attention archs)

@@ -70,10 +70,18 @@ class SamplingParams:
     top_k <= 0 -> full vocabulary; ``seed`` pins the request's private
     PRNG key — the sample stream never depends on slot placement or batch
     neighbours.
+
+    ``select_topk`` (DESIGN.md §10): per-request override of the server's
+    block-selection budget — attend only the k highest-scoring prefix
+    blocks (plus the final block, and the first block when the server
+    keeps sinks). None = inherit the server default; a value >= the
+    request's block count disables selection for it (token-for-token the
+    unselected path).
     """
     temperature: float = 0.0
     top_k: int = 0
     seed: int = 0
+    select_topk: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +179,43 @@ class BlockServer:
                         arrivals instead of paying a width-1 prefill
                         under light load. Never delays when slots idle.
 
+    Selective top-k block attention (DESIGN.md §10):
+
+    ``select_topk``     default per-request block budget: score each
+                        prefix block (pooled stored key · pooled final-
+                        block query) at admission and attend only the k
+                        best — the final block always, the first (sink)
+                        block too under ``select_keep_first``. Unselected
+                        blocks are skipped inside the decode/final-pass
+                        kernels (masked tiles never load or matmul) and
+                        skip Eq.-3 re-rotation at assembly. None = attend
+                        everything (bitwise the pre-selection paths —
+                        selection operands are not even passed). A
+                        request whose ``SamplingParams.select_topk``
+                        overrides flips selection on for the server's
+                        remaining lifetime (neutral keep-all operands for
+                        non-selective neighbours, numerically identical).
+    ``select_keep_first`` True = slot 0 of the budget is pinned to the
+                        first prefix block (attention-sink heuristic).
+
+    ``adaptive_segment`` True = shrink ``decode_segment`` (halving, floor
+                        ``min_decode_segment``) while retirement density
+                        is high — retired rows idle fewer masked steps —
+                        and grow it back (doubling, cap ``decode_segment``)
+                        after two calm segments. The segment lengths this
+                        generates are the fixed set decode_segment / 2^i,
+                        so the compile-key set stays bounded.
+    ``min_decode_segment`` adaptive floor (>= 1).
+
+    ``defer_verify``    True = cadence checksum verification moves OFF the
+                        ``lookup`` hot path: lookups only queue the
+                        cadence candidates and ``step()`` drains the
+                        queue in the admission/idle gap
+                        (``verify_pending``), with identical corrupt ->
+                        drop -> re-encode semantics and the same
+                        ``integrity_failures`` accounting. Injected
+                        corruption (chaos suite) still verifies inline.
+
     Failure semantics (DESIGN.md §9):
 
     ``max_queue``       bound on the admission queue. A ``submit`` past it
@@ -201,6 +246,11 @@ class BlockServer:
                  max_queue: Optional[int] = None,
                  shed_policy: str = "reject",
                  pool_verify_every: int = 0,
+                 select_topk: Optional[int] = None,
+                 select_keep_first: bool = True,
+                 adaptive_segment: bool = False,
+                 min_decode_segment: int = 1,
+                 defer_verify: bool = False,
                  faults=None):
         assert not engine._is_recurrent, \
             "BlockServer needs KV-cache attention archs (recurrent archs " \
@@ -223,6 +273,29 @@ class BlockServer:
         self.faults = faults
         if faults is not None:
             engine.store.faults = faults
+        # §10 selective top-k block attention
+        assert select_topk is None or select_topk >= 1, select_topk
+        self.select_topk = select_topk
+        self.select_keep_first = bool(select_keep_first)
+        # latch: once ANY request runs selective, every decode segment
+        # carries selection operands (neutral keep-all rows for the rest)
+        self._sel_enabled = select_topk is not None
+        self.selection_requests = 0
+        self.selected_blocks = 0
+        self.candidate_blocks = 0
+        # adaptive decode-segment control
+        assert min_decode_segment >= 1
+        self.adaptive_segment = bool(adaptive_segment)
+        self.min_decode_segment = min(int(min_decode_segment),
+                                      decode_segment)
+        self._cur_segment = decode_segment
+        self._calm_segments = 0
+        self.segment_shrinks = 0
+        self.segment_regrows = 0
+        # deferred cadence verification (DESIGN.md §9 hot-path offload)
+        self.defer_verify = bool(defer_verify)
+        engine.store.defer_verify = self.defer_verify
+        self.deferred_verify_drops = 0
         # overload / integrity counters (DESIGN.md §9)
         self.shed = 0
         self.deadline_expired = 0
@@ -253,6 +326,7 @@ class BlockServer:
             self.pool = KV.PagedKVPool(slabs, pool_pages, ps,
                                        verify_every=pool_verify_every)
             self.pool.reader = self._read_pages
+            self.pool.defer_verify = self.defer_verify
             if faults is not None:
                 self.pool.faults = faults
             engine.store.on_evict = self._on_store_evict
@@ -269,9 +343,19 @@ class BlockServer:
             self._slot_groups: List[List[Tuple[str, int]]] = \
                 [[] for _ in range(B)]
             self._slot_tail: List[List[int]] = [[] for _ in range(B)]
+            # §10 per-slot selection mask over table slots (1 = attend);
+            # all-ones = neutral keep-all
+            self._sel_pages = np.ones((B, MP), np.int32)
         else:
             self.pool = None
             self._caches = engine._fresh_caches(B)  # THE pool: allocated once
+            # §10 per-slot selection operands at the static pow2 block-
+            # count width ``_NBS`` (grown on demand): cumulative prefix-
+            # block boundaries + 0/1 keep flags; ALL-ZERO rows mean
+            # keep-all (the kernels' neutral encoding)
+            self._NBS = 8
+            self._sel_starts = np.zeros((B, self._NBS + 1), np.int32)
+            self._sel_keep = np.zeros((B, self._NBS), np.int32)
         self._states: dict = {}
         # per-slot lifecycle vectors (host mirrors of the scan carry)
         self._rids: List[Optional[int]] = [None] * B
@@ -283,6 +367,9 @@ class BlockServer:
         self._top_ks = np.zeros(B, np.int32)
         self._keys = np.zeros((B, 2), np.uint32)
         self._stops = np.full((B, max_stop_tokens), -1, np.int32)
+        # absolute perf_counter deadline per ACTIVE slot (inf = none):
+        # swept at segment boundaries so decode respects deadlines too
+        self._deadlines = np.full(B, np.inf)
         self._live: Dict[int, _Live] = {}
 
         self._split = jax.jit(api.split_row_keys)
@@ -312,7 +399,9 @@ class BlockServer:
 
         ``deadline_s`` (relative, seconds): a request still QUEUED past
         its deadline retires with finish_reason "deadline" instead of
-        taking a slot (once admitted it runs to completion).
+        taking a slot; an ADMITTED request past it retires at the next
+        segment boundary with the tokens generated so far (same
+        finish_reason, same ``deadline_expired`` counter).
 
         Under a full ``max_queue`` returns ``Rejected`` (shed_policy
         "reject" — nothing was enqueued) or sheds the youngest queued
@@ -371,6 +460,8 @@ class BlockServer:
                 self._rids[s] = None
                 self._active[s] = False
                 self._remaining[s] = 0
+                self._deadlines[s] = np.inf
+                self._clear_sel(s)
                 if self.paged:
                     self._release_slot(s)
                 self.cancelled += 1
@@ -397,10 +488,40 @@ class BlockServer:
         set). Completion order is deterministic: retirements (shed /
         deadline / cancelled) first, then admission completions in slot
         order, then segment retirements in slot order."""
+        if self.defer_verify:
+            # the admission/idle gap: drain the deferred cadence-
+            # verification queue off the lookup hot path (DESIGN.md §9)
+            dropped = self.engine.store.verify_pending()
+            if self.paged:
+                dropped += self.pool.verify_pending()
+            self.deferred_verify_drops += dropped
         done, self._retired = self._retired, []
+        done.extend(self._sweep_deadlines(time.perf_counter()))
         done.extend(self._admit())
         if self._active.any():
             done.extend(self._run_segment())
+        return done
+
+    def _sweep_deadlines(self, now: float) -> List[Completion]:
+        """Retire ACTIVE slots whose absolute deadline has passed — the
+        during-decode half of the deadline contract. Runs at segment
+        boundaries (never mid-scan), mirrors the in-flight cancel path:
+        the slot frees immediately and the Completion keeps the tokens
+        generated so far with finish_reason "deadline"."""
+        done: List[Completion] = []
+        for s in range(self.num_slots):
+            rid = self._rids[s]
+            if rid is None or now < self._deadlines[s]:
+                continue
+            self._rids[s] = None
+            self._active[s] = False
+            self._remaining[s] = 0
+            self._deadlines[s] = np.inf
+            self._clear_sel(s)
+            if self.paged:
+                self._release_slot(s)
+            self.deadline_expired += 1
+            done.append(self._complete(rid, "deadline", now))
         return done
 
     @property
@@ -508,17 +629,32 @@ class BlockServer:
         W = self.num_slots if pool_direct \
             else min(pow2_bucket(n), self.num_slots)
 
+        # §10 selection pre-pass (scores may encode store misses; their
+        # tokens land in ``computed`` and the fetch below then hits)
+        sel_keeps, sel_computed = self._select_group(reqs)
+
         kv_rows, computed = [], []
-        for r in reqs:
+        for j, r in enumerate(reqs):
             kv, c = eng._fetch_blocks(r.blocks[:-1])
             kv_rows.append(kv)
-            computed.append(c)
+            computed.append(c + sel_computed[j])
         # width padding duplicates row 0 WITHOUT extra store traffic
         rows_blocks = [r.blocks for r in reqs] + [reqs[0].blocks] * (W - n)
         kv_rows += [kv_rows[0]] * (W - n)
+        keeps_w = sel_keeps + [sel_keeps[0]] * (W - n)
 
+        # deselected blocks keep their zero-based (un-rotated) KV at
+        # assembly — ``layout.selected`` zeroes their Eq.-3 deltas (the
+        # LazyAttention-style deferral: they are never attended, so the
+        # rotation is never owed)
+        selected = None
+        if any(kp is not None for kp in keeps_w):
+            selected = [
+                [1] * len(blocks) if kp is None
+                else [int(f) for f in kp] + [1]
+                for blocks, kp in zip(rows_blocks, keeps_w)]
         lay = from_row_lens([[len(b) for b in blocks]
-                             for blocks in rows_blocks])
+                             for blocks in rows_blocks], selected=selected)
         P = np.asarray(lay.prefix_lens, np.int32)
         F = np.asarray(lay.final_lens, np.int32)
         total = np.asarray(lay.total_lens, np.int32)
@@ -543,9 +679,18 @@ class BlockServer:
         finals = np.zeros((W, F_pad), np.int32)
         for j, blocks in enumerate(rows_blocks):
             finals[j, :F[j]] = blocks[-1]
+        sel = None
+        if self._sel_enabled:
+            self._grow_nbs(max(len(blocks) - 1 for blocks in rows_blocks))
+            ssW = np.zeros((W, self._NBS + 1), np.int32)
+            skW = np.zeros((W, self._NBS), np.int32)
+            for j, (blocks, kp) in enumerate(zip(rows_blocks, keeps_w)):
+                self._sel_row_contiguous([len(b) for b in blocks[:-1]],
+                                         kp, ssW[j], skW[j])
+            sel = (jnp.asarray(ssW), jnp.asarray(skW))
         logits, caches, _ = eng._final_block_pass(
             eng.params, jnp.asarray(finals), caches,
-            jnp.asarray(P), jnp.asarray(F - 1))
+            jnp.asarray(P), jnp.asarray(F - 1), sel=sel)
 
         firsts, temps, top_ks, keys = self._first_tokens(reqs, W, logits)
 
@@ -588,6 +733,11 @@ class BlockServer:
             self._keys[s] = keys[j]
             self._stops[s] = -1
             self._stops[s, :len(r.stop_tokens)] = r.stop_tokens
+            self._deadlines[s] = (r.deadline_s if r.deadline_s is not None
+                                  else np.inf)
+            if self._sel_enabled:
+                self._sel_starts[s] = ssW[j]
+                self._sel_keep[s] = skW[j]
         return done
 
     def _first_tokens(self, reqs: List[Request], W: int, logits):
@@ -614,6 +764,128 @@ class BlockServer:
         else:
             firsts = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         return firsts, temps, top_ks, keys
+
+    # ------------------------------------------------------------------
+    # Selective top-k block attention — DESIGN.md §10
+    # ------------------------------------------------------------------
+    def _clear_sel(self, s: int):
+        """Reset slot ``s`` to the neutral keep-all selection row."""
+        if self.paged:
+            self._sel_pages[s] = 1
+        else:
+            self._sel_starts[s] = 0
+            self._sel_keep[s] = 0
+
+    def _grow_nbs(self, nb: int):
+        """Grow the contiguous selection operands' static prefix-block
+        width (pow2-bucketed so traffic shares decode compiles). Existing
+        selective rows extend by repeating their tail boundary; all-zero
+        neutral rows stay all-zero."""
+        nbs = pow2_bucket(max(nb, 1))
+        if nbs <= self._NBS:
+            return
+        B = self.num_slots
+        ss = np.zeros((B, nbs + 1), np.int32)
+        sk = np.zeros((B, nbs), np.int32)
+        ss[:, :self._NBS + 1] = self._sel_starts
+        ss[:, self._NBS + 1:] = self._sel_starts[:, -1:]
+        sk[:, :self._NBS] = self._sel_keep
+        self._NBS, self._sel_starts, self._sel_keep = nbs, ss, sk
+
+    def _sel_row_contiguous(self, lens: Sequence[int],
+                            keep: Optional[np.ndarray],
+                            ss_row: np.ndarray, sk_row: np.ndarray):
+        """Fill one row of (sel_starts, sel_keep) at static width
+        ``_NBS`` from the row's prefix-block lengths + keep mask.
+        ``keep`` None -> the all-zero neutral row (keep-all)."""
+        ss_row[:] = 0
+        sk_row[:] = 0
+        if keep is None:
+            return
+        nb = len(lens)
+        bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+        ss_row[:nb + 1] = bounds
+        ss_row[nb + 1:] = bounds[nb]          # pad slots: empty ranges
+        sk_row[:nb] = keep.astype(np.int32)
+
+    def _select_blocks(self, req: Request
+                       ) -> Tuple[Optional[np.ndarray], int]:
+        """Score and pick the request's attended prefix blocks.
+
+        Returns (keep, computed): ``keep`` is a (nb,) bool mask over the
+        prefix blocks, or None when selection does not apply (no budget,
+        k >= nb, or fewer than two prefix blocks — then NO selection
+        operands differ from the unselected path and output is bitwise
+        identical); ``computed`` counts prefix tokens freshly encoded by
+        this scoring pre-pass (a scored block's pooled key needs its KV,
+        so a store miss encodes here and the admission fetch then hits —
+        the tokens are charged exactly once).
+
+        Score = pooled stored key · pooled final-block query (both
+        un-rotated; a cheap documented heuristic for final-block
+        attention mass). Deterministic: stable sort, ties break toward
+        the earlier block. The final block is always attended (it is not
+        part of this mask); ``select_keep_first`` pins the first prefix
+        block (attention-sink heuristic)."""
+        k = self.select_topk
+        sp = req.sampling
+        if sp is not None and sp.select_topk is not None:
+            k = sp.select_topk
+            self._sel_enabled = True   # latch: operands flow from now on
+        nb = len(req.blocks) - 1
+        if k is None or nb <= 1 or k >= nb:
+            return None, 0
+        eng = self.engine
+        q = eng.pooled_query(req.blocks[-1])
+        computed = 0
+        scores = np.full(nb, -np.inf)
+        for b, blk in enumerate(req.blocks[:-1]):
+            if len(blk) == 0:
+                continue               # pad block: never selected
+            ent = eng.store.peek(blk)
+            pooled = ent.pooled if ent is not None else None
+            if pooled is None:
+                kv, hit = eng._get_block_kv(blk)
+                if not hit:
+                    computed += len(blk)
+                pooled = KV.pooled_key(kv)
+                ent = eng.store.peek(blk)
+                if ent is not None:
+                    ent.pooled = pooled   # warm blocks score for free
+            scores[b] = float(pooled @ q)
+        keep = np.zeros(nb, bool)
+        budget = int(k)
+        order = np.argsort(-scores, kind="stable")
+        if self.select_keep_first and len(req.blocks[0]):
+            keep[0] = True
+            budget -= 1
+        for b in order:
+            if budget <= 0:
+                break
+            if keep[b] or not np.isfinite(scores[b]):
+                continue
+            keep[b] = True
+            budget -= 1
+        self.selection_requests += 1
+        self.selected_blocks += int(keep.sum())
+        self.candidate_blocks += nb
+        return keep, computed
+
+    def _select_group(self, reqs: List[Request]
+                      ) -> Tuple[List[Optional[np.ndarray]], List[int]]:
+        """Selection pre-pass for one admission group: per-request keep
+        masks + freshly-encoded token counts (all None / zeros while
+        selection is off). A per-request ``SamplingParams.select_topk``
+        override reaches ``_select_blocks`` even on an otherwise
+        non-selective server — that call flips the ``_sel_enabled``
+        latch."""
+        if not self._sel_enabled and not any(
+                r.sampling is not None and r.sampling.select_topk is not None
+                for r in reqs):
+            sel = [(None, 0) for _ in reqs]
+        else:
+            sel = [self._select_blocks(r) for r in reqs]
+        return [kp for kp, _ in sel], [c for _, c in sel]
 
     # ------------------------------------------------------------------
     # Paged (shared-block pool) admission — DESIGN.md §8
@@ -747,15 +1019,20 @@ class BlockServer:
                 (int(total[j]), r.max_new_tokens, eng.max_seq)
 
         # ---- PLAN ----------------------------------------------------
+        # §10 selection pre-pass (may encode store misses — their tokens
+        # are charged here; the plan's store lookups below then hit)
+        sel_keeps, sel_computed = self._select_group(reqs)
+
         acquired: List[Tuple[str, int]] = []   # to undo on failure
         pinned: List[np.ndarray] = []
         new_keys: List[Tuple[str, int]] = []   # insertion-ordered
         new_info: Dict[Tuple[str, int], dict] = {}
         fresh_kv: Dict[str, object] = {}       # encoded THIS admission
-        row_plan: List[List[Tuple[Tuple[str, int], int]]] = []
+        # per row: (group key, token count, §10 keep flag) per block
+        row_plan: List[List[Tuple[Tuple[str, int], int, bool]]] = []
         row_gids: List[List[int]] = []         # block-graph instance ids
         inst_ids: Dict[Tuple[str, int], int] = {}
-        computed = [0] * n
+        computed = list(sel_computed)
 
         def unwind():
             for k in acquired:
@@ -765,17 +1042,23 @@ class BlockServer:
 
         for j, r in enumerate(reqs):
             off = 0
-            plan: List[Tuple[Tuple[str, int], int]] = []
+            plan: List[Tuple[Tuple[str, int], int, bool]] = []
             gids: List[int] = []
-            for blk in r.blocks[:-1]:
+            for bi, blk in enumerate(r.blocks[:-1]):
                 L = len(blk)
                 if L == 0:
                     continue
-                delta = off if eng.reencode else 0
+                keep_b = sel_keeps[j] is None or bool(sel_keeps[j][bi])
+                # §10 deselected blocks skip the Eq.-3 re-rotation: they
+                # resolve to the canonical delta-0 (zero-based) group —
+                # shared with the store handoff and every other
+                # deselected sharer — instead of minting a rotated
+                # per-offset instance that would never be attended
+                delta = off if (eng.reencode and keep_b) else 0
                 off += L
                 bkey = KV.block_key(blk, eng.store.model_tag)
                 gkey = (bkey, delta)
-                plan.append((gkey, L))
+                plan.append((gkey, L, keep_b))
                 gids.append(inst_ids.setdefault(gkey, len(inst_ids)))
                 if gkey in new_info:
                     continue
@@ -810,7 +1093,7 @@ class BlockServer:
             gids.append(len(inst_ids) + j)
             row_plan.append(plan)
             row_gids.append(gids)
-            prefix_pages = sum(pool.pages_for(L) for _, L in plan)
+            prefix_pages = sum(pool.pages_for(L) for _, L, _ in plan)
             tail_cap = max(F_pad, int(F[j]) + r.max_new_tokens)
             if prefix_pages + max(1, pool.pages_for(tail_cap)) > MP:
                 unwind()
@@ -852,7 +1135,7 @@ class BlockServer:
                 eng.store.link_pages(info["tokens"], pages)
         # per-row references (hit groups were acquired at plan time)
         for plan in row_plan:
-            for gkey, _ in plan:
+            for gkey, _, _ in plan:
                 if gkey in new_info:
                     pool.acquire(gkey)
         for pages in tail_rows:
@@ -883,13 +1166,18 @@ class BlockServer:
         pstarts = np.zeros((W, MP + 1), np.int32)
         tail_base = np.zeros(W, np.int32)
         tail_page0 = np.zeros(W, np.int32)
+        # §10 per-table-slot keep mask; all-ones = neutral keep-all
+        # (tail / dead / width-padding columns stay 1 — occupancy and
+        # the table already gate them)
+        keep_pages = np.ones((W, MP), np.int32)
         for j in range(n):
             col, pos = 0, 0
-            for gkey, L in row_plan[j]:
+            for gkey, L, keep_b in row_plan[j]:
                 g = pool._groups[gkey]
                 for i, pg in enumerate(g.pages):
                     tables[j, col] = pg
                     pstarts[j, col] = pos + i * ps
+                    keep_pages[j, col] = int(keep_b)
                     col += 1
                 pos += L
             tail_base[j] = pos
@@ -915,7 +1203,8 @@ class BlockServer:
             cache_len[j] = P[j]
         logits, pool.slabs = eng._final_block_pass_paged(
             eng.params, jnp.asarray(finals), pool.slabs, view,
-            jnp.asarray(cache_len), jnp.asarray(last_idx))
+            jnp.asarray(cache_len), jnp.asarray(last_idx),
+            keep=jnp.asarray(keep_pages) if self._sel_enabled else None)
 
         firsts, temps, top_ks, keys = self._first_tokens(reqs, W, logits)
         self.prefill_wall_s += time.perf_counter() - t0
@@ -938,7 +1227,7 @@ class BlockServer:
             self._emit(r, first, 0, finished, reason if finished else None)
             if finished:
                 # never held a slot: drop its pool resources right here
-                for gkey, _ in row_plan[j]:
+                for gkey, _, _ in row_plan[j]:
                     pool.release(gkey)
                 pool.free(tail_rows[j])
                 done.append(self._complete(r.rid, reason, now))
@@ -957,8 +1246,11 @@ class BlockServer:
             self._pstarts[s] = pstarts[j]
             self._tail_base[s] = tail_base[j]
             self._tail_page0[s] = tail_page0[j]
-            self._slot_groups[s] = [gkey for gkey, _ in row_plan[j]]
+            self._slot_groups[s] = [gkey for gkey, _, _ in row_plan[j]]
             self._slot_tail[s] = list(tail_rows[j])
+            self._sel_pages[s] = keep_pages[j]
+            self._deadlines[s] = (r.deadline_s if r.deadline_s is not None
+                                  else np.inf)
         return done
 
     def _serve_group_blocking(self, reqs: List[Request]) -> List[Completion]:
@@ -1075,14 +1367,23 @@ class BlockServer:
         else:
             view = None
             caches = self._caches
+        # §10: once selection is latched on, every segment carries the
+        # slot-pool selection operands (neutral rows = keep-all); off,
+        # the compile key is byte-identical to the pre-selection one
+        sel = None
+        if self._sel_enabled:
+            sel = (jnp.asarray(self._sel_pages) if self.paged
+                   else (jnp.asarray(self._sel_starts),
+                         jnp.asarray(self._sel_keep)))
+        seg = self._cur_segment
         toks, emits, carry = eng._decode_scan(
             eng.params, jnp.asarray(self._cur), caches, self._states,
             jnp.asarray(self._pos), jnp.asarray(self._active),
             jnp.asarray(self._remaining), jnp.asarray(self._stops),
             jnp.asarray(self._keys), jnp.asarray(self._temps),
             jnp.asarray(self._top_ks),
-            steps=self.decode_segment, greedy=greedy,
-            top_k_active=top_k_active, paged=view)
+            steps=seg, greedy=greedy,
+            top_k_active=top_k_active, paged=view, sel=sel)
         cur, pos, active, remaining, keys, caches, self._states = carry
         if self.paged:
             self.pool.slabs = caches
@@ -1100,7 +1401,7 @@ class BlockServer:
         now = time.perf_counter()
         self.decode_wall_s += now - t0
         self.segments += 1
-        self.slot_steps += self.decode_segment * self.num_slots
+        self.slot_steps += seg * self.num_slots
         self.active_steps += int(emits.sum())
 
         done: List[Completion] = []
@@ -1121,9 +1422,34 @@ class BlockServer:
                            reason if last else None)
             if finished:
                 self._rids[s] = None
+                self._deadlines[s] = np.inf
+                self._clear_sel(s)
                 if self.paged:
                     self._release_slot(s)
                 done.append(self._complete(rid, reason, now))
+
+        if self.adaptive_segment:
+            # retirement-density controller: dense retirements mean rows
+            # idled masked steps inside this segment -> halve toward the
+            # floor so slots refill sooner; two calm segments grow back
+            # toward ``decode_segment``. Lengths stay within the fixed
+            # decode_segment / 2^i set, so the compile-key set is bounded.
+            density = len(done) / max(1, int(was_active.sum()))
+            if density > 0.25 and self._cur_segment > self.min_decode_segment:
+                self._cur_segment = max(self.min_decode_segment,
+                                        self._cur_segment // 2)
+                self.segment_shrinks += 1
+                self._calm_segments = 0
+            elif not done:
+                self._calm_segments += 1
+                if (self._calm_segments >= 2
+                        and self._cur_segment < self.decode_segment):
+                    self._cur_segment = min(self.decode_segment,
+                                            self._cur_segment * 2)
+                    self.segment_regrows += 1
+                    self._calm_segments = 0
+            else:
+                self._calm_segments = 0
         return done
 
     # ------------------------------------------------------------------
@@ -1181,6 +1507,19 @@ class BlockServer:
             + (self.pool.integrity_failures if self.paged else 0),
             "unpin_underflow": self.engine.store.unpin_underflow,
         }
+        if self.adaptive_segment:
+            out["decode_segment_current"] = self._cur_segment
+            out["segment_shrinks"] = self.segment_shrinks
+            out["segment_regrows"] = self.segment_regrows
+        if self.defer_verify:
+            out["deferred_verify_drops"] = self.deferred_verify_drops
+        if self._sel_enabled:
+            out["selection"] = {
+                "select_topk": self.select_topk,
+                "requests": self.selection_requests,
+                "selected_blocks": self.selected_blocks,
+                "candidate_blocks": self.candidate_blocks,
+            }
         if self.paged:
             out["pool"] = self.pool.stats()
             out["pool_fallbacks"] = self.pool_fallbacks

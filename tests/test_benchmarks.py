@@ -272,6 +272,62 @@ def test_train_step_committed_baseline_schema():
 
 
 @pytest.mark.bench
+def test_selective_json_contract(tmp_path):
+    """selective.run writes the BENCH_selective.json schema future PRs
+    compare on — kernel tile-skip ratio, Zipf-hot serving with/without
+    selection (full-k parity asserted INSIDE run) and the accuracy
+    delta. Smoke-sized: no training stage, one repeat."""
+    from benchmarks import selective
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=256, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_selective.json"
+    lines = []
+    res = selective.run(kernel_pages=8, kernel_keep=2, kernel_page_size=64,
+                        n_requests=6, pool_size=4, plen=16, slots=2,
+                        decode_segment=2, page_size=8, serve_topk=1,
+                        query_lens=(8, 12), new_tokens=(2, 4),
+                        train_steps=0, num_samples=8, repeats=1,
+                        emit=lines.append, json_path=str(path), cfg=micro)
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "selective"
+    r = payload["results"]
+    assert r["kernel"]["flop_reduction"] == 8 / 2
+    assert r["serving"]["bitwise_parity_at_full_k"] is True
+    assert r["serving"]["selection"]["requests"] > 0
+    assert {"baseline", "topk", "delta", "token_agreement"} \
+        <= set(r["accuracy"])
+    assert res["kernel"]["us_keep_k"] > 0
+    assert any(line.startswith("selective_kernel,") for line in lines)
+
+
+def test_selective_committed_baseline_schema():
+    """The committed BENCH_selective.json satisfies the acceptance bar:
+    >= 1.5x decode-step reduction at k = nb/4 — as kernel wall speedup
+    or (on the CPU-interpret protocol, where the interpreter copies
+    every tile regardless of the pl.when skip) the exact live/attended
+    FLOP ratio — with full-k bitwise parity and the accuracy-recovery
+    delta reported."""
+    payload = json.loads(
+        open(os.path.join(REPO, "BENCH_selective.json")).read())
+    assert payload["benchmark"] == "selective"
+    r = payload["results"]
+    kern = r["kernel"]
+    assert kern["keep_k"] * 4 == kern["pages_per_row"]     # k = nb/4
+    assert kern["speedup"] >= 1.5 or kern["flop_reduction"] >= 1.5
+    assert kern["flop_reduction"] == 4.0
+    assert kern["us_keep_k"] <= kern["us_keep_all"]        # never slower
+    assert r["serving"]["bitwise_parity_at_full_k"] is True
+    assert r["serving"]["select_topk"] * 4 == r["serving"]["pool_size"]
+    sel = r["serving"]["selection"]
+    assert 0 < sel["selected_blocks"] < sel["candidate_blocks"]
+    acc = r["accuracy"]
+    assert {"baseline", "topk", "delta", "token_agreement"} <= set(acc)
+    assert acc["delta"] == round(acc["topk"] - acc["baseline"], 4)
+
+
+@pytest.mark.bench
 def test_run_smoke_mode():
     """`benchmarks/run.py --smoke` exercises every section end to end."""
     env = dict(os.environ)
@@ -288,4 +344,6 @@ def test_run_smoke_mode():
     assert "serving_shared_paged," in out.stdout
     assert "serving_continuous," in out.stdout
     assert "serving_chaos_r0.2," in out.stdout
+    assert "selective_kernel," in out.stdout
+    assert "selective_serving_topk," in out.stdout
     assert "train_step_struct_168," in out.stdout

@@ -230,3 +230,69 @@ def test_integrity_drop_releases_pool_ref_via_on_evict():
     assert store.lookup(t) is None
     assert store.integrity_failures == 1
     assert released == [(block_key(t), (3, 4))]
+
+
+# ---------------------------------------------------------------------------
+# Deferred cadence verification (DESIGN.md §10 satellite)
+# ---------------------------------------------------------------------------
+def test_defer_verify_queues_off_hot_path_then_drains():
+    """defer_verify=True: a cadence hit QUEUES the key instead of
+    re-checksumming inline (the lookup hot path pays nothing); the
+    server-driven ``verify_pending`` drain drops corrupt entries with
+    identical semantics — integrity_failures bumped, next lookup misses
+    and re-encodes."""
+    store = BlockKVStore(verify_every=1)
+    store.defer_verify = True
+    t = np.arange(8, dtype=np.int32)
+    store.insert(t, _kv())
+    ent = store._entries[block_key(t)]
+    ent.kv = {"k": ent.kv["k"] + 1.0, "v": ent.kv["v"]}   # corrupt
+    # deferred: the corrupt entry is still SERVED (hot path untouched)...
+    assert store.lookup(t) is ent
+    assert store.integrity_failures == 0
+    assert store._pending_verify == [block_key(t)]
+    # ...until the idle-gap drain catches it (inline-drop semantics)
+    assert store.verify_pending() == 1
+    assert store.integrity_failures == 1
+    assert store.lookup(t) is None            # entry really gone
+    refreshed = store.insert(t, _kv())        # re-encode path refreshes
+    store.defer_verify = False
+    assert store.lookup(t) is refreshed
+
+
+def test_defer_verify_drain_skips_intact_and_pinned():
+    """The drain only drops corrupt droppable entries: intact ones stay,
+    pinned (in-flight) ones are skipped exactly like the inline check."""
+    store = BlockKVStore(verify_every=1)
+    store.defer_verify = True
+    a = np.arange(8, dtype=np.int32)
+    b = np.arange(8, 16, dtype=np.int32)
+    store.insert(a, _kv())
+    store.insert(b, _kv())
+    store.lookup(a)
+    store.lookup(b)
+    assert len(store._pending_verify) == 2
+    ent_b = store._entries[block_key(b)]
+    ent_b.kv = {"k": ent_b.kv["k"] + 1.0, "v": ent_b.kv["v"]}
+    store.pin(b)                              # in-flight: not droppable
+    assert store.verify_pending() == 0
+    assert store.integrity_failures == 0
+    store.unpin(b)
+    store.lookup(b)                           # re-queued on next cadence
+    assert store.verify_pending() == 1        # intact `a` survives
+    assert store.integrity_failures == 1
+    assert store.lookup(a) is not None
+
+
+def test_defer_verify_default_off_keeps_inline_contract():
+    """defer_verify defaults False: the inline-drop cadence contract
+    (test_corrupted_entry_dropped_on_cadence_verify) is unchanged."""
+    store = BlockKVStore(verify_every=1)
+    assert store.defer_verify is False
+    t = np.arange(8, dtype=np.int32)
+    store.insert(t, _kv())
+    ent = store._entries[block_key(t)]
+    ent.kv = {"k": ent.kv["k"] + 1.0, "v": ent.kv["v"]}
+    assert store.lookup(t) is None            # inline drop, no queue
+    assert store._pending_verify == []
+    assert store.integrity_failures == 1

@@ -1,0 +1,332 @@
+"""Selective top-k block attention (DESIGN.md §10).
+
+Three layers under test:
+
+  * kernels — the selection operands (contiguous ``sel_starts``/
+    ``sel_keep``, paged ``keep``, ragged-prefill ``layout.selected``)
+    match their jnp twins numerically, and every neutral encoding
+    (operands absent, all-zeros contiguous rows, all-ones paged keep,
+    k >= nb) is BITWISE identical to the unselected program;
+  * server — ``BlockServer(select_topk=k)`` end to end: full-k parity,
+    per-request override latching, selection stats;
+  * satellites — deadline enforcement DURING decode, the adaptive
+    decode-segment controller, and (chaos-marked) selection under
+    fault injection.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as A
+from repro.core.blocks import from_row_lens
+from repro.kernels import ops
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+from repro.serving.server import BlockServer, SamplingParams
+
+from conftest import tiny_dense
+
+
+# ---------------------------------------------------------------------------
+# kernels: contiguous decode selection
+# ---------------------------------------------------------------------------
+def _decode_operands(seed=0, B=3, H=4, KV=2, D=16, Skv=96):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, Skv, KV, D), jnp.float32)
+    v = jax.random.normal(kv, (B, Skv, KV, D), jnp.float32)
+    cl = jnp.asarray([Skv, 77, 50], jnp.int32)[:B]
+    return q, k, v, cl, D ** -0.5
+
+
+@pytest.mark.parametrize("nbs", [3, 5, 7])   # odd counts: no tile alignment
+def test_contiguous_decode_selection_matches_jnp(nbs):
+    """Kernel with (sel_starts, sel_keep) == jnp twin with the same mask,
+    across odd block counts and unaligned boundaries."""
+    q, k, v, cl, scale = _decode_operands()
+    B = q.shape[0]
+    rng = np.random.default_rng(nbs)
+    ss = np.zeros((B, nbs + 1), np.int32)
+    sk = np.zeros((B, nbs), np.int32)
+    for b in range(B):
+        # unaligned boundaries inside [0, cl_b), tail = last boundary
+        cuts = np.sort(rng.choice(np.arange(3, int(cl[b]) - 1), nbs,
+                                  replace=False))
+        ss[b] = np.concatenate([[0], cuts])
+        sk[b] = rng.integers(0, 2, nbs)
+    got = ops.decode_attention(q, k, v, cl, scale,
+                               sel_starts=jnp.asarray(ss),
+                               sel_keep=jnp.asarray(sk))
+    # jnp twin convention: cache_len BEFORE the new token's write
+    want = A.decode_attention(q, k, v, cl - 1, scale,
+                              sel=(jnp.asarray(ss), jnp.asarray(sk)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_contiguous_decode_neutral_rows_bitwise():
+    """All-zeros selection rows (the non-selective-neighbour encoding)
+    and keep-everything rows are both bitwise identical to the program
+    with no selection operands at all."""
+    q, k, v, cl, scale = _decode_operands()
+    B, Skv = q.shape[0], k.shape[1]
+    base = np.asarray(ops.decode_attention(q, k, v, cl, scale))
+    zeros = (jnp.zeros((B, 4 + 1), jnp.int32), jnp.zeros((B, 4), jnp.int32))
+    np.testing.assert_array_equal(
+        base, np.asarray(ops.decode_attention(
+            q, k, v, cl, scale, sel_starts=zeros[0], sel_keep=zeros[1])))
+    # k >= nb: every block kept, tail boundary past the cache
+    ss = np.tile(np.asarray([0, 20, 40, Skv], np.int32), (B, 1))
+    sk = np.ones((B, 3), np.int32)
+    np.testing.assert_array_equal(
+        base, np.asarray(ops.decode_attention(
+            q, k, v, cl, scale, sel_starts=jnp.asarray(ss),
+            sel_keep=jnp.asarray(sk))))
+
+
+# ---------------------------------------------------------------------------
+# kernels: paged decode selection
+# ---------------------------------------------------------------------------
+def _paged_operands(seed=1, B=2, H=4, KV=2, D=16, PS=8, MP=6):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    num_pages = B * MP + 1
+    pool_k = jax.random.normal(kk, (num_pages, PS, KV, D), jnp.float32)
+    pool_v = jax.random.normal(kv, (num_pages, PS, KV, D), jnp.float32)
+    q = jax.random.normal(kq, (B, 1, H, D), jnp.float32)
+    tables = np.arange(1, B * MP + 1, dtype=np.int32).reshape(B, MP)
+    occ = np.asarray([[8, 8, 8, 8, 5, 0],      # dead slot + partial page
+                      [8, 8, 8, 8, 8, 3]], np.int32)[:B]
+    starts = np.zeros((B, MP + 1), np.int32)
+    starts[:, 1:] = np.cumsum(occ, axis=1)
+    cl = jnp.asarray(starts[:, -1], jnp.int32)   # incl. the new token
+    return q, pool_k, pool_v, jnp.asarray(tables), jnp.asarray(starts), cl, \
+        D ** -0.5
+
+
+def test_paged_decode_selection_matches_jnp():
+    q, pk, pv, tables, starts, cl, scale = _paged_operands()
+    B, MP = tables.shape
+    rng = np.random.default_rng(2)
+    keep = rng.integers(0, 2, (B, MP)).astype(np.int32)
+    keep[:, -2:] = 1                             # resident/tail slots kept
+    got = ops.paged_decode_attention(q, pk, pv, tables, starts, cl, scale,
+                                     keep=jnp.asarray(keep))
+    want = A.paged_decode_attention(q, pk, pv, tables, starts, cl - 1,
+                                    scale, keep=jnp.asarray(keep))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_keep_all_ones_bitwise():
+    """The all-ones keep (the neutral paged encoding) is bitwise identical
+    to the program with no keep operand."""
+    q, pk, pv, tables, starts, cl, scale = _paged_operands()
+    base = np.asarray(ops.paged_decode_attention(
+        q, pk, pv, tables, starts, cl, scale))
+    ones = jnp.ones(tables.shape, jnp.int32)
+    np.testing.assert_array_equal(
+        base, np.asarray(ops.paged_decode_attention(
+            q, pk, pv, tables, starts, cl, scale, keep=ones)))
+
+
+# ---------------------------------------------------------------------------
+# kernels: ragged final-pass selection
+# ---------------------------------------------------------------------------
+def test_ragged_prefill_selection_matches_jnp():
+    """The ragged Pallas kernel with ``layout.selected`` matches the jnp
+    structural twin, and selection only changes FINAL-block rows — the
+    within-block (prefix) outputs are bitwise untouched."""
+    B, S, H, KV, D = 2, 128, 4, 2, 16
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KV, D), jnp.float32)
+    scale = D ** -0.5
+    row_lens = [[24, 40, 32, 32], [32, 32, 32, 32]]
+    sel = [[1, 0, 1, 1], [0, 1, 1, 1]]
+    keep_all = [[1, 1, 1, 1], [1, 1, 1, 1]]
+
+    lay_sel = from_row_lens(row_lens, selected=sel)
+    lay_all = from_row_lens(row_lens, selected=keep_all)
+    o_sel = np.asarray(ops.block_attention_prefill(
+        q, k, v, scale=scale, layout=lay_sel))
+    o_all = np.asarray(ops.block_attention_prefill(
+        q, k, v, scale=scale, layout=lay_all))
+    ref_sel = np.asarray(A.ragged_blockwise_prefill(q, k, v, lay_sel, scale))
+    ref_all = np.asarray(A.ragged_blockwise_prefill(q, k, v, lay_all, scale))
+    np.testing.assert_allclose(o_sel, ref_sel, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(o_all, ref_all, atol=1e-4, rtol=1e-4)
+    # prefix rows (before each row's final block) identical under selection
+    for b in range(B):
+        f_start = sum(row_lens[b][:-1])
+        np.testing.assert_array_equal(o_sel[b, :f_start], o_all[b, :f_start])
+    assert not np.array_equal(o_sel, o_all)      # final rows did change
+
+
+# ---------------------------------------------------------------------------
+# server: end-to-end selection
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def srv_setup():
+    cfg = tiny_dense()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    pool = [rng.integers(5, cfg.vocab_size, 16).astype(np.int32)
+            for _ in range(6)]
+    reqs = []
+    for r in range(4):
+        idx = rng.choice(6, 3, replace=False)
+        blocks = [pool[i] for i in idx]
+        blocks.append(rng.integers(5, cfg.vocab_size, 8).astype(np.int32))
+        reqs.append(blocks)
+    return cfg, params, reqs
+
+
+def _drain(cfg, params, reqs, paged, topk, **kw):
+    eng = BlockAttentionEngine(params, cfg, max_seq=256)
+    srv = BlockServer(eng, num_slots=2, decode_segment=2, paged=paged,
+                      select_topk=topk, **kw)
+    rids = [srv.submit(b, max_new_tokens=6) for b in reqs]
+    done = {c.rid: c for c in srv.run()}
+    assert not srv.check(), srv.check()
+    return [done[r].tokens.tolist() for r in rids], srv
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_server_full_k_bitwise_parity(srv_setup, paged):
+    """select_topk >= every request's block count: the selection latch is
+    on but selection never applies — tokens bitwise match the default."""
+    cfg, params, reqs = srv_setup
+    base, _ = _drain(cfg, params, reqs, paged, None)
+    full, srv = _drain(cfg, params, reqs, paged, 99)
+    assert full == base
+    assert srv._sel_enabled
+    assert srv.stats()["selection"]["selected_blocks"] == 0
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_server_selection_active(srv_setup, paged):
+    cfg, params, reqs = srv_setup
+    base, _ = _drain(cfg, params, reqs, paged, None)
+    sel, srv = _drain(cfg, params, reqs, paged, 1)
+    assert all(len(t) == 6 for t in sel)
+    s = srv.stats()["selection"]
+    assert s["requests"] == 4
+    assert 0 < s["selected_blocks"] < s["candidate_blocks"]
+    assert sel != base                 # top-1 of 3 blocks really restricts
+
+
+def test_per_request_override_latches_and_neighbours_unaffected(srv_setup):
+    """A SamplingParams.select_topk override on a non-selective server
+    flips the latch for that request only; neighbours keep bitwise parity
+    with the fully unselected server."""
+    cfg, params, reqs = srv_setup
+    base, _ = _drain(cfg, params, reqs, False, None)
+    eng = BlockAttentionEngine(params, cfg, max_seq=256)
+    srv = BlockServer(eng, num_slots=2, decode_segment=2)
+    assert not srv._sel_enabled
+    r0 = srv.submit(reqs[0], max_new_tokens=6,
+                    sampling=SamplingParams(select_topk=1))
+    r1 = srv.submit(reqs[1], max_new_tokens=6)
+    done = {c.rid: c for c in srv.run()}
+    assert srv._sel_enabled
+    assert done[r1].tokens.tolist() == base[1]
+    assert len(done[r0].tokens) == 6
+    assert srv.stats()["selection"]["requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# satellites: deadline during decode, adaptive segment
+# ---------------------------------------------------------------------------
+def test_deadline_expires_during_decode(srv_setup):
+    """An ADMITTED request past its deadline retires at the next segment
+    boundary with the tokens generated so far — and the freed slot keeps
+    serving later traffic."""
+    cfg, params, reqs = srv_setup
+    eng = BlockAttentionEngine(params, cfg, max_seq=256)
+    srv = BlockServer(eng, num_slots=1, decode_segment=1)
+    rid = srv.submit(reqs[0], max_new_tokens=128, deadline_s=0.03)
+    comps = []
+    while srv.busy:
+        comps.extend(srv.step())
+        time.sleep(0.02)
+    (c,) = comps
+    assert c.rid == rid and c.finish_reason == "deadline"
+    assert 0 < len(c.tokens) < 128      # partial output kept
+    assert srv.deadline_expired == 1
+    assert srv.stats()["deadline_expired"] == 1
+    # slot is really free: a follow-up request serves normally
+    r2 = srv.submit(reqs[1], max_new_tokens=3)
+    done = {x.rid: x for x in srv.run()}
+    assert done[r2].finish_reason == "length" and len(done[r2].tokens) == 3
+
+
+def test_adaptive_segment_shrinks_then_regrows(srv_setup):
+    """High retirement density halves the segment (down to the floor);
+    calm segments double it back up to the configured ceiling — and the
+    adaptive server's tokens stay bitwise identical to the fixed one."""
+    cfg, params, reqs = srv_setup
+    base, _ = _drain(cfg, params, reqs, False, None)
+
+    eng = BlockAttentionEngine(params, cfg, max_seq=256)
+    srv = BlockServer(eng, num_slots=2, decode_segment=4,
+                      adaptive_segment=True, min_decode_segment=1)
+    # wave 1: budgets ( <= segment ) -> every row retires in its first
+    # segment -> density 1.0 -> shrink
+    rids_short = [srv.submit(b, max_new_tokens=2) for b in reqs]
+    # wave 2: one long request -> consecutive calm segments -> regrow
+    rid_long = srv.submit(reqs[0], max_new_tokens=24)
+    done = {c.rid: c for c in srv.run()}
+    assert srv.segment_shrinks >= 1
+    assert srv.segment_regrows >= 1
+    st = srv.stats()
+    assert st["segment_shrinks"] == srv.segment_shrinks
+    assert st["decode_segment_current"] == srv._cur_segment
+    assert 1 <= srv._cur_segment <= 4
+    assert len(done[rid_long].tokens) == 24
+    for r in rids_short:
+        assert len(done[r].tokens) == 2
+
+    # parity: the adaptive controller only re-chunks the scan, and the
+    # deferred-verification drain never perturbs tokens either
+    adaptive, asrv = _drain(cfg, params, reqs, False, None,
+                            adaptive_segment=True, min_decode_segment=1,
+                            defer_verify=True)
+    assert adaptive == base
+    assert asrv.engine.store.defer_verify
+    assert "deferred_verify_drops" in asrv.stats()
+
+
+# ---------------------------------------------------------------------------
+# chaos: selection under fault injection
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+def test_selection_survives_fault_injection(srv_setup):
+    """A selective paged server under 20% injected faults: tokens bitwise
+    match the fault-free SELECTIVE run (degraded paths recompute, never
+    change what selection attends), pool invariants clean at the end."""
+    from repro.serving.faults import POINTS, FaultInjector
+    cfg, params, reqs = srv_setup
+
+    def run(rate):
+        eng = BlockAttentionEngine(params, cfg, max_seq=256,
+                                   store_verify_every=3)
+        faults = None
+        if rate > 0:
+            faults = FaultInjector(seed=7, rates={p: rate for p in POINTS})
+        srv = BlockServer(eng, num_slots=2, decode_segment=2, paged=True,
+                          page_size=8, pool_verify_every=3,
+                          select_topk=1, faults=faults)
+        rids = [srv.submit(b, max_new_tokens=6) for b in reqs]
+        done = {c.rid: c for c in srv.run()}
+        assert not srv.check(), srv.check()
+        return [done[r].tokens.tolist() for r in rids]
+
+    clean = run(0.0)
+    assert run(0.2) == clean

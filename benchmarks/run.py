@@ -13,6 +13,9 @@
   DESIGN §10 selection -> selective (top-k block attention: kernel
                       tile-skip ratio, Zipf-hot serving with / without
                       selection, accuracy delta)
+  DESIGN §11 tiers -> tiered (device/host/disk KV store: cold-disk /
+                      warm-host / warm-device parity, prefetch
+                      device-hit-at-admission, shard failover)
   §2.3 training  -> train_step (masked vs structural ragged block training)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
@@ -35,9 +38,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="+",
                     default=["ttft", "cache", "kernels", "batch", "serving",
-                             "shared", "chaos", "selective", "train"],
+                             "shared", "chaos", "selective", "tiered",
+                             "train"],
                     choices=["ttft", "cache", "kernels", "batch", "serving",
-                             "shared", "chaos", "selective", "train"])
+                             "shared", "chaos", "selective", "tiered",
+                             "train"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -109,6 +114,13 @@ def main() -> None:
                           "new_tokens": (2, 4), "train_steps": 0,
                           "num_samples": 8, "repeats": 1}
                          if args.smoke else {}))
+    if "tiered" in args.sections:
+        from benchmarks import tiered
+        tiered.run(**({"n_requests": 6, "pool_size": 3, "plen": 16,
+                       "slots": 2, "decode_segment": 2, "host_mb": 8,
+                       "repeats": 1, "query_lens": (8, 12),
+                       "new_tokens": (2, 4)}
+                      if args.smoke else {}))
     if "train" in args.sections:
         from benchmarks import train_step
         train_step.run([168] if args.smoke else [512, 2048],

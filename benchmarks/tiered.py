@@ -1,0 +1,280 @@
+"""Tiered KV block store benchmark (DESIGN.md §11) → BENCH_tiered.json.
+
+Three claims over the SAME Zipf-hot shared-prefix traffic, all against a
+plain single-tier reference server:
+
+  * parity   — cold-disk (empty device/host, precomputed .kvb files),
+    warm-host (everything demoted), and warm-device serving emit
+    bitwise-identical tokens: the codec round-trip and the Eq.-3
+    re-rotation downstream of it are byte-exact, not approximately so;
+  * prefetch — with the working set on the host tier, admission-queue-
+    driven async prefetch (promote during decode segments) raises the
+    device-hit-at-admission rate over prefetch-off, where every first
+    touch pays a demand promotion inside the admission pass;
+  * failover — injected ``tier_fetch_timeout`` + ``shard_down`` faults
+    on a sharded host tier (with a churning device budget) preserve
+    token parity: failed fetches fail over to replicas and ultimately to
+    re-encode; availability degrades, tokens never change.
+
+Protocol notes: CPU timings are indicative only (the parity/hit-rate
+claims are the point); warm modes report min wall over ``repeats``.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import tempfile
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.config import ModelConfig
+from repro.core.kv_cache import block_key
+from repro.launch.precompute import precompute_blocks
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.scheduler import pow2_bucket
+from repro.serving.server import BlockServer
+from repro.serving.tiered_store import TierConfig
+
+from benchmarks.serving_latency import bench_model, make_shared_traffic
+
+
+def _drain(server, traffic):
+    """Submit all, run to empty → (tokens in rid order, wall_s, ttfts)."""
+    rids = [server.submit(b, max_new_tokens=nt) for b, nt in traffic]
+    t0 = time.perf_counter()
+    done = {c.rid: c for c in server.run()}
+    wall = time.perf_counter() - t0
+    return ([done[r].tokens.tolist() for r in rids], wall,
+            [done[r].ttft_s for r in rids])
+
+
+def _hit_at_admission(store) -> float:
+    """Fraction of admission-time block lookups served device-resident.
+
+    Demand promotions (tier fetch inside ``lookup``) and full misses
+    (re-encodes) are the admission-visible stalls; prefetch promotions
+    happen OFF the admission path and surface as device hits."""
+    demand_promotions = store.promotions - store.prefetch_promotions
+    lookups = store.hits + demand_promotions + store.misses
+    return store.hits / max(lookups, 1)
+
+
+def run(n_requests: int = 24, pool_size: int = 8, plen: int = 48,
+        slots: int = 4, decode_segment: int = 4, host_mb: int = 64,
+        shards: int = 2, replicas: int = 2, repeats: int = 2,
+        query_lens=(12, 16), new_tokens=(4, 6, 8),
+        fault_rate: float = 0.3, emit=print,
+        json_path: Optional[str] = None,
+        cfg: Optional[ModelConfig] = None,
+        kv_dir: Optional[str] = None):
+    cfg = cfg or bench_model()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    traffic = make_shared_traffic(rng, n_requests, pool_size, plen,
+                                  query_lens, new_tokens, cfg.vocab_size)
+    max_seq = (pow2_bucket(pool_size * plen)
+               + pow2_bucket(max(query_lens)) + max(new_tokens) + 8)
+    tokens_total = sum(nt for _, nt in traffic)
+    # the distinct prefix blocks = the corpus the offline pass encodes
+    corpus_by_key = {}
+    for blocks, _ in traffic:
+        for b in blocks[:-1]:
+            corpus_by_key.setdefault(block_key(b, cfg.name), b)
+    corpus = list(corpus_by_key.values())
+
+    def tiered_engine(budget_bytes: int = 4 << 30) -> BlockAttentionEngine:
+        return BlockAttentionEngine(
+            params, cfg, max_seq=max_seq, store_budget_bytes=budget_bytes,
+            tiers=TierConfig(host_bytes=host_mb << 20, kv_dir=kv_dir,
+                             shards=shards, replicas=replicas))
+
+    tmp = None
+    if kv_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="bench_tiered_kv_")
+        kv_dir = tmp.name
+    try:
+        # ---- reference: plain single-tier server -----------------------
+        eng_ref = BlockAttentionEngine(params, cfg, max_seq=max_seq)
+        ref_tokens, ref_wall, _ = _drain(
+            BlockServer(eng_ref, num_slots=slots,
+                        decode_segment=decode_segment), traffic)
+
+        # ---- offline precompute (TurboRAG pass) ------------------------
+        manifest = precompute_blocks(eng_ref, corpus, kv_dir)
+
+        # ---- cold-disk / warm-host / warm-device parity ----------------
+        eng = tiered_engine()
+        modes, parity = {}, {}
+
+        def measure(name, n_runs=1, prepare=None):
+            best = None
+            for _ in range(max(n_runs, 1)):
+                if prepare is not None:
+                    prepare()               # re-establish the tier state
+                eng.store.reset_stats()     # each repeat measures it fresh
+                toks, wall, ttfts = _drain(
+                    BlockServer(eng, num_slots=slots,
+                                decode_segment=decode_segment), traffic)
+                s = eng.store
+                snap = {"device_hits": s.hits, "full_misses": s.misses,
+                        "promotions": s.promotions, "host_hits": s.host_hits,
+                        "disk_loads": s.disk_loads, "demotions": s.demotions}
+                if best is None or wall < best[1]:
+                    best = (toks, wall, ttfts, snap)
+            toks, wall, ttfts, snap = best
+            parity[name] = toks == ref_tokens
+            modes[name] = dict({
+                "wall_s": round(wall, 4),
+                "us_per_req": round(wall * 1e6 / n_requests, 1),
+                "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
+            }, **snap)
+
+        measure("cold_disk")                      # only .kvb files warm
+        measure("warm_host", n_runs=repeats,      # blobs in host shards
+                prepare=eng.store.demote_all)
+        measure("warm_device", n_runs=repeats)    # everything resident
+        assert modes["cold_disk"]["disk_loads"] > 0, \
+            "cold-disk run never touched the disk tier"
+        assert modes["warm_host"]["host_hits"] > 0, \
+            "warm-host run never touched the host tier"
+
+        # ---- prefetch on/off: device-hit-at-admission ------------------
+        prefetch = {}
+        pf_parity = {}
+        for mode in ("off", "on"):
+            e = tiered_engine()
+            # populate (cold-disk drain), then push the working set down
+            # to the host tier: the serve we measure starts device-cold
+            _drain(BlockServer(e, num_slots=slots,
+                               decode_segment=decode_segment), traffic)
+            e.store.demote_all()
+            e.store.reset_stats()
+            srv = BlockServer(e, num_slots=slots,
+                              decode_segment=decode_segment,
+                              prefetch=(mode == "on"))
+            toks, wall, _ = _drain(srv, traffic)
+            pf_parity[mode] = toks == ref_tokens
+            s = e.store
+            prefetch[mode] = {
+                "device_hit_at_admission": round(_hit_at_admission(s), 4),
+                "device_hits": s.hits,
+                "demand_promotions": s.promotions - s.prefetch_promotions,
+                "prefetch_promotions": s.prefetch_promotions,
+                "prefetch_hits": s.prefetch_hits,
+                "wall_s": round(wall, 4),
+            }
+        prefetch["delta"] = round(
+            prefetch["on"]["device_hit_at_admission"]
+            - prefetch["off"]["device_hit_at_admission"], 4)
+
+        # ---- shard failover under injected faults ----------------------
+        # small device budget -> constant demote/promote churn -> many
+        # tier fetches for the schedule to hit; every failure must fail
+        # over (replica, then re-encode) without touching tokens
+        block_bytes = max((e.nbytes for e in eng.store._entries.values()),
+                          default=1 << 20)
+        eng_f = tiered_engine(budget_bytes=3 * block_bytes)
+        _drain(BlockServer(eng_f, num_slots=slots,
+                           decode_segment=decode_segment), traffic)
+        eng_f.store.demote_all()
+        eng_f.store.reset_stats()
+        faults = FaultInjector(seed=7, rates={
+            "tier_fetch_timeout": fault_rate, "shard_down": fault_rate})
+        srv_f = BlockServer(eng_f, num_slots=slots,
+                            decode_segment=decode_segment, faults=faults)
+        toks_f, wall_f, _ = _drain(srv_f, traffic)
+        sf = eng_f.store
+        fired = faults.stats()["fired"]
+        failover = {
+            "rates": {"tier_fetch_timeout": fault_rate,
+                      "shard_down": fault_rate},
+            "fired": {k: v for k, v in fired.items() if v},
+            "fetch_failovers": sf.fetch_failovers,
+            "shard_down_events": sum(sf.ring.down_events),
+            "replica_failures": sum(sf.ring.failures),
+            "parity": toks_f == ref_tokens,
+            "wall_s": round(wall_f, 4),
+        }
+        parity["failover"] = failover["parity"]
+        parity["prefetch_on"] = pf_parity["on"]
+        parity["prefetch_off"] = pf_parity["off"]
+
+        results = {
+            "requests": n_requests, "pool_size": pool_size,
+            "passage_len": plen, "num_slots": slots,
+            "shards": shards, "replicas": replicas,
+            "host_tier_mb": host_mb, "tokens_total": tokens_total,
+            "corpus_blocks": manifest["blocks_total"],
+            "reference_wall_s": round(ref_wall, 4),
+            "parity": parity,
+            "modes": modes,
+            "prefetch": prefetch,
+            "failover": failover,
+        }
+        assert all(parity.values()), f"token parity broken: {parity}"
+
+        emit(f"tiered_cold_disk,{modes['cold_disk']['us_per_req']:.0f},"
+             f"disk_loads={modes['cold_disk']['disk_loads']} "
+             f"parity={parity['cold_disk']}")
+        emit(f"tiered_warm_host,{modes['warm_host']['us_per_req']:.0f},"
+             f"host_hits={modes['warm_host']['host_hits']} "
+             f"parity={parity['warm_host']}")
+        emit(f"tiered_warm_device,{modes['warm_device']['us_per_req']:.0f},"
+             f"device_hits={modes['warm_device']['device_hits']} "
+             f"parity={parity['warm_device']}")
+        emit(f"tiered_prefetch,{prefetch['on']['wall_s'] * 1e6 / n_requests:.0f},"
+             f"hit@adm on={prefetch['on']['device_hit_at_admission']:.3f} "
+             f"off={prefetch['off']['device_hit_at_admission']:.3f} "
+             f"delta={prefetch['delta']:+.3f}")
+        emit(f"tiered_failover,{wall_f * 1e6 / n_requests:.0f},"
+             f"failovers={failover['fetch_failovers']} "
+             f"downs={failover['shard_down_events']} "
+             f"parity={failover['parity']}")
+
+        if json_path:
+            payload = {
+                "benchmark": "tiered",
+                "protocol": {
+                    "model": cfg.name, "passage_len": plen,
+                    "pool_size": pool_size, "query_lens": list(query_lens),
+                    "new_tokens": list(new_tokens), "repeats": repeats,
+                    "fault_rate": fault_rate,
+                    "backend": jax.default_backend(),
+                    "machine": platform.machine(),
+                    "note": "Zipf-hot rank-prefix traffic; disk tier in a "
+                            "tmpdir (precomputed offline by "
+                            "launch.precompute); warm modes min-wall of "
+                            "repeats; CPU walls indicative — the parity / "
+                            "hit-at-admission claims are the payload",
+                },
+                "results": results,
+            }
+            with open(json_path, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            emit(f"# wrote {json_path}")
+        return results
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_tiered.json")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--kv-dir", default=None)
+    args = ap.parse_args()
+    run(n_requests=args.requests, repeats=args.repeats,
+        json_path=args.json, kv_dir=args.kv_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,13 @@ Two tiers:
     list, per-page refcounts, and a ``(block content key, rope delta)``
     directory so each distinct block's KV is materialised ONCE and every
     slot's attention gathers it through a block table (``PagedView``).
+
+Both the store and the pool carry TIER counters (demotions / promotions /
+disk_loads / prefetch_hits / fetch_failovers) — zero here, incremented by
+the tiered subclass (``serving.tiered_store.TieredBlockStore``) and the
+pool's ``on_reclaim`` demotion hook (DESIGN.md §11); keeping the keys in
+the base ``stats()`` pins one telemetry schema across tiered and
+single-tier deployments.
 """
 from __future__ import annotations
 
@@ -233,6 +240,19 @@ class PagedKVPool:
         self._pending_verify: List[Tuple[str, int]] = []
         # fault injection (serving.faults.FaultInjector); None in prod
         self.faults = None
+        # tiered-store hook (DESIGN.md §11): called as
+        # ``on_reclaim(key, group)`` BEFORE a pressure-reclaim frees the
+        # group's pages — the owning server demotes delta-0 groups to the
+        # host tier (the pool is the last owner of page-backed KV, so
+        # reclaim is the demotion point). Truthy return counts a demotion.
+        self.on_reclaim: Optional[Callable[[Tuple[str, int], "_PageGroup"],
+                                           bool]] = None
+        # tier counters — schema parity with BlockKVStore.stats()
+        self.demotions = 0
+        self.promotions = 0
+        self.disk_loads = 0
+        self.prefetch_hits = 0
+        self.fetch_failovers = 0
 
     # -- capacity ------------------------------------------------------
     @property
@@ -301,6 +321,8 @@ class PagedKVPool:
         for key, g in self._groups.items():
             if g.refs == 0:
                 del self._groups[key]
+                if self.on_reclaim is not None and self.on_reclaim(key, g):
+                    self.demotions += 1
                 self._free.extend(g.pages)
                 self.reclaims += 1
                 return True
@@ -466,7 +488,22 @@ class PagedKVPool:
                 "page_hits": self.page_hits, "page_misses": self.page_misses,
                 "reclaims": self.reclaims,
                 "alloc_failures": self.alloc_failures,
-                "integrity_failures": self.integrity_failures}
+                "integrity_failures": self.integrity_failures,
+                "demotions": self.demotions,
+                "promotions": self.promotions,
+                "disk_loads": self.disk_loads,
+                "prefetch_hits": self.prefetch_hits,
+                "fetch_failovers": self.fetch_failovers}
+
+    def reset_stats(self):
+        """Zero the counters, keep the directory/pages — stats parity
+        with ``BlockKVStore.reset_stats()`` (phase-scoped telemetry)."""
+        self.page_hits = self.page_misses = 0
+        self.reclaims = self.alloc_failures = 0
+        self.integrity_failures = 0
+        self._lookups = 0
+        self.demotions = self.promotions = 0
+        self.disk_loads = self.prefetch_hits = self.fetch_failovers = 0
 
 
 # ---------------------------------------------------------------------------
@@ -531,6 +568,14 @@ class BlockKVStore:
         self.on_evict: Optional[Callable[[str, BlockEntry], None]] = None
         # fault injection (serving.faults.FaultInjector); None in prod
         self.faults = None
+        # tier counters (DESIGN.md §11) — stay zero in the single-tier
+        # base; TieredBlockStore increments them. Kept here so stats()
+        # exposes ONE schema either way.
+        self.demotions = 0          # device entries saved to the host tier
+        self.promotions = 0         # demand host/disk -> device at lookup
+        self.disk_loads = 0         # promotions satisfied from disk files
+        self.prefetch_hits = 0      # lookups warmed by the prefetch worker
+        self.fetch_failovers = 0    # tier fetches that failed -> re-encode
 
     # -- stats ---------------------------------------------------------
     @property
@@ -702,8 +747,15 @@ class BlockKVStore:
             old = self._entries.pop(victim)
             self._bytes -= old.nbytes
             self.evictions += 1
+            self._demote(victim, old)
             if self.on_evict is not None:
                 self.on_evict(victim, old)
+
+    def _demote(self, key: str, ent: BlockEntry):
+        """Tier hook: called for every LRU eviction BEFORE ``on_evict``.
+        The single-tier base drops the bytes (no lower tier to catch
+        them); ``TieredBlockStore`` overrides this to serialize the entry
+        into the host-RAM tier instead (DESIGN.md §11)."""
 
     def stats(self) -> Dict[str, Any]:
         return {"entries": len(self._entries), "bytes": self._bytes,
@@ -712,7 +764,12 @@ class BlockKVStore:
                 "evictions": self.evictions,
                 "eviction_skips": self.eviction_skips,
                 "integrity_failures": self.integrity_failures,
-                "unpin_underflow": self.unpin_underflow}
+                "unpin_underflow": self.unpin_underflow,
+                "demotions": self.demotions,
+                "promotions": self.promotions,
+                "disk_loads": self.disk_loads,
+                "prefetch_hits": self.prefetch_hits,
+                "fetch_failovers": self.fetch_failovers}
 
     def reset_stats(self):
         self.hits = self.misses = 0
@@ -720,6 +777,8 @@ class BlockKVStore:
         self.integrity_failures = 0
         self.unpin_underflow = 0
         self._lookups = 0
+        self.demotions = self.promotions = 0
+        self.disk_loads = self.prefetch_hits = self.fetch_failovers = 0
 
     def clear(self):
         if self.on_evict is not None:

@@ -1,0 +1,148 @@
+"""Byte-exact block-KV serialization — the tiered store's wire format.
+
+One block's zero-based KV pytree (``{pos_key: {"k"/"v": array}}``, the
+same dict shape ``BlockKVStore`` holds on device) is encoded to a single
+self-describing blob:
+
+    magic "KVB1" | u32 header_len | header JSON | raw leaf bytes
+
+The header records every leaf's path/shape/dtype in **canonical pytree
+order** (``jax.tree_util`` flattening — sorted dict keys, depth first)
+plus a crc32 over the concatenated leaf bytes. Because the payload is
+written in the same order ``kv_checksum`` walks, the header crc EQUALS
+``kv_checksum(kv)`` of the in-memory pytree: a blob round-trips to an
+entry whose integrity checksum is bit-identical to what the device tier
+would have computed — "byte-exact" is checked, not assumed.
+
+``decode_kv`` re-verifies the crc on every read (the promote path's
+re-verify), so a corrupted host blob or disk file surfaces as
+``CodecError`` and the caller degrades to re-encode — the same
+drop-and-recompute contract as the device integrity layer (DESIGN.md
+§9, §11).
+
+Only dict pytrees with array leaves are supported: that is the only
+shape block KV takes in this codebase, and restricting the treedef keeps
+the decoder free of pickle/eval (a blob is data, never code).
+"""
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+MAGIC = b"KVB1"
+_LEN = struct.Struct("<I")
+
+
+class CodecError(ValueError):
+    """Malformed, truncated or corrupted KV blob."""
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including the ml_dtypes extensions
+    (bfloat16 etc.) jax arrays may carry."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes                      # ships with jax
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except AttributeError:
+            raise CodecError(f"unknown dtype {name!r}") from None
+
+
+def encode_kv(kv: Any, meta: Optional[Dict[str, Any]] = None) -> bytes:
+    """KV pytree -> one self-describing blob (host bytes).
+
+    Leaves are written in canonical pytree order so the embedded crc32
+    equals ``kv_cache.kv_checksum(kv)``. Device arrays sync to host here
+    — call off the hot path (demotion / offline precompute)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(kv)
+    leaves, payload, crc = [], [], 0
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if not isinstance(p, jax.tree_util.DictKey):
+                raise CodecError("encode_kv supports dict pytrees only, "
+                                 f"got path entry {p!r}")
+            if not isinstance(p.key, (str, int)) or isinstance(p.key, bool):
+                raise CodecError(f"unsupported dict key {p.key!r} "
+                                 "(str/int only)")
+            keys.append(p.key)       # JSON list entries keep str vs int
+        a = np.ascontiguousarray(leaf)
+        raw = a.tobytes()
+        crc = zlib.crc32(raw, crc)
+        leaves.append({"path": keys, "shape": list(a.shape),
+                       "dtype": str(a.dtype)})
+        payload.append(raw)
+    header = json.dumps({"v": 1, "crc": crc, "leaves": leaves,
+                         "meta": dict(meta or {})},
+                        sort_keys=True).encode()
+    return b"".join([MAGIC, _LEN.pack(len(header)), header] + payload)
+
+
+def peek_header(blob: bytes) -> Dict[str, Any]:
+    """Parse just the header (no payload copy / crc pass)."""
+    if blob[:4] != MAGIC:
+        raise CodecError(f"bad magic {blob[:4]!r}")
+    if len(blob) < 8:
+        raise CodecError("truncated blob (no header length)")
+    (hlen,) = _LEN.unpack(blob[4:8])
+    if len(blob) < 8 + hlen:
+        raise CodecError("truncated blob (header)")
+    try:
+        header = json.loads(blob[8:8 + hlen])
+    except ValueError as e:
+        raise CodecError(f"unparseable header: {e}") from None
+    if header.get("v") != 1:
+        raise CodecError(f"unsupported codec version {header.get('v')!r}")
+    return header
+
+
+def decode_kv(blob: bytes, verify: bool = True) -> Tuple[Any, Dict[str, Any]]:
+    """Blob -> (KV pytree of host numpy arrays, meta dict).
+
+    ``verify=True`` (always, outside tests) recomputes the payload crc32
+    and raises ``CodecError`` on mismatch — the promote-time integrity
+    re-check of DESIGN.md §11."""
+    header = peek_header(blob)
+    (hlen,) = _LEN.unpack(blob[4:8])
+    off = 8 + hlen
+    kv: Dict[Any, Any] = {}
+    # a bit-flip inside the JSON can leave it parseable but nonsensical:
+    # every malformed field must still surface as CodecError, not KeyError
+    try:
+        if verify:
+            crc = zlib.crc32(blob[off:])
+            if crc != header["crc"]:
+                raise CodecError(f"payload crc {crc} != header crc "
+                                 f"{header['crc']} (corrupted blob)")
+        for spec in header["leaves"]:
+            dtype = _np_dtype(spec["dtype"])
+            shape = tuple(int(s) for s in spec["shape"])
+            n = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+            if off + n > len(blob):
+                raise CodecError("truncated blob (payload)")
+            a = np.frombuffer(blob, dtype=dtype, count=max(
+                n // max(dtype.itemsize, 1), 0), offset=off).reshape(shape)
+            off += n
+            node = kv
+            for k in spec["path"][:-1]:
+                node = node.setdefault(k, {})
+            node[spec["path"][-1]] = a
+    except (KeyError, TypeError, ValueError) as e:
+        if isinstance(e, CodecError):
+            raise
+        raise CodecError(f"malformed header/payload: {e}") from None
+    if off != len(blob):
+        raise CodecError(f"{len(blob) - off} trailing bytes after payload")
+    return kv, header.get("meta", {})
+
+
+def blob_checksum(blob: bytes) -> int:
+    """The stored crc32 (== ``kv_checksum`` of the decoded pytree)."""
+    return int(peek_header(blob)["crc"])

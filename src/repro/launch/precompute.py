@@ -1,0 +1,137 @@
+"""Offline block-KV precompute — the TurboRAG serve-time-load path
+(DESIGN.md §11).
+
+Encodes a passage corpus to the tiered store's disk layout: one
+``<block_key>.kvb`` codec blob per passage (zero-based KV, byte-exact,
+crc-pinned) plus a ``manifest.json``. A server started with the same
+``--kv-dir`` (``launch.serve --kv-dir``, or an engine built with
+``tiers=TierConfig(kv_dir=...)``) promotes these blobs on first touch
+instead of re-encoding — the paper's warm path from request zero, with
+the prefill compute moved offline.
+
+  PYTHONPATH=src python -m repro.launch.precompute --arch tulu3-8b \
+      --smoke --kv-dir /tmp/kv --shared-pool 12 --passage-len 32
+
+The synthetic corpus flags mirror ``launch.serve`` exactly (same rng
+consumption), so serve's shared passage pool hits the precomputed files
+bit for bit. ``precompute_blocks`` is the library entry point for real
+corpora: hand it any iterable of token arrays.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_codec
+from repro.core.kv_cache import block_key
+from repro.serving.tiered_store import DiskTier
+
+MANIFEST = "manifest.json"
+
+
+def encode_block_kv(engine, tokens: np.ndarray):
+    """One passage -> its zero-based KV pytree (the store-entry shape),
+    via the engine's jitted ``_encode_block`` — the SAME computation the
+    serve-time miss path runs, so precomputed bytes are bit-identical to
+    what a cold server would have cached."""
+    collected = engine._encode_block(engine.params,
+                                     jnp.asarray(tokens)[None, :])
+    return jax.tree.map(lambda a: a[:, 0], collected)
+
+
+def precompute_blocks(engine, blocks: Iterable[np.ndarray], kv_dir: str,
+                      progress=None) -> Dict:
+    """Encode ``blocks`` into ``kv_dir`` (one .kvb each) + manifest.
+
+    Re-running is incremental: a block whose file already exists is
+    skipped (content addressing makes staleness impossible — new content
+    is a new key)."""
+    disk = DiskTier(kv_dir)
+    tag = engine.cfg.name
+    written = skipped = total_tokens = 0
+    t0 = time.perf_counter()
+    for toks in blocks:
+        toks = np.asarray(toks, np.int32)
+        key = block_key(toks, tag)
+        total_tokens += int(toks.shape[0])
+        if key in disk:
+            skipped += 1
+            continue
+        kv = encode_block_kv(engine, toks)
+        blob = kv_codec.encode_kv(
+            jax.tree.map(np.asarray, kv),
+            meta={"model_tag": tag, "num_tokens": int(toks.shape[0])})
+        disk.put_blob(key, blob)
+        written += 1
+        if progress is not None:
+            progress(written, key)
+    manifest = {
+        "model_tag": tag,
+        "format": "kvb/1",
+        "blocks_written": written,
+        "blocks_skipped": skipped,
+        "blocks_total": len(disk),
+        "corpus_tokens": total_tokens,
+        "encode_wall_s": round(time.perf_counter() - t0, 3),
+    }
+    with open(os.path.join(kv_dir, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    return manifest
+
+
+def read_manifest(kv_dir: str) -> Optional[Dict]:
+    try:
+        with open(os.path.join(kv_dir, MANIFEST)) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tulu3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--kv-dir", required=True,
+                    help="disk-tier root to write <block_key>.kvb files")
+    ap.add_argument("--shared-pool", type=int, default=12,
+                    help="synthetic corpus size (passages)")
+    ap.add_argument("--passage-len", type=int, default=32)
+    ap.add_argument("--mixed", action="store_true",
+                    help="ragged passage lengths (match serve --mixed)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.serve import make_passage_pool
+    from repro.models import api
+    from repro.serving.engine import BlockAttentionEngine
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.is_recurrent():
+        raise SystemExit("precompute needs a KV-cache attention arch: "
+                         "recurrent archs have no block KV to store")
+    params = api.model_init(jax.random.PRNGKey(args.seed), cfg)
+    # encode-only: max_seq just needs to cover one passage
+    plen_max = args.passage_len + args.passage_len // 2 \
+        if args.mixed else args.passage_len
+    engine = BlockAttentionEngine(params, cfg, max_seq=max(plen_max * 2, 64))
+    rng = np.random.default_rng(args.seed)
+    pool = make_passage_pool(rng, args.shared_pool, args.passage_len,
+                             cfg.vocab_size, mixed=args.mixed)
+    manifest = precompute_blocks(
+        engine, pool, args.kv_dir,
+        progress=lambda n, key: print(
+            json.dumps({"written": n, "key": key[:16]}), flush=True))
+    print(json.dumps(dict(manifest, kv_dir=args.kv_dir)))
+
+
+if __name__ == "__main__":
+    main()

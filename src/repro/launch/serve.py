@@ -29,6 +29,16 @@ from repro.serving.scheduler import pow2_bucket
 from repro.serving.server import BlockServer, Rejected, SamplingParams
 
 
+def make_passage_pool(rng, shared_pool, passage_len, vocab, mixed=False):
+    """The shared passage corpus requests draw from. Split out so
+    ``launch.precompute`` can regenerate the IDENTICAL pool (same rng
+    consumption) and write its block KV to the disk tier offline."""
+    plens = ([max(passage_len // 2, 1), passage_len,
+              passage_len + passage_len // 2] if mixed else [passage_len])
+    return [rng.integers(5, vocab, int(plens[i % len(plens)]))
+            .astype(np.int32) for i in range(shared_pool)]
+
+
 def make_request_stream(rng, num_requests, passages_per_req, passage_len,
                         query_len, shared_pool, vocab, mixed=False,
                         max_new=8, mixed_new=False):
@@ -41,10 +51,8 @@ def make_request_stream(rng, num_requests, passages_per_req, passage_len,
     the heterogeneous-length case where continuous batching shines: short
     answers retire and their slots refill mid-traffic.
     """
-    plens = ([max(passage_len // 2, 1), passage_len,
-              passage_len + passage_len // 2] if mixed else [passage_len])
-    pool = [rng.integers(5, vocab, int(plens[i % len(plens)]))
-            .astype(np.int32) for i in range(shared_pool)]
+    pool = make_passage_pool(rng, shared_pool, passage_len, vocab,
+                             mixed=mixed)
     for r in range(num_requests):
         n = passages_per_req - (r % 2 if mixed else 0)
         idx = rng.choice(shared_pool, max(n, 1), replace=False)
@@ -102,8 +110,32 @@ def main():
                          "queued past it -> finish_reason 'deadline'")
     ap.add_argument("--chaos-rate", type=float, default=0.0,
                     help="fault-injection rate across every point "
-                         "(pool alloc / store lookup / admission); "
-                         "tokens stay correct, timing degrades")
+                         "(pool alloc / store lookup / admission / tier "
+                         "fetch / shard down); tokens stay correct, "
+                         "timing degrades")
+    # tiered store (DESIGN.md §11)
+    ap.add_argument("--kv-dir", default=None,
+                    help="disk-tier root of precomputed block KV "
+                         "(launch.precompute); enables the tiered store: "
+                         "device misses promote from host/disk instead "
+                         "of re-encoding — warm-disk startup")
+    ap.add_argument("--host-tier-mb", type=int, default=256,
+                    help="host-RAM tier budget per shard (MiB); device "
+                         "evictions demote here instead of dropping")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="simulated host shards behind the consistent-"
+                         "hash placement ring")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="host-tier copies per block (capped at --shards)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="async prefetch: promote queued requests' "
+                         "blocks host/disk -> device during decode "
+                         "segments (needs --kv-dir or --shards tiers)")
+    ap.add_argument("--precompute", action="store_true",
+                    help="write the synthetic corpus's block KV to "
+                         "--kv-dir and exit (offline TurboRAG pass); "
+                         "then rerun without this flag for warm-disk "
+                         "serving")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -114,7 +146,25 @@ def main():
                                   if args.mixed else args.passage_len)
     max_seq = (pow2_bucket(max_prefix) + pow2_bucket(args.query_len)
                + args.max_new_tokens + 8)
-    engine = BlockAttentionEngine(params, cfg, max_seq=max_seq)
+    tiers = None
+    if args.kv_dir or args.shards > 1:
+        from repro.serving.tiered_store import TierConfig
+        tiers = TierConfig(host_bytes=args.host_tier_mb << 20,
+                           kv_dir=args.kv_dir, shards=args.shards,
+                           replicas=args.replicas)
+    if args.precompute:
+        if not args.kv_dir:
+            raise SystemExit("--precompute needs --kv-dir")
+        from repro.launch.precompute import precompute_blocks
+        engine = BlockAttentionEngine(params, cfg, max_seq=max_seq)
+        pool_rng = np.random.default_rng(args.seed)
+        corpus = make_passage_pool(pool_rng, args.shared_pool,
+                                   args.passage_len, cfg.vocab_size,
+                                   mixed=args.mixed)
+        manifest = precompute_blocks(engine, corpus, args.kv_dir)
+        print(json.dumps(dict(manifest, kv_dir=args.kv_dir)))
+        return
+    engine = BlockAttentionEngine(params, cfg, max_seq=max_seq, tiers=tiers)
 
     rng = np.random.default_rng(args.seed)
     stream = list(make_request_stream(
@@ -166,7 +216,8 @@ def main():
                              max_queue=args.max_queue,
                              shed_policy=args.shed_policy,
                              select_topk=args.topk,
-                             faults=faults)
+                             faults=faults,
+                             prefetch=args.prefetch and tiers is not None)
         cb = (lambda ev: print(json.dumps({
             "rid": ev.rid, "token": int(ev.token), "index": ev.index,
             "finished": ev.finished}), flush=True)) if args.stream else None
@@ -183,8 +234,17 @@ def main():
                                   "pending": r.pending}), flush=True)
 
         done = 0
+        first: list = []
 
         def emit(c):
+            if not first:
+                # the warm-disk headline: with --kv-dir precomputed, the
+                # FIRST request should report computed_tokens == its
+                # final-block length (zero passage re-encodes)
+                first.append({"first_ttft_s": round(c.ttft_s, 4),
+                              "first_computed_tokens":
+                                  c.prefill_tokens_computed,
+                              "first_total_tokens": c.prefill_tokens_total})
             print(json.dumps({
                 "rid": c.rid, "tokens": len(c.tokens),
                 "finish": c.finish_reason,
@@ -211,6 +271,18 @@ def main():
                 emit(c)
                 done += 1
         trailer = server.stats()
+        if first:
+            trailer = dict(trailer, **first[0])
+        if tiers is not None:
+            s = engine.store
+            trailer = dict(trailer, tiered={
+                "demotions": s.demotions, "promotions": s.promotions,
+                "host_hits": s.host_hits, "disk_loads": s.disk_loads,
+                "disk_spills": s.disk_spills,
+                "prefetch_hits": s.prefetch_hits,
+                "fetch_failovers": s.fetch_failovers,
+                "host_entries": s.host_entries,
+                "host_bytes": s.host_nbytes})
         bad = server.check()
         assert not bad, f"pool invariants violated at shutdown: {bad}"
     wall = time.perf_counter() - t0

@@ -89,7 +89,8 @@ class BlockAttentionEngine:
                  dtype=jnp.float32,
                  reencode_positions: bool = True,
                  rope_backend: str = "auto",
-                 store_verify_every: int = 0):
+                 store_verify_every: int = 0,
+                 tiers=None):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
@@ -99,8 +100,18 @@ class BlockAttentionEngine:
         self.reencode = reencode_positions
         # store_verify_every > 0: checksum block KV at insert and
         # re-verify every Nth lookup (integrity layer, DESIGN.md §9)
-        self.store = BlockKVStore(store_budget_bytes, model_tag=cfg.name,
-                                  verify_every=store_verify_every)
+        if tiers is not None:
+            # tiered deployment (DESIGN.md §11): device LRU backed by a
+            # host-RAM blob tier and a precomputed-KV disk tier; evictions
+            # demote, misses promote, `tiers` is a tiered_store.TierConfig
+            from repro.serving.tiered_store import TieredBlockStore
+            self.store = TieredBlockStore(
+                store_budget_bytes, model_tag=cfg.name,
+                verify_every=store_verify_every, tiers=tiers)
+        else:
+            self.store = BlockKVStore(store_budget_bytes,
+                                      model_tag=cfg.name,
+                                      verify_every=store_verify_every)
         self.prefix_store = BlockKVStore(store_budget_bytes,
                                          model_tag=cfg.name + "/prefix")
         self._is_recurrent = cfg.is_recurrent()

@@ -31,6 +31,16 @@ point's rate does not perturb another's schedule):
   * ``admission_delay``   — the server skips one admission pass: arrival
                             jitter, so group composition under load is
                             randomized (tokens must not depend on it).
+  * ``tier_fetch_timeout``— one tiered-store fetch attempt (host replica
+                            or disk file) times out: the routing loop
+                            tries the next replica; exhausting every
+                            source counts a ``fetch_failover`` and the
+                            block re-encodes (DESIGN.md §11).
+  * ``shard_down``        — the consistent-hash ring marks the routed
+                            host shard down for a cooldown window:
+                            drives replica failover and the ring's
+                            health accounting. Only fires on tiered
+                            stores (``TieredBlockStore``).
 
 Every chaos run must end with ``PagedKVPool.check()`` clean, all
 refcounts/pins released, and token-level parity with a fault-free run of
@@ -51,7 +61,7 @@ import numpy as np
 # index doubles as the per-point RNG substream id — order is part of the
 # seed contract, append only
 POINTS = ("pool_alloc", "store_lookup_miss", "store_corrupt",
-          "admission_delay")
+          "admission_delay", "tier_fetch_timeout", "shard_down")
 
 
 class FaultInjector:

@@ -118,6 +118,16 @@ class Scheduler:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def peek(self, limit: int = 4) -> List[Request]:
+        """Oldest-first (rid order) view of queued requests, NO removal —
+        the prefetch lookahead's window into what admission takes next
+        (DESIGN.md §11). An approximation of ``take`` order: bucketed
+        admission may group differently, but a promoted block warms
+        every group it appears in."""
+        rs = sorted((r for q in self._queues.values() for r in q),
+                    key=lambda r: r.rid)
+        return rs[:max(int(limit), 0)]
+
     # -- overload control (DESIGN.md §9) ------------------------------
     def remove(self, rid: int) -> Optional[Request]:
         """Pull a queued request by rid (cancellation); None if absent."""

@@ -251,7 +251,9 @@ class BlockServer:
                  adaptive_segment: bool = False,
                  min_decode_segment: int = 1,
                  defer_verify: bool = False,
-                 faults=None):
+                 faults=None,
+                 prefetch: bool = False,
+                 prefetch_lookahead: int = 4):
         assert not engine._is_recurrent, \
             "BlockServer needs KV-cache attention archs (recurrent archs " \
             "use engine.generate's prefix path)"
@@ -305,6 +307,19 @@ class BlockServer:
         # deadline, cancel-while-queued): drained by the next step()
         self._retired: List[Completion] = []
         self._queue = Scheduler(max_batch=num_slots, max_wait_s=0.0)
+        # async prefetch (DESIGN.md §11): a background worker promotes
+        # the admission queue's next-up blocks host/disk -> device while
+        # the decode segment runs, so admission finds them warm. Needs a
+        # tiered store (engine built with tiers=TierConfig(...)).
+        self.prefetcher = None
+        self.prefetch_lookahead = int(prefetch_lookahead)
+        if prefetch:
+            if not hasattr(engine.store, "prefetch"):
+                raise ValueError(
+                    "prefetch=True needs a tiered store: build the engine "
+                    "with tiers=tiered_store.TierConfig(...)")
+            from repro.serving.tiered_store import PrefetchWorker
+            self.prefetcher = PrefetchWorker(engine.store)
 
         B = num_slots
         if paged:
@@ -330,6 +345,23 @@ class BlockServer:
             if faults is not None:
                 self.pool.faults = faults
             engine.store.on_evict = self._on_store_evict
+            if hasattr(engine.store, "demote_raw"):
+                # tiered + paged: a pressure-reclaim of a delta-0 group is
+                # the LAST owner of that block's physical KV (the store
+                # entry released its ref first) — demote to the host tier
+                # instead of dropping (DESIGN.md §11). Rotated (delta != 0)
+                # instances re-derive from the delta-0 copy, so only
+                # delta-0 demotes. Pages still hold the bytes here: the
+                # pool frees them after this hook returns.
+                store = engine.store
+
+                def _demote_group(gkey, g):
+                    key, delta = gkey
+                    if delta != 0:
+                        return False
+                    return store.demote_raw(
+                        key, self._read_pages(g.pages, g.num_tokens))
+                self.pool.on_reclaim = _demote_group
             engine._page_reader = self._read_pages
             self.pool_fallbacks = 0
             self._caches = None          # the pool slabs ARE the cache
@@ -498,8 +530,20 @@ class BlockServer:
         done, self._retired = self._retired, []
         done.extend(self._sweep_deadlines(time.perf_counter()))
         done.extend(self._admit())
+        if self.prefetcher is not None and self._queue.pending():
+            # lookahead (DESIGN.md §11): requests still queued after this
+            # admission pass are what the NEXT pass takes — kick their
+            # prefix blocks to the background worker now, so promotion
+            # overlaps the decode segment below
+            for req in self._queue.peek(self.prefetch_lookahead):
+                self.prefetcher.enqueue(req.blocks[:-1])
         if self._active.any():
             done.extend(self._run_segment())
+        if self.prefetcher is not None:
+            # join at the segment boundary: the overlap already happened
+            # during the scan; waiting here makes warm-at-admission (and
+            # every counter) deterministic for parity tests / benchmarks
+            self.prefetcher.drain()
         return done
 
     def _sweep_deadlines(self, now: float) -> List[Completion]:
@@ -551,6 +595,8 @@ class BlockServer:
             done.append(self._retire(req, "cancelled", now))
         while self._active.any():
             done.extend(self._run_segment())
+        if self.prefetcher is not None:
+            self.prefetcher.stop()      # idempotent; enqueue no-ops after
         return done
 
     # ------------------------------------------------------------------
@@ -1130,9 +1176,14 @@ class BlockServer:
             pool.register(k, pages, info["ntok"])
             if info["delta"] == 0 and not isinstance(info["src"], tuple):
                 # hand the physical KV to the pool: the store entry now
-                # references these pages (one pool ref held by the store)
+                # references these pages (one pool ref held by the store).
+                # The entry can vanish between plan and here (a tiered
+                # store's prefetch worker inserting under budget pressure
+                # evicts concurrently) — then there is no store ref to
+                # hold: release, the group stays directory-warm at refs 0
                 pool.acquire(k)
-                eng.store.link_pages(info["tokens"], pages)
+                if eng.store.link_pages(info["tokens"], pages) is None:
+                    pool.release(k)
         # per-row references (hit groups were acquired at plan time)
         for plan in row_plan:
             for gkey, _, _ in plan:
@@ -1523,6 +1574,15 @@ class BlockServer:
         if self.paged:
             out["pool"] = self.pool.stats()
             out["pool_fallbacks"] = self.pool_fallbacks
+        if self.prefetcher is not None:
+            store = self.engine.store
+            out["prefetch"] = {
+                "lookahead": self.prefetch_lookahead,
+                "enqueued": self.prefetcher.enqueued,
+                "skipped_resident": self.prefetcher.skipped_resident,
+                "promotions": store.prefetch_promotions,
+                "hits": store.prefetch_hits,
+            }
         if self.faults is not None:
             out["faults"] = self.faults.stats()
         return out

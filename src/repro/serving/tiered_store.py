@@ -1,0 +1,612 @@
+"""Tiered KV block store: device → host RAM → disk (DESIGN.md §11).
+
+The paper's 98.7% TTFT cut assumes the block's KV is already *resident*;
+a single-tier LRU makes every cold block pay full re-encode. This module
+fronts ``BlockKVStore`` with two lower tiers so "cold" almost never
+means "recompute":
+
+  * **host tier** — LRU evictions from the device store DEMOTE instead
+    of drop: the entry is serialized (``core.kv_codec``, byte-exact) into
+    an LRU byte-budgeted blob cache partitioned over N *simulated* host
+    shards by a consistent-hash ring (the Petals replica-routing shape:
+    each block lives on ``replicas`` ring successors; reads route to the
+    healthiest/fastest replica, writes land on all of them).
+  * **disk tier** — a directory of precomputed ``<block_key>.kvb`` blobs
+    written offline by ``launch.precompute`` (the TurboRAG serve-time-
+    load path) plus optional spill of host-tier evictions.
+
+Promotion (host/disk → device) re-verifies the blob's crc32 — which by
+codec construction equals ``kv_checksum`` of the original device pytree
+— so a corrupted replica/file is dropped and the next replica (or the
+re-encode path) serves instead: bitwise token parity with an all-device
+run is a checked invariant, not a hope.
+
+Fault points (``serving.faults``): ``tier_fetch_timeout`` fails one
+replica/disk fetch, ``shard_down`` marks the routed shard unhealthy for
+a cooldown window. Both degrade availability only; a lookup that
+exhausts every replica counts a ``fetch_failover`` and falls through to
+re-encode.
+
+``PrefetchWorker`` is the async half: ``BlockServer`` feeds it the
+admission queue's next-up blocks before running a decode segment, and a
+background thread promotes them host/disk → device while the device is
+busy decoding — admission then finds them warm (``prefetch_hits``).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import hashlib
+import os
+import threading
+import time
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_codec
+from repro.core.kv_cache import BlockEntry, BlockKVStore, block_key
+
+
+@dataclasses.dataclass
+class TierConfig:
+    """Knobs for the host/disk tiers and the placement ring."""
+    host_bytes: int = 256 << 20     # PER-SHARD host-tier blob budget
+    kv_dir: Optional[str] = None    # disk tier root (None = no disk tier)
+    shards: int = 1                 # simulated hosts behind the ring
+    replicas: int = 2               # copies per block (capped at shards)
+    vnodes: int = 32                # ring points per shard (placement
+                                    # smoothness, not correctness)
+    spill_to_disk: bool = True      # host evictions write .kvb files
+    down_cooldown: int = 8          # routing decisions a down shard skips
+    latency_alpha: float = 0.25     # EWMA weight for per-shard latency
+
+
+# ---------------------------------------------------------------------------
+# Host tier: one simulated host = one LRU blob cache
+# ---------------------------------------------------------------------------
+class HostShard:
+    """Byte-budgeted LRU of codec blobs — one simulated host's RAM."""
+
+    def __init__(self, budget_bytes: int):
+        self._blobs: "OrderedDict[str, bytes]" = OrderedDict()
+        self.budget_bytes = int(budget_bytes)
+        self.nbytes = 0
+        self.gets = self.hits = self.puts = self.evictions = 0
+        # eviction spill hook: (key, blob) -> None (disk tier)
+        self.on_evict = None
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._blobs
+
+    def get(self, key: str) -> Optional[bytes]:
+        self.gets += 1
+        blob = self._blobs.get(key)
+        if blob is not None:
+            self.hits += 1
+            self._blobs.move_to_end(key)
+        return blob
+
+    def put(self, key: str, blob: bytes):
+        old = self._blobs.pop(key, None)
+        if old is not None:
+            self.nbytes -= len(old)
+        self._blobs[key] = blob
+        self.nbytes += len(blob)
+        self.puts += 1
+        while self.nbytes > self.budget_bytes and len(self._blobs) > 1:
+            k, b = self._blobs.popitem(last=False)
+            self.nbytes -= len(b)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(k, b)
+
+    def drop(self, key: str):
+        blob = self._blobs.pop(key, None)
+        if blob is not None:
+            self.nbytes -= len(blob)
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._blobs), "bytes": self.nbytes,
+                "gets": self.gets, "hits": self.hits, "puts": self.puts,
+                "evictions": self.evictions}
+
+
+# ---------------------------------------------------------------------------
+# Disk tier: precomputed .kvb files (TurboRAG load path)
+# ---------------------------------------------------------------------------
+class DiskTier:
+    """Directory of ``<block_key>.kvb`` codec blobs.
+
+    Primarily read-only serve-time input written by ``launch.precompute``;
+    also receives host-tier spill. Writes are atomic (tmp + rename) so a
+    crashed spill never leaves a torn file to poison a later promote."""
+
+    SUFFIX = ".kvb"
+
+    def __init__(self, root: str, writable: bool = True):
+        self.root = root
+        self.writable = bool(writable)
+        os.makedirs(root, exist_ok=True)
+        self.loads = self.load_misses = self.stores = 0
+        self.corrupt_dropped = 0
+
+    def path(self, key: str) -> str:
+        return os.path.join(self.root, key + self.SUFFIX)
+
+    def __len__(self) -> int:
+        return sum(1 for n in os.listdir(self.root)
+                   if n.endswith(self.SUFFIX))
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self.path(key))
+
+    def get_blob(self, key: str) -> Optional[bytes]:
+        try:
+            with open(self.path(key), "rb") as f:
+                blob = f.read()
+        except OSError:
+            self.load_misses += 1
+            return None
+        self.loads += 1
+        return blob
+
+    def put_blob(self, key: str, blob: bytes):
+        if not self.writable:
+            return
+        tmp = self.path(key) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self.path(key))
+        self.stores += 1
+
+    def drop(self, key: str):
+        """Remove a corrupted file — the drop → re-encode path."""
+        try:
+            os.unlink(self.path(key))
+        except OSError:
+            pass
+        self.corrupt_dropped += 1
+
+    def keys(self) -> List[str]:
+        return [n[:-len(self.SUFFIX)] for n in sorted(os.listdir(self.root))
+                if n.endswith(self.SUFFIX)]
+
+    def stats(self) -> Dict[str, int]:
+        return {"files": len(self), "loads": self.loads,
+                "load_misses": self.load_misses, "stores": self.stores,
+                "corrupt_dropped": self.corrupt_dropped}
+
+
+# ---------------------------------------------------------------------------
+# Consistent-hash placement ring with health/latency accounting
+# ---------------------------------------------------------------------------
+class PlacementRing:
+    """Consistent-hash ring over N shards, Petals-shaped routing.
+
+    Placement: a block key hashes to a ring position; its replicas are
+    the next ``replicas`` DISTINCT shards clockwise (vnodes smooth the
+    split, and adding a shard only remaps ~1/N of keys). Routing: reads
+    try the live replicas ordered by measured EWMA fetch latency; a shard
+    marked down (``shard_down`` fault, real timeout storm) sits out
+    ``down_cooldown`` routing decisions, then rejoins — failover is
+    "next replica", and past the last replica the caller re-encodes."""
+
+    def __init__(self, shards: int, replicas: int = 2, vnodes: int = 32,
+                 down_cooldown: int = 8, latency_alpha: float = 0.25):
+        assert shards >= 1 and replicas >= 1 and vnodes >= 1
+        self.num_shards = int(shards)
+        self.replicas = min(int(replicas), self.num_shards)
+        self.down_cooldown = int(down_cooldown)
+        self.alpha = float(latency_alpha)
+        points: List[Tuple[int, int]] = []
+        for s in range(self.num_shards):
+            for v in range(int(vnodes)):
+                h = hashlib.sha256(f"shard-{s}/vnode-{v}".encode()).digest()
+                points.append((int.from_bytes(h[:8], "big"), s))
+        points.sort()
+        self._ring = [p for p, _ in points]
+        self._ring_shard = [s for _, s in points]
+        # per-shard health: EWMA fetch latency, failure/down accounting
+        self.ewma_s = [0.0] * self.num_shards
+        self.fetches = [0] * self.num_shards
+        self.failures = [0] * self.num_shards
+        self.down_events = [0] * self.num_shards
+        self._down_for = [0] * self.num_shards
+
+    def _pos(self, key: str) -> int:
+        # block_key is already a sha256 hexdigest — reuse its entropy
+        return int(key[:16], 16)
+
+    def replicas_for(self, key: str) -> List[int]:
+        """Placement order (ring successors) — where WRITES land."""
+        i = bisect.bisect_right(self._ring, self._pos(key))
+        out: List[int] = []
+        n = len(self._ring)
+        for j in range(n):
+            s = self._ring_shard[(i + j) % n]
+            if s not in out:
+                out.append(s)
+                if len(out) == self.replicas:
+                    break
+        return out
+
+    def route(self, key: str) -> List[int]:
+        """READ order: live replicas, fastest (EWMA) first. Each call is
+        one routing decision — down shards tick toward recovery here."""
+        reps = self.replicas_for(key)
+        live = [s for s in reps if self._down_for[s] == 0]
+        # tick AFTER filtering: a shard marked down sits out exactly
+        # ``down_cooldown`` decisions, then rejoins
+        for s in range(self.num_shards):
+            if self._down_for[s] > 0:
+                self._down_for[s] -= 1
+        live.sort(key=lambda s: self.ewma_s[s])   # stable: ring order ties
+        return live
+
+    def record(self, shard: int, latency_s: float, ok: bool = True):
+        self.fetches[shard] += 1
+        if ok:
+            a = self.alpha
+            self.ewma_s[shard] = (latency_s if self.fetches[shard] == 1
+                                  else a * latency_s
+                                  + (1 - a) * self.ewma_s[shard])
+        else:
+            self.failures[shard] += 1
+
+    def mark_down(self, shard: int):
+        self._down_for[shard] = self.down_cooldown
+        self.down_events[shard] += 1
+
+    def is_down(self, shard: int) -> bool:
+        return self._down_for[shard] > 0
+
+    def stats(self) -> Dict[str, Any]:
+        return {"shards": self.num_shards, "replicas": self.replicas,
+                "per_shard": [
+                    {"fetches": self.fetches[s], "failures": self.failures[s],
+                     "down_events": self.down_events[s],
+                     "down": self._down_for[s] > 0,
+                     "ewma_ms": round(self.ewma_s[s] * 1e3, 4)}
+                    for s in range(self.num_shards)]}
+
+
+# ---------------------------------------------------------------------------
+# The tiered store
+# ---------------------------------------------------------------------------
+class TieredBlockStore(BlockKVStore):
+    """``BlockKVStore`` whose evictions demote and whose misses promote.
+
+    Drop-in for the engine's device store (same lookup/insert/pin
+    surface); on top of the base contract:
+
+      * LRU eviction serializes the entry's KV to every placement replica
+        of the host tier (``_demote`` hook) instead of dropping it;
+      * a device miss consults host replicas (ring-routed) then the disk
+        tier; a verified blob is promoted back to a device entry and the
+        lookup is reclassified as a tier hit (``promotions``; ``hits`` /
+        ``misses`` keep meaning device-hit / full-miss → re-encode);
+      * ``prefetch(tokens)`` is the same promotion without hit/miss
+        accounting, safe from the background worker (all mutating ops
+        take one re-entrant lock);
+      * fault points: ``shard_down`` (routed shard marked down, next
+        replica tried) and ``tier_fetch_timeout`` (one fetch attempt
+        dropped). Exhausting every source after ≥1 failure counts a
+        ``fetch_failover`` and the block re-encodes — availability
+        degrades, tokens never do.
+    """
+
+    def __init__(self, budget_bytes: int = 8 << 30, model_tag: str = "",
+                 verify_every: int = 0,
+                 tiers: Optional[TierConfig] = None):
+        super().__init__(budget_bytes, model_tag=model_tag,
+                         verify_every=verify_every)
+        self.tiers = tiers or TierConfig()
+        t = self.tiers
+        self._lock = threading.RLock()
+        n = max(1, int(t.shards))
+        self.shards = [HostShard(t.host_bytes) for _ in range(n)]
+        self.ring = PlacementRing(n, replicas=t.replicas, vnodes=t.vnodes,
+                                  down_cooldown=t.down_cooldown,
+                                  latency_alpha=t.latency_alpha)
+        self.disk = DiskTier(t.kv_dir) if t.kv_dir else None
+        if self.disk is not None and t.spill_to_disk:
+            for sh in self.shards:
+                sh.on_evict = self._spill
+        # tiered-only counters (base tier counters live in BlockKVStore)
+        self.host_hits = 0          # promotions served from a host shard
+        self.disk_spills = 0        # host evictions written to disk
+        self.tier_corrupt = 0       # blobs failing the promote re-verify
+        self.prefetch_promotions = 0
+        self._prefetched: set = set()
+
+    # -- locking: serialize against the prefetch worker ----------------
+    def lookup(self, tokens: np.ndarray) -> Optional[BlockEntry]:
+        with self._lock:
+            key = block_key(tokens, self.model_tag)
+            ent = super().lookup(tokens)
+            if ent is not None:
+                if key in self._prefetched:
+                    self._prefetched.discard(key)
+                    self.prefetch_hits += 1
+                return ent
+            kv = self._tier_fetch(key)
+            if kv is None:
+                return None
+            # tier hit: not a full miss (no re-encode), not a device hit
+            self.misses -= 1
+            self.promotions += 1
+            self._prefetched.discard(key)
+            return super().insert(tokens, kv)
+
+    def insert(self, tokens: np.ndarray, kv: Any) -> BlockEntry:
+        with self._lock:
+            return super().insert(tokens, kv)
+
+    def pin(self, tokens: np.ndarray) -> Optional[BlockEntry]:
+        with self._lock:
+            return super().pin(tokens)
+
+    def unpin(self, tokens: np.ndarray):
+        with self._lock:
+            super().unpin(tokens)
+
+    def peek(self, tokens: np.ndarray) -> Optional[BlockEntry]:
+        with self._lock:
+            return super().peek(tokens)
+
+    def link_pages(self, tokens: np.ndarray,
+                   pages: Sequence[int]) -> Optional[BlockEntry]:
+        with self._lock:
+            return super().link_pages(tokens, pages)
+
+    def verify_pending(self) -> int:
+        with self._lock:
+            return super().verify_pending()
+
+    def clear(self):
+        with self._lock:
+            super().clear()
+
+    # -- demotion (device -> host) --------------------------------------
+    def _demote(self, key: str, ent: BlockEntry):
+        """LRU-eviction hook: serialize to every placement replica.
+
+        Page-backed entries (``ent.kv is None``) are skipped — the pool
+        owns their bytes, and ``PagedKVPool.on_reclaim`` demotes them
+        when the POOL lets go (see ``BlockServer``)."""
+        if ent.kv is None:
+            return
+        self.demote_raw(key, ent.kv)
+
+    def demote_raw(self, key: str, kv: Any) -> bool:
+        """Serialize one KV pytree into the host tier (all replicas)."""
+        with self._lock:
+            blob = kv_codec.encode_kv(jax.tree.map(np.asarray, kv))
+            for s in self.ring.replicas_for(key):
+                self.shards[s].put(key, blob)
+            self.demotions += 1
+            return True
+
+    def demote_all(self):
+        """Force-demote every unpinned, array-backed device entry — the
+        benchmark/test lever for a cold-device / warm-host state."""
+        with self._lock:
+            victims = [k for k, e in self._entries.items()
+                       if e.refs == 0 and e.kv is not None]
+            for key in victims:
+                ent = self._entries.pop(key)
+                self._bytes -= ent.nbytes
+                self.demote_raw(key, ent.kv)
+                if self.on_evict is not None:
+                    self.on_evict(key, ent)
+
+    def _spill(self, key: str, blob: bytes):
+        """Host-tier eviction hook: last-chance write to the disk tier."""
+        self.disk.put_blob(key, blob)
+        self.disk_spills += 1
+
+    # -- promotion (host/disk -> device) --------------------------------
+    def _decode(self, blob: bytes) -> Optional[Any]:
+        """Blob -> device pytree; None (+ counters) on corrupt bytes.
+        The codec crc re-verify IS the promote-time integrity check."""
+        try:
+            kv_np, _ = kv_codec.decode_kv(blob, verify=True)
+        except kv_codec.CodecError:
+            self.tier_corrupt += 1
+            self.integrity_failures += 1
+            return None
+        return jax.tree.map(jnp.asarray, kv_np)
+
+    def _tier_fetch(self, key: str) -> Optional[Any]:
+        """Ring-routed host fetch, then disk; None = re-encode.
+
+        Any failed attempt (injected timeout/down, corrupt blob) with no
+        later success counts one ``fetch_failover``."""
+        failed = False
+        for s in self.ring.route(key):
+            if self.faults is not None and self.faults.fire("shard_down"):
+                self.ring.mark_down(s)
+                failed = True
+                continue
+            t0 = time.perf_counter()
+            blob = self.shards[s].get(key)
+            if blob is None:
+                self.ring.record(s, time.perf_counter() - t0, ok=True)
+                continue
+            if self.faults is not None and \
+                    self.faults.fire("tier_fetch_timeout"):
+                self.ring.record(s, time.perf_counter() - t0, ok=False)
+                failed = True
+                continue
+            kv = self._decode(blob)
+            self.ring.record(s, time.perf_counter() - t0, ok=kv is not None)
+            if kv is None:
+                self.shards[s].drop(key)    # poisoned replica
+                failed = True
+                continue
+            self.host_hits += 1
+            return kv
+        if self.disk is not None:
+            if self.faults is not None and \
+                    self.faults.fire("tier_fetch_timeout"):
+                failed = True
+            else:
+                blob = self.disk.get_blob(key)
+                if blob is not None:
+                    kv = self._decode(blob)
+                    if kv is None:
+                        self.disk.drop(key)  # corrupted file: drop, re-encode
+                        failed = True
+                    else:
+                        self.disk_loads += 1
+                        return kv
+        if failed:
+            self.fetch_failovers += 1
+        return None
+
+    def prefetch(self, tokens: np.ndarray) -> bool:
+        """Promote one block host/disk → device with NO hit/miss
+        accounting (the worker's entry point). True = device-resident
+        afterwards; a later demand lookup of a block promoted here
+        counts a ``prefetch_hit``."""
+        with self._lock:
+            key = block_key(tokens, self.model_tag)
+            if key in self._entries:
+                return True
+            kv = self._tier_fetch(key)
+            if kv is None:
+                return False
+            self.promotions += 1
+            self.prefetch_promotions += 1
+            super().insert(tokens, kv)
+            self._prefetched.add(key)
+            return True
+
+    # -- telemetry ------------------------------------------------------
+    @property
+    def host_nbytes(self) -> int:
+        return sum(sh.nbytes for sh in self.shards)
+
+    @property
+    def host_entries(self) -> int:
+        return sum(len(sh) for sh in self.shards)
+
+    def stats(self) -> Dict[str, Any]:
+        out = super().stats()
+        out.update({
+            "host_hits": self.host_hits,
+            "disk_spills": self.disk_spills,
+            "tier_corrupt": self.tier_corrupt,
+            "prefetch_promotions": self.prefetch_promotions,
+            "tiers": {
+                "host_entries": self.host_entries,
+                "host_bytes": self.host_nbytes,
+                "shards": [sh.stats() for sh in self.shards],
+                "ring": self.ring.stats(),
+                "disk": self.disk.stats() if self.disk is not None else None,
+            }})
+        return out
+
+    def reset_stats(self):
+        super().reset_stats()
+        self.host_hits = self.disk_spills = 0
+        self.tier_corrupt = self.prefetch_promotions = 0
+
+
+# ---------------------------------------------------------------------------
+# Async prefetch worker
+# ---------------------------------------------------------------------------
+class PrefetchWorker:
+    """Background thread promoting queued blocks host/disk → device.
+
+    ``BlockServer.step`` enqueues the admission queue's next-up prefix
+    blocks right before launching a decode segment; while the device
+    decodes, this thread pulls keys and runs ``store.prefetch`` (blob
+    fetch + crc verify + decode — host CPU work) so the NEXT admission's
+    lookups hit device. Dedup is by block key: a key already queued or
+    already device-resident is skipped at enqueue time.
+
+    ``drain`` blocks until the queue is empty and the worker idle — the
+    server calls it after the segment (overlap stays, outcome becomes
+    deterministic) and tests use it directly."""
+
+    def __init__(self, store: TieredBlockStore):
+        assert hasattr(store, "prefetch"), \
+            "PrefetchWorker needs a TieredBlockStore"
+        self.store = store
+        self._dq: deque = deque()
+        self._queued: set = set()
+        self._cv = threading.Condition()
+        self._busy = False
+        self._stopped = False
+        self.enqueued = 0
+        self.skipped_resident = 0
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="kv-prefetch")
+        self._thread.start()
+
+    def enqueue(self, blocks: Sequence[np.ndarray]) -> int:
+        """Queue token arrays for promotion; returns how many were new."""
+        added = 0
+        with self._cv:
+            if self._stopped:
+                return 0
+            for toks in blocks:
+                key = block_key(toks, self.store.model_tag)
+                if key in self._queued:
+                    continue
+                if key in self.store._entries:
+                    self.skipped_resident += 1
+                    continue
+                self._queued.add(key)
+                self._dq.append((key, toks))
+                added += 1
+            if added:
+                self.enqueued += added
+                self._cv.notify()
+        return added
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._dq and not self._stopped:
+                    self._busy = False
+                    self._cv.notify_all()
+                    self._cv.wait()
+                if self._stopped:
+                    self._busy = False
+                    self._cv.notify_all()
+                    return
+                self._busy = True
+                key, toks = self._dq.popleft()
+            try:
+                self.store.prefetch(toks)
+            finally:
+                with self._cv:
+                    self._queued.discard(key)
+
+    def drain(self, timeout: float = 10.0) -> bool:
+        """Wait for the queue to empty and the worker to go idle."""
+        deadline = time.perf_counter() + timeout
+        with self._cv:
+            while self._dq or self._busy:
+                left = deadline - time.perf_counter()
+                if left <= 0 or self._stopped:
+                    return not (self._dq or self._busy)
+                self._cv.wait(min(left, 0.05))
+        return True
+
+    def stop(self):
+        with self._cv:
+            self._stopped = True
+            self._dq.clear()
+            self._queued.clear()
+            self._cv.notify_all()
+        self._thread.join(timeout=2.0)

@@ -328,6 +328,69 @@ def test_selective_committed_baseline_schema():
 
 
 @pytest.mark.bench
+def test_tiered_json_contract(tmp_path):
+    """tiered.run writes the BENCH_tiered.json schema future PRs compare
+    on — cold-disk / warm-host / warm-device / prefetch / failover token
+    parity is asserted INSIDE run; here we pin the schema and that every
+    tier actually served (smoke-sized, tmpdir disk tier)."""
+    from benchmarks import tiered
+    micro = ModelConfig(name="micro", arch_type="dense", num_layers=2,
+                        d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                        vocab_size=256, dtype="float32",
+                        param_dtype="float32")
+    path = tmp_path / "BENCH_tiered.json"
+    lines = []
+    res = tiered.run(n_requests=6, pool_size=3, plen=16, slots=2,
+                     decode_segment=2, host_mb=8, repeats=1,
+                     query_lens=(8, 12), new_tokens=(2, 4),
+                     emit=lines.append, json_path=str(path), cfg=micro,
+                     kv_dir=str(tmp_path / "kv"))
+    payload = json.loads(path.read_text())
+    assert payload["benchmark"] == "tiered"
+    r = payload["results"]
+    assert all(r["parity"].values())
+    assert {"cold_disk", "warm_host", "warm_device"} == set(r["modes"])
+    assert r["modes"]["cold_disk"]["disk_loads"] > 0
+    assert r["modes"]["warm_host"]["host_hits"] > 0
+    assert r["modes"]["warm_device"]["device_hits"] > 0
+    assert {"off", "on", "delta"} <= set(r["prefetch"])
+    # no strict delta bar on the micro workload — the committed baseline
+    # test below holds prefetch-on strictly above prefetch-off
+    assert r["prefetch"]["on"]["device_hit_at_admission"] >= \
+        r["prefetch"]["off"]["device_hit_at_admission"]
+    assert sum(r["failover"]["fired"].values()) > 0
+    assert r["failover"]["parity"] is True
+    assert r["corpus_blocks"] == res["corpus_blocks"] > 0
+    assert any(line.startswith("tiered_cold_disk,") for line in lines)
+    assert any(line.startswith("tiered_failover,") for line in lines)
+
+
+def test_tiered_committed_baseline_schema():
+    """The committed BENCH_tiered.json satisfies the acceptance bar:
+    bitwise token parity serving cold-from-disk, warm-from-host and
+    warm-on-device; prefetch strictly raising device-hit-at-admission on
+    the Zipf-hot traffic; shard failover under injected faults keeping
+    parity while failovers actually happened."""
+    payload = json.loads(open(os.path.join(REPO, "BENCH_tiered.json")).read())
+    assert payload["benchmark"] == "tiered"
+    r = payload["results"]
+    for mode in ("cold_disk", "warm_host", "warm_device",
+                 "prefetch_on", "prefetch_off", "failover"):
+        assert r["parity"][mode] is True, mode
+    assert r["modes"]["cold_disk"]["disk_loads"] > 0
+    assert r["modes"]["warm_host"]["host_hits"] > 0
+    assert r["modes"]["cold_disk"]["full_misses"] == 0   # nothing re-encoded
+    pf = r["prefetch"]
+    assert pf["on"]["device_hit_at_admission"] > \
+        pf["off"]["device_hit_at_admission"]
+    assert pf["delta"] > 0 and pf["on"]["prefetch_hits"] > 0
+    fo = r["failover"]
+    assert sum(fo["fired"].values()) > 0
+    assert fo["fetch_failovers"] > 0 and fo["shard_down_events"] > 0
+    assert r["shards"] >= 2 and r["replicas"] >= 2
+
+
+@pytest.mark.bench
 def test_run_smoke_mode():
     """`benchmarks/run.py --smoke` exercises every section end to end."""
     env = dict(os.environ)
@@ -346,4 +409,6 @@ def test_run_smoke_mode():
     assert "serving_chaos_r0.2," in out.stdout
     assert "selective_kernel," in out.stdout
     assert "selective_serving_topk," in out.stdout
+    assert "tiered_cold_disk," in out.stdout
+    assert "tiered_failover," in out.stdout
     assert "train_step_struct_168," in out.stdout

@@ -218,3 +218,98 @@ def test_chaos_with_overload_non_shed_parity(setup):
             assert done[r].tokens.tolist() == want[i]
     assert srv.stats()["shed"] == len(shed)
     assert srv.check() == []
+
+
+# ---------------------------------------------------------------------------
+# Tiered-store fault points (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+def _block_nbytes(params, cfg, toks):
+    from repro.launch.precompute import encode_block_kv
+    eng = BlockAttentionEngine(params, cfg, max_seq=128)
+    kv = encode_block_kv(eng, toks)
+    return int(sum(np.asarray(a).nbytes for a in jax.tree.leaves(kv)))
+
+
+def test_forced_tier_fetch_timeout_reencodes_with_parity(setup):
+    """Every host/disk fetch times out: promotion never succeeds, every
+    demoted block re-encodes — tokens identical, failovers counted."""
+    from repro.serving.tiered_store import TierConfig
+    cfg, params, req = setup
+    reqs = [req([0, 1], 8), req([1, 2], 6), req([0, 1], 8), req([2, 0], 7)]
+    eng0 = BlockAttentionEngine(params, cfg, max_seq=128)
+    want = _drain(BlockServer(eng0, num_slots=2, decode_segment=3), reqs)
+
+    faults = FaultInjector(seed=1, rates={"tier_fetch_timeout": 1.0})
+    # device budget ~2 passages: mid-serve demote/promote churn guaranteed
+    eng = BlockAttentionEngine(
+        params, cfg, max_seq=128,
+        store_budget_bytes=2 * _block_nbytes(params, cfg, reqs[0][0]),
+        tiers=TierConfig(host_bytes=8 << 20, shards=2))
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, faults=faults)
+    assert _drain(srv, reqs) == want
+    assert faults.fired["tier_fetch_timeout"] > 0
+    assert eng.store.fetch_failovers > 0
+    assert eng.store.promotions == 0         # nothing ever got through
+
+
+def test_forced_shard_down_fails_over_with_parity(setup):
+    """Every routed replica is marked down: host fetches exhaust, blocks
+    re-encode; ring health accounting records the downs; tokens match."""
+    from repro.serving.tiered_store import TierConfig
+    cfg, params, req = setup
+    reqs = [req([0, 1], 8), req([1, 2], 6), req([0, 1], 8)]
+    eng0 = BlockAttentionEngine(params, cfg, max_seq=128)
+    want = _drain(BlockServer(eng0, num_slots=2, decode_segment=3), reqs)
+
+    faults = FaultInjector(seed=2, rates={"shard_down": 1.0})
+    eng = BlockAttentionEngine(
+        params, cfg, max_seq=128,
+        store_budget_bytes=2 * _block_nbytes(params, cfg, reqs[0][0]),
+        tiers=TierConfig(host_bytes=8 << 20, shards=2, replicas=2))
+    srv = BlockServer(eng, num_slots=2, decode_segment=3, faults=faults)
+    assert _drain(srv, reqs) == want
+    assert faults.fired["shard_down"] > 0
+    assert sum(eng.store.ring.down_events) > 0
+    assert eng.store.fetch_failovers > 0
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_tiered_parity(setup, seed, tmp_path):
+    """All six fault points at once over the FULL stack — paged pool,
+    tiered store with a churning device budget, disk tier, prefetch —
+    against the fault-free run of the same tiered config: bitwise token
+    parity, clean pool, and the store's tier bookkeeping self-consistent."""
+    from repro.serving.tiered_store import TierConfig
+    cfg, params, req = setup
+    rng = np.random.default_rng(seed)
+    reqs = [req(list(rng.choice(3, int(rng.integers(1, 4)),
+                                replace=False)),
+                int(rng.integers(5, 12))) for _ in range(8)]
+    new = [int(rng.integers(2, 7)) for _ in range(8)]
+    budget = 2 * _block_nbytes(params, cfg, reqs[0][0])
+
+    def serve(faults):
+        eng = BlockAttentionEngine(
+            params, cfg, max_seq=128, store_verify_every=2,
+            store_budget_bytes=budget,
+            tiers=TierConfig(host_bytes=8 << 20, shards=2, replicas=2,
+                             kv_dir=str(tmp_path / f"kv{seed}")))
+        srv = BlockServer(eng, num_slots=2, decode_segment=3, paged=True,
+                          page_size=8, pool_verify_every=2, faults=faults,
+                          prefetch=True)
+        rids = [srv.submit(b, max_new_tokens=nt)
+                for b, nt in zip(reqs, new)]
+        done = {c.rid: c for c in srv.run()}
+        toks = [done[r].tokens.tolist() for r in rids]
+        assert srv.check() == [], srv.check()
+        eng.store.clear()
+        assert int(srv.pool._refs[1:].sum()) == 0
+        srv.shutdown()
+        return toks
+
+    want = serve(None)
+    got = serve(FaultInjector(seed=seed, rates={p: 0.2 for p in POINTS
+                                                if p != "admission_delay"}
+                              | {"admission_delay": 0.5}))
+    assert got == want

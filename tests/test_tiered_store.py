@@ -1,0 +1,372 @@
+"""Tiered KV block store (DESIGN.md §11): demote-on-evict, verified
+promotion, placement ring, async prefetch, and tiered serving parity.
+
+The contract under test: the device store's LRU evictions land byte-exact
+in the host tier (and spill to disk), a device miss promotes back through
+crc re-verification — so a tiered server's tokens are bitwise identical
+to a single-tier server's — and every degraded path (corrupt replica,
+shard down, fetch timeout) fails over toward re-encode without touching
+tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kv_codec
+from repro.core.kv_cache import PagedKVPool, block_key, kv_checksum
+from repro.models import api
+from repro.serving.engine import BlockAttentionEngine
+from repro.serving.faults import FaultInjector
+from repro.serving.server import BlockServer
+from repro.serving.tiered_store import (PlacementRing, PrefetchWorker,
+                                        TierConfig, TieredBlockStore)
+
+from conftest import tiny_dense
+
+
+def _kv(seed=0, n=128):
+    rng = np.random.default_rng(seed)
+    return {"k": jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+            "v": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+
+
+ENT_BYTES = 2 * 128 * 4          # nbytes of one _kv() entry
+
+
+def _store(n_entries=2, **tier_kw):
+    return TieredBlockStore(budget_bytes=n_entries * ENT_BYTES,
+                            tiers=TierConfig(**tier_kw))
+
+
+def _toks(i):
+    return np.full(6, i, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# demote / promote
+# ---------------------------------------------------------------------------
+def test_eviction_demotes_to_host_tier():
+    st = _store(n_entries=2, shards=1)
+    for i in range(3):
+        st.insert(_toks(i), _kv(i))
+    assert st.evictions == 1 and st.demotions == 1
+    assert st.host_entries == 1          # block 0's blob caught, not dropped
+    assert len(st) == 2
+
+
+def test_promotion_reclassifies_miss_and_is_byte_exact():
+    st = _store(n_entries=2, shards=1)
+    kv0 = _kv(0)
+    for i in range(3):
+        st.insert(_toks(i), _kv(i))
+    ent = st.lookup(_toks(0))            # demoted -> promote, NOT re-encode
+    assert ent is not None
+    assert st.promotions == 1 and st.host_hits == 1
+    assert st.misses == 0 and st.hits == 0       # tier hit is neither
+    assert kv_checksum(ent.kv) == kv_checksum(kv0)
+    for a, b in zip(jax.tree.leaves(ent.kv), jax.tree.leaves(kv0)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_corrupt_replica_dropped_next_replica_serves():
+    st = _store(n_entries=2, shards=2, replicas=2)
+    key = block_key(_toks(0), st.model_tag)
+    st.demote_raw(key, _kv(0))           # blob on both replicas
+    first = st.ring.route(key)[0]
+    blob = bytearray(st.shards[first]._blobs[key])
+    blob[-1] ^= 0x10
+    st.shards[first]._blobs[key] = bytes(blob)
+
+    assert st.lookup(_toks(0)) is not None       # replica 2 serves
+    assert st.tier_corrupt == 1 and st.host_hits == 1
+    assert key not in st.shards[first]           # poisoned copy dropped
+    assert st.fetch_failovers == 0               # a replica DID serve
+
+
+def test_all_replicas_corrupt_falls_through_to_reencode():
+    st = _store(n_entries=4, shards=2, replicas=2)
+    key = block_key(_toks(0), st.model_tag)
+    st.demote_raw(key, _kv(0))
+    for sh in st.shards:
+        if key in sh:
+            b = bytearray(sh._blobs[key])
+            b[-1] ^= 0x10
+            sh._blobs[key] = bytes(b)
+    assert st.lookup(_toks(0)) is None
+    assert st.tier_corrupt == 2 and st.fetch_failovers == 1
+    assert st.host_entries == 0
+    st.insert(_toks(0), _kv(0))                  # the re-encode heals it
+    assert st.lookup(_toks(0)) is not None
+
+
+def test_disk_tier_promotion(tmp_path):
+    st = _store(n_entries=4, shards=1, kv_dir=str(tmp_path))
+    key = block_key(_toks(0), st.model_tag)
+    st.disk.put_blob(key, kv_codec.encode_kv(
+        jax.tree.map(np.asarray, _kv(0))))       # precomputed file
+    ent = st.lookup(_toks(0))
+    assert ent is not None
+    assert st.disk_loads == 1 and st.host_hits == 0
+    assert kv_checksum(ent.kv) == kv_checksum(_kv(0))
+
+
+def test_host_eviction_spills_to_disk(tmp_path):
+    blob_len = len(kv_codec.encode_kv(jax.tree.map(np.asarray, _kv(0))))
+    st = TieredBlockStore(
+        budget_bytes=4 * ENT_BYTES,
+        tiers=TierConfig(host_bytes=blob_len + 8, shards=1,
+                         kv_dir=str(tmp_path)))
+    k0, k1 = (block_key(_toks(i), st.model_tag) for i in range(2))
+    st.demote_raw(k0, _kv(0))
+    st.demote_raw(k1, _kv(1))            # budget for ~1 blob: k0 spills
+    assert st.disk_spills == 1 and k0 in st.disk and k0 not in st.shards[0]
+    ent = st.lookup(_toks(0))            # disk catches the spilled block
+    assert ent is not None and st.disk_loads == 1
+    assert kv_checksum(ent.kv) == kv_checksum(_kv(0))
+
+
+def test_demote_all_skips_pinned():
+    st = _store(n_entries=8, shards=1)
+    for i in range(3):
+        st.insert(_toks(i), _kv(i))
+    st.pin(_toks(2))
+    st.demote_all()
+    assert len(st) == 1 and st.peek(_toks(2)) is not None
+    assert st.host_entries == 2 and st.demotions == 2
+    st.unpin(_toks(2))
+    assert st.lookup(_toks(0)) is not None       # round-trips back
+
+
+def test_stats_shape_and_reset():
+    st = _store(n_entries=1, shards=2, replicas=1)
+    st.insert(_toks(0), _kv(0))
+    st.insert(_toks(1), _kv(1))
+    st.lookup(_toks(0))
+    s = st.stats()
+    # insert(1) demotes 0; promoting 0 back evicts-and-demotes 1
+    assert s["demotions"] == 2 and s["promotions"] == 1
+    assert {"host_hits", "disk_spills", "tier_corrupt",
+            "prefetch_promotions"} <= set(s)
+    assert len(s["tiers"]["shards"]) == 2
+    assert s["tiers"]["ring"]["shards"] == 2
+    assert s["tiers"]["disk"] is None
+    st.reset_stats()
+    s = st.stats()
+    assert s["demotions"] == s["promotions"] == s["host_hits"] == 0
+    assert s["hits"] == s["misses"] == s["prefetch_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# placement ring
+# ---------------------------------------------------------------------------
+def test_ring_placement_stable_and_spread():
+    ring = PlacementRing(shards=4, replicas=2)
+    keys = [block_key(np.full(4, i, np.int32)) for i in range(200)]
+    primaries = [ring.replicas_for(k)[0] for k in keys]
+    assert primaries == [ring.replicas_for(k)[0] for k in keys]  # stable
+    for s in range(4):
+        assert primaries.count(s) > 10   # vnodes keep the split non-degenerate
+    for k in keys[:20]:
+        reps = ring.replicas_for(k)
+        assert len(reps) == 2 and len(set(reps)) == 2
+
+
+def test_ring_down_cooldown_and_recovery():
+    ring = PlacementRing(shards=2, replicas=2, down_cooldown=3)
+    key = block_key(np.arange(4, dtype=np.int32))
+    full = ring.route(key)
+    ring.mark_down(full[0])
+    assert ring.is_down(full[0]) and ring.down_events[full[0]] == 1
+    assert full[0] not in ring.route(key)        # decision 1
+    assert full[0] not in ring.route(key)        # decision 2
+    assert full[0] not in ring.route(key)        # decision 3
+    assert full[0] in ring.route(key)            # cooled down, rejoined
+
+
+def test_ring_routes_by_ewma_latency():
+    ring = PlacementRing(shards=2, replicas=2)
+    key = block_key(np.arange(4, dtype=np.int32))
+    a, b = ring.replicas_for(key)
+    for _ in range(4):
+        ring.record(a, 0.050)
+        ring.record(b, 0.001)
+    assert ring.route(key) == [b, a]             # faster replica first
+    ring.record(b, 1.0, ok=False)                # failures don't poison EWMA
+    assert ring.failures[b] == 1
+    assert ring.route(key) == [b, a]
+
+
+# ---------------------------------------------------------------------------
+# fault points (forced, rate=1.0 — deterministic single-point checks)
+# ---------------------------------------------------------------------------
+def test_shard_down_fault_fails_over_to_disk(tmp_path):
+    st = _store(n_entries=4, shards=2, replicas=2, kv_dir=str(tmp_path))
+    key = block_key(_toks(0), st.model_tag)
+    st.demote_raw(key, _kv(0))
+    st.disk.put_blob(key, kv_codec.encode_kv(
+        jax.tree.map(np.asarray, _kv(0))))
+    st.faults = FaultInjector(seed=0, rates={"shard_down": 1.0})
+    ent = st.lookup(_toks(0))                    # every host replica down
+    assert ent is not None and st.disk_loads == 1
+    assert sum(st.ring.down_events) == 2
+    assert st.fetch_failovers == 0               # disk served
+
+
+def test_fetch_timeout_exhausts_to_reencode():
+    st = _store(n_entries=4, shards=2, replicas=2)
+    key = block_key(_toks(0), st.model_tag)
+    st.demote_raw(key, _kv(0))
+    st.faults = FaultInjector(seed=0, rates={"tier_fetch_timeout": 1.0})
+    assert st.lookup(_toks(0)) is None           # all attempts time out
+    assert st.fetch_failovers == 1
+    assert sum(st.ring.failures) >= 1
+    st.faults = None
+    assert st.lookup(_toks(0)) is not None       # blobs intact, next is fine
+
+
+# ---------------------------------------------------------------------------
+# async prefetch
+# ---------------------------------------------------------------------------
+def test_prefetch_worker_promotes_and_counts_hits():
+    st = _store(n_entries=8, shards=1)
+    st.insert(_toks(0), _kv(0))
+    st.demote_all()
+    w = PrefetchWorker(st)
+    try:
+        assert w.enqueue([_toks(0)]) == 1
+        assert w.drain()
+        assert st.prefetch_promotions == 1
+        assert st.hits == st.misses == 0         # NO demand accounting
+        ent = st.lookup(_toks(0))                # demand touch of prefetched
+        assert ent is not None
+        assert st.prefetch_hits == 1 and st.hits == 1
+        st.lookup(_toks(0))
+        assert st.prefetch_hits == 1             # counted once per promote
+    finally:
+        w.stop()
+
+
+def test_prefetch_worker_dedups_resident_and_queued():
+    st = _store(n_entries=8, shards=1)
+    st.insert(_toks(0), _kv(0))                  # device-resident
+    w = PrefetchWorker(st)
+    try:
+        assert w.enqueue([_toks(0), _toks(0)]) == 0
+        assert w.skipped_resident >= 1
+        assert w.drain()
+        assert st.prefetch_promotions == 0
+    finally:
+        w.stop()
+
+
+def test_prefetch_miss_everywhere_is_harmless():
+    st = _store(n_entries=8, shards=1)
+    assert st.prefetch(_toks(9)) is False        # nowhere to fetch from
+    assert st.misses == 0                        # no demand accounting
+    assert st.fetch_failovers == 0               # nothing failed, just cold
+
+
+# ---------------------------------------------------------------------------
+# pool tier hooks
+# ---------------------------------------------------------------------------
+def _mk_pool(num_pages=6, ps=4):
+    slabs = {"g0": {"k": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32),
+                    "v": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32)}}
+    return PagedKVPool(slabs, num_pages, ps)
+
+
+def test_pool_on_reclaim_demotes_zero_ref_group():
+    pool = _mk_pool(num_pages=6, ps=4)           # 5 allocatable
+    demoted = []
+    pool.on_reclaim = lambda key, g: demoted.append(key) or True
+    pa = pool.alloc(2)
+    pool.register(("a", 0), pa, 7)               # zero-ref: reclaimable
+    pool.alloc(5)                                # pressure -> reclaim 'a'
+    assert demoted == [("a", 0)]
+    assert pool.demotions == 1 and pool.reclaims == 1
+
+
+def test_pool_reset_stats():
+    pool = _mk_pool(num_pages=4, ps=4)
+    got = pool.alloc(3)
+    pool.retain(got)
+    assert pool.alloc(1) is None                 # alloc_failure
+    pool.free(got)
+    pool.demotions = 3
+    pool.promotions = 2
+    pool.reset_stats()
+    s = pool.stats()
+    for k in ("page_hits", "page_misses", "reclaims", "alloc_failures",
+              "integrity_failures", "demotions", "promotions",
+              "disk_loads", "prefetch_hits", "fetch_failovers"):
+        assert s[k] == 0, k
+    assert s["num_pages"] == 4                   # geometry survives reset
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: tiered serving parity + warm-disk startup
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served():
+    cfg = tiny_dense()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    pool = [rng.integers(5, cfg.vocab_size, 16).astype(np.int32)
+            for _ in range(3)]
+    reqs = [pool[:1 + r % 3]
+            + [rng.integers(5, cfg.vocab_size, 8).astype(np.int32)]
+            for r in range(5)]
+
+    def drain(engine, **srv_kw):
+        srv = BlockServer(engine, num_slots=2, decode_segment=2, **srv_kw)
+        rids = [srv.submit(b, max_new_tokens=4) for b in reqs]
+        done = {c.rid: c for c in srv.run()}
+        return [done[r].tokens.tolist() for r in rids]
+
+    ref = drain(BlockAttentionEngine(params, cfg, max_seq=128))
+    return cfg, params, pool, reqs, drain, ref
+
+
+def test_tiered_server_token_parity(served):
+    """Device budget of ~1 passage forces demote/promote churn mid-serve;
+    tokens must still match the uncapped single-tier run bit for bit."""
+    cfg, params, pool, reqs, drain, ref = served
+    eng = BlockAttentionEngine(
+        params, cfg, max_seq=128, store_budget_bytes=3 * ENT_BYTES,
+        tiers=TierConfig(host_bytes=8 << 20, shards=2))
+    assert drain(eng) == ref
+    assert eng.store.demotions > 0 and eng.store.promotions > 0
+
+
+def test_tiered_server_prefetch_parity(served):
+    cfg, params, pool, reqs, drain, ref = served
+    eng = BlockAttentionEngine(params, cfg, max_seq=128,
+                               tiers=TierConfig(host_bytes=8 << 20))
+    assert drain(eng, prefetch=True) == ref
+
+
+def test_warm_disk_startup_zero_reencode(served, tmp_path):
+    """TurboRAG path: precompute the corpus, start a FRESH engine on the
+    .kvb directory — the first request re-encodes only its query block."""
+    from repro.launch.precompute import precompute_blocks, read_manifest
+    cfg, params, pool, reqs, drain, ref = served
+    eng0 = BlockAttentionEngine(params, cfg, max_seq=128)
+    manifest = precompute_blocks(eng0, pool, str(tmp_path))
+    assert manifest["blocks_written"] == 3
+    assert read_manifest(str(tmp_path))["model_tag"] == cfg.name
+
+    eng = BlockAttentionEngine(
+        params, cfg, max_seq=128,
+        tiers=TierConfig(host_bytes=8 << 20, kv_dir=str(tmp_path)))
+    srv = BlockServer(eng, num_slots=2, decode_segment=2)
+    rid = srv.submit(reqs[0], max_new_tokens=4)
+    done = {c.rid: c for c in srv.run()}
+    assert done[rid].tokens.tolist() == ref[0]
+    assert done[rid].prefill_tokens_computed == 8    # query only
+    assert eng.store.disk_loads == len(reqs[0]) - 1
+    assert eng.store.misses == 0     # query blocks never hit the store
+
+    # idempotent precompute: re-run skips everything
+    m2 = precompute_blocks(eng0, pool, str(tmp_path))
+    assert m2["blocks_written"] == 0 and m2["blocks_skipped"] == 3

@@ -16,6 +16,10 @@
   DESIGN §11 tiers -> tiered (device/host/disk KV store: cold-disk /
                       warm-host / warm-device parity, prefetch
                       device-hit-at-admission, shard failover)
+  DESIGN §12 traffic -> sustained (Zipf/session traffic at swept offered
+                      load: cost-aware eviction + cache-aware admission
+                      vs LRU+FIFO on hit-at-admission / p95 TTFT /
+                      goodput / shed rate, token parity asserted)
   §2.3 training  -> train_step (masked vs structural ragged block training)
   Table 1 / Fig. 4 -> accuracy_recovery (long-running; run separately:
                       PYTHONPATH=src python -m benchmarks.accuracy_recovery)
@@ -39,10 +43,10 @@ def main() -> None:
     ap.add_argument("--sections", nargs="+",
                     default=["ttft", "cache", "kernels", "batch", "serving",
                              "shared", "chaos", "selective", "tiered",
-                             "train"],
+                             "sustained", "train"],
                     choices=["ttft", "cache", "kernels", "batch", "serving",
                              "shared", "chaos", "selective", "tiered",
-                             "train"])
+                             "sustained", "train"])
     ap.add_argument("--lengths", type=int, nargs="+",
                     default=[50, 512, 1024, 2048])
     ap.add_argument("--repeats", type=int, default=3)
@@ -121,6 +125,15 @@ def main() -> None:
                        "repeats": 1, "query_lens": (8, 12),
                        "new_tokens": (2, 4)}
                       if args.smoke else {}))
+    if "sustained" in args.sections:
+        from benchmarks import serving_latency
+        serving_latency.run_sustained(**({"n_requests": 8, "pool_size": 5,
+                                          "passages_per_req": 2, "slots": 2,
+                                          "decode_segment": 2, "repeats": 1,
+                                          "gaps": (0.03, 0.015),
+                                          "max_queue": 6, "passage_len": 16,
+                                          "query_len": 8, "new_tokens": 3}
+                                         if args.smoke else {}))
     if "train" in args.sections:
         from benchmarks import train_step
         train_step.run([168] if args.smoke else [512, 2048],

@@ -70,6 +70,75 @@ def pooled_key(kv: Any) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Eviction policies (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+EVICTION_POLICIES = ("lru", "cost_aware")
+
+
+class CostAwareTracker:
+    """GDSF-style popularity/cost bookkeeping for victim selection.
+
+    priority(key) = clock + freq(key) × cost ÷ size
+
+    ``freq`` is an op-count-decayed hit counter (halves every
+    ``half_life_ops`` tracked operations — never wall clock, so scores
+    are deterministic for a given op sequence); ``cost`` is the
+    recompute-cost proxy (block tokens: re-encode work is linear-ish in
+    tokens), ``size`` the resident footprint the eviction reclaims.
+    ``clock`` is the classic GreedyDual aging term: it rises to each
+    evicted victim's priority, so long-idle entries whose decayed
+    frequency no longer clears the watermark become evictable even if
+    they were once hot.
+
+    One tracker instance serves either the ``BlockKVStore`` (cost =
+    tokens, size = entry bytes) or the ``PagedKVPool`` (cost = tokens,
+    size = pages). Under ``policy="lru"`` no tracker exists at all —
+    the historical first-unpinned-in-LRU-order scan runs unchanged.
+    """
+
+    def __init__(self, half_life_ops: int = 256):
+        self.half_life_ops = max(int(half_life_ops), 1)
+        self.clock = 0.0
+        self._ops = 0
+        self._freq: Dict[Any, Tuple[float, int]] = {}
+
+    def touch(self, key: Any):
+        """Record one access (lookup hit / insert / acquire)."""
+        self._ops += 1
+        f, last = self._freq.get(key, (0.0, self._ops))
+        decay = 0.5 ** ((self._ops - last) / self.half_life_ops)
+        self._freq[key] = (f * decay + 1.0, self._ops)
+
+    def forget(self, key: Any):
+        self._freq.pop(key, None)
+
+    def freq(self, key: Any) -> float:
+        f, last = self._freq.get(key, (0.0, self._ops))
+        return f * 0.5 ** ((self._ops - last) / self.half_life_ops)
+
+    def score(self, key: Any, cost: float, size: float) -> float:
+        return self.clock + self.freq(key) * float(cost) \
+            / max(float(size), 1.0)
+
+    def credit_eviction(self, score: float):
+        """GreedyDual aging: the clock rises to the evicted priority."""
+        if score > self.clock:
+            self.clock = score
+
+    def clear(self):
+        self.clock = 0.0
+        self._ops = 0
+        self._freq.clear()
+
+
+def _check_policy(policy: str) -> str:
+    if policy not in EVICTION_POLICIES:
+        raise ValueError(f"unknown eviction policy {policy!r}; "
+                         f"expected one of {EVICTION_POLICIES}")
+    return policy
+
+
+# ---------------------------------------------------------------------------
 # Device-side decode cache (pytree)
 # ---------------------------------------------------------------------------
 class DecodeKVCache(NamedTuple):
@@ -210,10 +279,18 @@ class PagedKVPool:
     """
 
     def __init__(self, slabs: Dict[str, Any], num_pages: int, page_size: int,
-                 verify_every: int = 0):
+                 verify_every: int = 0, policy: str = "lru",
+                 policy_half_life: int = 256):
         self.slabs = slabs
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
+        # victim-selection policy for zero-ref group reclaim (DESIGN.md
+        # §12): "lru" keeps the historical first-zero-ref-in-dict-order
+        # scan bitwise-identical; "cost_aware" reclaims the lowest
+        # GDSF score (decayed popularity × tokens ÷ pages) first
+        self.policy = _check_policy(policy)
+        self._tracker = (CostAwareTracker(policy_half_life)
+                         if policy == "cost_aware" else None)
         if self.num_pages < 2:
             raise ValueError("PagedKVPool needs >= 2 pages (page 0 is sink)")
         self._free: List[int] = list(range(1, self.num_pages))
@@ -317,16 +394,42 @@ class PagedKVPool:
             assert self._refs[p] == 0, f"freeing referenced page {p}"
         self._free.extend(int(p) for p in pages)
 
-    def _reclaim_one(self) -> bool:
+    def _select_reclaim(self) -> Optional[Tuple[str, int]]:
+        """Pick the next zero-ref group to reclaim, or None.
+
+        "lru": the first zero-ref group in directory order (lookup /
+        acquire ``move_to_end`` keep that order LRU) — exactly the
+        historical scan. "cost_aware": the zero-ref group with the
+        lowest GDSF score; ties keep directory (LRU) order via strict
+        ``<`` during the scan, so selection is deterministic."""
+        if self._tracker is None:
+            for key, g in self._groups.items():
+                if g.refs == 0:
+                    return key
+            return None
+        victim, best = None, None
         for key, g in self._groups.items():
-            if g.refs == 0:
-                del self._groups[key]
-                if self.on_reclaim is not None and self.on_reclaim(key, g):
-                    self.demotions += 1
-                self._free.extend(g.pages)
-                self.reclaims += 1
-                return True
-        return False
+            if g.refs != 0:
+                continue
+            s = self._tracker.score(key, g.num_tokens, len(g.pages))
+            if best is None or s < best:
+                victim, best = key, s
+        if victim is not None:
+            self._tracker.credit_eviction(best)
+        return victim
+
+    def _reclaim_one(self) -> bool:
+        key = self._select_reclaim()
+        if key is None:
+            return False
+        g = self._groups.pop(key)
+        if self.on_reclaim is not None and self.on_reclaim(key, g):
+            self.demotions += 1
+        if self._tracker is not None:
+            self._tracker.forget(key)
+        self._free.extend(g.pages)
+        self.reclaims += 1
+        return True
 
     # -- shared-group directory ---------------------------------------
     def lookup(self, key: Tuple[str, int]) -> Optional[_PageGroup]:
@@ -351,6 +454,8 @@ class PagedKVPool:
                 self.page_misses += 1
                 return None                    # miss path: re-encode
         self._groups.move_to_end(key)
+        if self._tracker is not None:
+            self._tracker.touch(key)
         self.page_hits += 1
         return g
 
@@ -387,6 +492,8 @@ class PagedKVPool:
         g = _PageGroup(pages=tuple(int(p) for p in pages),
                        num_tokens=int(num_tokens))
         self._groups[key] = g
+        if self._tracker is not None:
+            self._tracker.touch(key)
         return g
 
     def acquire(self, key: Tuple[str, int]) -> _PageGroup:
@@ -395,6 +502,8 @@ class PagedKVPool:
         for p in g.pages:
             self._refs[p] += 1
         self._groups.move_to_end(key)
+        if self._tracker is not None:
+            self._tracker.touch(key)
         return g
 
     def release(self, key: Tuple[str, int]):
@@ -413,6 +522,8 @@ class PagedKVPool:
             return
         assert g.refs == 0, f"dropping referenced group {key}"
         del self._groups[key]
+        if self._tracker is not None:
+            self._tracker.forget(key)
         self._free.extend(g.pages)
 
     def check(self, retained: Optional[Sequence[int]] = None) -> List[str]:
@@ -482,6 +593,7 @@ class PagedKVPool:
 
     def stats(self) -> Dict[str, int]:
         return {"num_pages": self.num_pages, "page_size": self.page_size,
+                "policy": self.policy,
                 "used_pages": self.used_pages, "free_pages": self.free_pages,
                 "unique_blocks": self.unique_blocks,
                 "resident_block_bytes": self.resident_block_bytes,
@@ -546,13 +658,28 @@ class BlockKVStore:
     succeeds with correct tokens."""
 
     def __init__(self, budget_bytes: int = 8 << 30, model_tag: str = "",
-                 verify_every: int = 0):
+                 verify_every: int = 0, policy: str = "lru",
+                 policy_half_life: int = 256, window_decay: float = 0.98):
         self._entries: "OrderedDict[str, BlockEntry]" = OrderedDict()
         self.budget_bytes = budget_bytes
         self.model_tag = model_tag
         self.verify_every = int(verify_every)
+        # eviction policy (DESIGN.md §12): "lru" keeps the historical
+        # first-unpinned-in-LRU-order victim scan bitwise-identical;
+        # "cost_aware" evicts the lowest GDSF score (decayed popularity
+        # × block tokens ÷ resident bytes) first
+        self.policy = _check_policy(policy)
+        self._tracker = (CostAwareTracker(policy_half_life)
+                         if policy == "cost_aware" else None)
         self.hits = 0
         self.misses = 0
+        # rolling-window (decayed) hit/miss counters: each lookup decays
+        # both by ``window_decay`` then adds 1 to its outcome, so
+        # ``window_hit_rate`` tracks the CURRENT traffic mix (~1/(1-d)
+        # lookups of memory) instead of the since-boot average
+        self.window_decay = float(window_decay)
+        self._w_hits = 0.0
+        self._w_misses = 0.0
         self.evictions = 0
         self.eviction_skips = 0
         self.integrity_failures = 0
@@ -590,12 +717,25 @@ class BlockKVStore:
         tot = self.hits + self.misses
         return self.hits / tot if tot else 0.0
 
+    @property
+    def window_hit_rate(self) -> float:
+        tot = self._w_hits + self._w_misses
+        return self._w_hits / tot if tot else 0.0
+
+    def _note_window(self, hit: bool):
+        """Decay-and-bump the rolling hit/miss window (one per lookup)."""
+        d = self.window_decay
+        self._w_hits = self._w_hits * d + (1.0 if hit else 0.0)
+        self._w_misses = self._w_misses * d + (0.0 if hit else 1.0)
+
     # -- core ops ------------------------------------------------------
     def _drop_entry(self, key: str, ent: BlockEntry):
         """Remove an entry outright (integrity failure / injected loss);
         page-backed entries release their pool ref through ``on_evict``."""
         self._entries.pop(key)
         self._bytes -= ent.nbytes
+        if self._tracker is not None:
+            self._tracker.forget(key)
         if self.on_evict is not None:
             self.on_evict(key, ent)
 
@@ -604,6 +744,7 @@ class BlockKVStore:
         ent = self._entries.get(key)
         if ent is None:
             self.misses += 1
+            self._note_window(False)
             return None
         self._lookups += 1
         # -- fault injection: only unpinned entries can be yanked (a
@@ -614,6 +755,7 @@ class BlockKVStore:
                 # lost KV: report a miss; the caller re-encodes and the
                 # refreshed insert replaces this entry
                 self.misses += 1
+                self._note_window(False)
                 return None
             if self.faults.fire("store_corrupt"):
                 if ent.kv is not None and ent.checksum is not None:
@@ -632,6 +774,7 @@ class BlockKVStore:
                     self._drop_entry(key, ent)
                     self.integrity_failures += 1
                     self.misses += 1
+                    self._note_window(False)
                     return None
         # -- integrity verification (cadence, or forced by injection) --
         if (ent.kv is not None and ent.checksum is not None
@@ -649,9 +792,13 @@ class BlockKVStore:
                 self._drop_entry(key, ent)
                 self.integrity_failures += 1
                 self.misses += 1
+                self._note_window(False)
                 return None                    # miss path: re-encode
         self._entries.move_to_end(key)   # LRU touch
+        if self._tracker is not None:
+            self._tracker.touch(key)
         self.hits += 1
+        self._note_window(True)
         return ent
 
     def verify_pending(self) -> int:
@@ -678,6 +825,14 @@ class BlockKVStore:
         block must not perturb cache statistics or cadence counters)."""
         return self._entries.get(block_key(tokens, self.model_tag))
 
+    def resident(self, tokens: np.ndarray) -> bool:
+        """Stat-free residency probe: True when a lookup of this block
+        would be served without a re-encode. The cache-aware admission
+        predicate (DESIGN.md §12) — like ``peek`` it must not perturb
+        LRU order, hit/miss counters or the policy tracker. The tiered
+        subclass widens this to count host-tier presence too."""
+        return block_key(tokens, self.model_tag) in self._entries
+
     def insert(self, tokens: np.ndarray, kv: Any) -> BlockEntry:
         key = block_key(tokens, self.model_tag)
         nbytes = int(sum(a.size * a.dtype.itemsize
@@ -693,6 +848,8 @@ class BlockKVStore:
                 self.on_evict(key, old)    # drop the store-held pool ref
         self._entries[key] = ent
         self._entries.move_to_end(key)
+        if self._tracker is not None:
+            self._tracker.touch(key)
         self._bytes += nbytes
         self._evict()
         return ent
@@ -733,21 +890,56 @@ class BlockKVStore:
         ent.nbytes = 0
         return ent
 
-    def _evict(self):
-        while self._bytes > self.budget_bytes and len(self._entries) > 1:
-            victim = None
+    def _policy_score(self, key: str, ent: BlockEntry) -> Optional[float]:
+        """Current GDSF priority of an entry (None under plain LRU).
+        Also the demotion-ordering score: the tiered subclass hands it
+        to the host tier so COLD blobs spill to disk before hot ones."""
+        if self._tracker is None:
+            return None
+        return self._tracker.score(key, ent.num_tokens, ent.nbytes)
+
+    def _select_victim(self) -> Optional[str]:
+        """One victim-selection pass over the entries, or None when
+        everything is pinned.
+
+        "lru": the first unpinned entry in LRU order, counting each
+        pinned entry walked past as an ``eviction_skip`` — exactly the
+        historical inline loop (tests pin both the victim sequence and
+        the skip accounting, so this branch must stay bitwise-stable).
+        "cost_aware": the unpinned entry with the LOWEST GDSF score;
+        the scan uses strict ``<`` in dict order so ties deterministically
+        keep the least-recently-used candidate. Pinned entries count
+        skips the same way (they are considered and rejected)."""
+        if self._tracker is None:
             for key, ent in self._entries.items():
                 if ent.refs > 0:          # pinned: in flight, skip
                     self.eviction_skips += 1
                     continue
-                victim = key
-                break
+                return key
+            return None
+        victim, best = None, None
+        for key, ent in self._entries.items():
+            if ent.refs > 0:
+                self.eviction_skips += 1
+                continue
+            s = self._tracker.score(key, ent.num_tokens, ent.nbytes)
+            if best is None or s < best:
+                victim, best = key, s
+        if victim is not None:
+            self._tracker.credit_eviction(best)
+        return victim
+
+    def _evict(self):
+        while self._bytes > self.budget_bytes and len(self._entries) > 1:
+            victim = self._select_victim()
             if victim is None:            # everything pinned: over budget
                 break                     # beats corrupting live requests
             old = self._entries.pop(victim)
             self._bytes -= old.nbytes
             self.evictions += 1
             self._demote(victim, old)
+            if self._tracker is not None:
+                self._tracker.forget(victim)
             if self.on_evict is not None:
                 self.on_evict(victim, old)
 
@@ -759,8 +951,12 @@ class BlockKVStore:
 
     def stats(self) -> Dict[str, Any]:
         return {"entries": len(self._entries), "bytes": self._bytes,
+                "policy": self.policy,
                 "hits": self.hits, "misses": self.misses,
                 "hit_rate": round(self.hit_rate, 4),
+                "window_hits": round(self._w_hits, 4),
+                "window_misses": round(self._w_misses, 4),
+                "window_hit_rate": round(self.window_hit_rate, 4),
                 "evictions": self.evictions,
                 "eviction_skips": self.eviction_skips,
                 "integrity_failures": self.integrity_failures,
@@ -773,6 +969,7 @@ class BlockKVStore:
 
     def reset_stats(self):
         self.hits = self.misses = 0
+        self._w_hits = self._w_misses = 0.0
         self.evictions = self.eviction_skips = 0
         self.integrity_failures = 0
         self.unpin_underflow = 0
@@ -786,4 +983,6 @@ class BlockKVStore:
                 self.on_evict(key, ent)
         self._entries.clear()
         self._bytes = 0
+        if self._tracker is not None:
+            self._tracker.clear()
         self.reset_stats()

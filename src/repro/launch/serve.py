@@ -131,6 +131,21 @@ def main():
                     help="async prefetch: promote queued requests' "
                          "blocks host/disk -> device during decode "
                          "segments (needs --kv-dir or --shards tiers)")
+    # cache-aware serving (DESIGN.md §12)
+    ap.add_argument("--policy", choices=("lru", "cost_aware"),
+                    default="lru",
+                    help="KV store eviction policy: lru (history) or "
+                         "cost_aware (GDSF: frequency-decayed popularity "
+                         "x cost / size; also orders host-tier spills)")
+    ap.add_argument("--cache-aware", action="store_true",
+                    help="admission prefers requests whose prefix blocks "
+                         "are tier-resident (device or host); reordering "
+                         "never changes any request's tokens")
+    ap.add_argument("--max-starve-s", type=float, default=None,
+                    help="starvation escape hatch: once the oldest "
+                         "queued request has waited this long, one "
+                         "admission pop ignores bucketing/residency and "
+                         "takes strict arrival order")
     ap.add_argument("--precompute", action="store_true",
                     help="write the synthetic corpus's block KV to "
                          "--kv-dir and exit (offline TurboRAG pass); "
@@ -164,7 +179,8 @@ def main():
         manifest = precompute_blocks(engine, corpus, args.kv_dir)
         print(json.dumps(dict(manifest, kv_dir=args.kv_dir)))
         return
-    engine = BlockAttentionEngine(params, cfg, max_seq=max_seq, tiers=tiers)
+    engine = BlockAttentionEngine(params, cfg, max_seq=max_seq, tiers=tiers,
+                                  store_policy=args.policy)
 
     rng = np.random.default_rng(args.seed)
     stream = list(make_request_stream(
@@ -217,7 +233,9 @@ def main():
                              shed_policy=args.shed_policy,
                              select_topk=args.topk,
                              faults=faults,
-                             prefetch=args.prefetch and tiers is not None)
+                             prefetch=args.prefetch and tiers is not None,
+                             cache_aware=args.cache_aware,
+                             max_starve_s=args.max_starve_s)
         cb = (lambda ev: print(json.dumps({
             "rid": ev.rid, "token": int(ev.token), "index": ev.index,
             "finished": ev.finished}), flush=True)) if args.stream else None

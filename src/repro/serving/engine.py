@@ -90,7 +90,8 @@ class BlockAttentionEngine:
                  reencode_positions: bool = True,
                  rope_backend: str = "auto",
                  store_verify_every: int = 0,
-                 tiers=None):
+                 tiers=None,
+                 store_policy: str = "lru"):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
@@ -107,11 +108,16 @@ class BlockAttentionEngine:
             from repro.serving.tiered_store import TieredBlockStore
             self.store = TieredBlockStore(
                 store_budget_bytes, model_tag=cfg.name,
-                verify_every=store_verify_every, tiers=tiers)
+                verify_every=store_verify_every, tiers=tiers,
+                policy=store_policy)
         else:
+            # store_policy: eviction policy for the block store
+            # (DESIGN.md §12) — "lru" (default, historical order) or
+            # "cost_aware" (GDSF: popularity × tokens ÷ bytes)
             self.store = BlockKVStore(store_budget_bytes,
                                       model_tag=cfg.name,
-                                      verify_every=store_verify_every)
+                                      verify_every=store_verify_every,
+                                      policy=store_policy)
         self.prefix_store = BlockKVStore(store_budget_bytes,
                                          model_tag=cfg.name + "/prefix")
         self._is_recurrent = cfg.is_recurrent()

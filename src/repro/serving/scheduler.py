@@ -91,9 +91,25 @@ class Batch:
 class Scheduler:
     """Greedy bucketed batching with a max batch size and max wait."""
 
-    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0):
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.0,
+                 max_starve_s: Optional[float] = None):
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        # starvation escape hatch (DESIGN.md §12): when the OLDEST queued
+        # request has waited this long, ``take`` abandons bucketing for
+        # that pop (any_bucket) so the starved request is admitted ahead
+        # of whatever hot bucket kept winning the readiness race. None
+        # disables the check (historical behavior).
+        self.max_starve_s = max_starve_s
+        self.starvation_escapes = 0
+        # cache-aware admission (DESIGN.md §12): when the owning server
+        # sets this predicate (Request -> bool, True = every prefix
+        # block is tier-resident), ``take`` prefers ready buckets that
+        # contain resident work and pops residents first within the
+        # bucket. Reordering changes WHO admits first, never any
+        # request's tokens.
+        self.residency: Optional[Callable[[Request], bool]] = None
+        self.resident_reorders = 0
         self._queues: Dict[Tuple[int, int], List[Request]] = defaultdict(list)
         self._next_rid = itertools.count()
 
@@ -179,6 +195,11 @@ class Scheduler:
         order deterministic (wall-clock ages often compare equal at
         perf_counter resolution).
         """
+        ready = self._ready_entries(limit)
+        return min(ready)[1] if ready else None
+
+    def _ready_entries(self, limit: int) -> List[Tuple[int, Tuple[int, int]]]:
+        """All ready (head rid, bucket key) pairs (see ``_ready_key``)."""
         now = time.perf_counter()
         ready: List[Tuple[int, Tuple[int, int]]] = []
         for key in [k for k, q in self._queues.items() if not q]:
@@ -187,7 +208,7 @@ class Scheduler:
             if (len(q) >= limit
                     or now - q[0].arrived_s >= self.max_wait_s):
                 ready.append((q[0].rid, key))
-        return min(ready)[1] if ready else None
+        return ready
 
     def take(self, limit: int, any_bucket: bool = False) -> List[Request]:
         """Admission pop: up to ``limit`` requests, oldest first.
@@ -201,6 +222,20 @@ class Scheduler:
         """
         if limit <= 0:
             return []
+        if not any_bucket and self.max_starve_s is not None:
+            # starvation escape: a rare bucket signature can lose the
+            # readiness race forever behind a hot bucket (its head rid is
+            # older, but the hot bucket refills and stays "readier" under
+            # per-bucket admission patterns). Once the oldest queued
+            # request has waited past max_starve_s, drop bucketing for
+            # this pop — rid order guarantees the starved request admits.
+            oldest = min((r for q in self._queues.values() for r in q),
+                         key=lambda r: r.rid, default=None)
+            if (oldest is not None
+                    and time.perf_counter() - oldest.arrived_s
+                    >= self.max_starve_s):
+                self.starvation_escapes += 1
+                any_bucket = True
         if any_bucket:
             reqs = sorted((r for q in self._queues.values() for r in q),
                           key=lambda r: r.rid)[:limit]
@@ -209,11 +244,38 @@ class Scheduler:
                 self._queues[key] = [r for r in self._queues[key]
                                      if r.rid not in taken]
             return reqs
-        key = self._ready_key(limit)
-        if key is None:
+        ready = self._ready_entries(limit)
+        if not ready:
             return []
+        if self.residency is None:
+            key = min(ready)[1]
+            q = self._queues[key]
+            taken, self._queues[key] = q[:limit], q[limit:]
+            return taken
+        # cache-aware pop: among ready buckets prefer any holding
+        # resident work (head-rid order breaks ties), then a STABLE
+        # resident-first partition inside the chosen bucket — rid order
+        # is preserved within each partition, so the reorder is
+        # deterministic. The predicate is evaluated at most once per
+        # request per pop (it probes tier state, which must not be
+        # re-read mid-decision).
+        cache: Dict[int, bool] = {}
+
+        def res(r: Request) -> bool:
+            v = cache.get(r.rid)
+            if v is None:
+                v = cache[r.rid] = bool(self.residency(r))
+            return v
+
+        key = min(ready, key=lambda e: (
+            0 if any(res(r) for r in self._queues[e[1]]) else 1, e[0]))[1]
         q = self._queues[key]
-        taken, self._queues[key] = q[:limit], q[limit:]
+        order = [r for r in q if res(r)] + [r for r in q if not res(r)]
+        taken = order[:limit]
+        if [r.rid for r in taken] != [r.rid for r in q[:len(taken)]]:
+            self.resident_reorders += 1
+        left = {r.rid for r in taken}
+        self._queues[key] = [r for r in q if r.rid not in left]
         return taken
 
     def next_batch(self) -> Optional[Batch]:

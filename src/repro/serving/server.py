@@ -253,7 +253,9 @@ class BlockServer:
                  defer_verify: bool = False,
                  faults=None,
                  prefetch: bool = False,
-                 prefetch_lookahead: int = 4):
+                 prefetch_lookahead: int = 4,
+                 cache_aware: bool = False,
+                 max_starve_s: Optional[float] = None):
         assert not engine._is_recurrent, \
             "BlockServer needs KV-cache attention archs (recurrent archs " \
             "use engine.generate's prefix path)"
@@ -306,7 +308,23 @@ class BlockServer:
         # completions produced OUTSIDE an admission/segment (shed,
         # deadline, cancel-while-queued): drained by the next step()
         self._retired: List[Completion] = []
-        self._queue = Scheduler(max_batch=num_slots, max_wait_s=0.0)
+        self._queue = Scheduler(max_batch=num_slots, max_wait_s=0.0,
+                                max_starve_s=max_starve_s)
+        # cache-aware admission (DESIGN.md §12): prefer queued requests
+        # whose prefix blocks are ALL tier-resident (device, or host on
+        # a tiered store) — they admit without a re-encode, while the
+        # prefetch lookahead below promotes the non-resident requests'
+        # blocks in the background. Only admission ORDER changes; each
+        # request's tokens depend on its own blocks + sampling seed, so
+        # per-request output parity vs FIFO is a checked invariant.
+        self.cache_aware = bool(cache_aware)
+        if self.cache_aware:
+            store = engine.store
+
+            def _request_resident(req) -> bool:
+                return all(store.resident(b) for b in req.blocks[:-1])
+
+            self._queue.residency = _request_resident
         # async prefetch (DESIGN.md §11): a background worker promotes
         # the admission queue's next-up blocks host/disk -> device while
         # the decode segment runs, so admission finds them warm. Needs a
@@ -338,8 +356,12 @@ class BlockServer:
                 pool_pages = 1 + B * self._max_row_pages
             slabs = T.init_paged_pool_slabs(cfg, pool_pages, ps,
                                             dtype=engine.dtype)
+            # the pool's reclaim policy follows the store's eviction
+            # policy (engine store_policy) so a cost-aware deployment
+            # ranks page groups and store entries by the same score
             self.pool = KV.PagedKVPool(slabs, pool_pages, ps,
-                                       verify_every=pool_verify_every)
+                                       verify_every=pool_verify_every,
+                                       policy=engine.store.policy)
             self.pool.reader = self._read_pages
             self.pool.defer_verify = self.defer_verify
             if faults is not None:
@@ -1574,6 +1596,13 @@ class BlockServer:
         if self.paged:
             out["pool"] = self.pool.stats()
             out["pool_fallbacks"] = self.pool_fallbacks
+        if self.cache_aware or self._queue.max_starve_s is not None:
+            out["admission"] = {
+                "cache_aware": self.cache_aware,
+                "max_starve_s": self._queue.max_starve_s,
+                "resident_reorders": self._queue.resident_reorders,
+                "starvation_escapes": self._queue.starvation_escapes,
+            }
         if self.prefetcher is not None:
             store = self.engine.store
             out["prefetch"] = {

@@ -78,6 +78,12 @@ class HostShard:
         self.gets = self.hits = self.puts = self.evictions = 0
         # eviction spill hook: (key, blob) -> None (disk tier)
         self.on_evict = None
+        # demotion-order scores (DESIGN.md §12): a cost-aware device
+        # store hands each demoted blob its GDSF priority; under
+        # pressure the LOWEST score spills first (cold → disk, hot
+        # stays host-resident). No scores => pure LRU, byte-identical
+        # to the historical popitem(last=False) path.
+        self._scores: Dict[str, float] = {}
 
     def __len__(self) -> int:
         return len(self._blobs)
@@ -93,15 +99,27 @@ class HostShard:
             self._blobs.move_to_end(key)
         return blob
 
-    def put(self, key: str, blob: bytes):
+    def put(self, key: str, blob: bytes, score: Optional[float] = None):
         old = self._blobs.pop(key, None)
         if old is not None:
             self.nbytes -= len(old)
         self._blobs[key] = blob
+        if score is not None:
+            self._scores[key] = float(score)
+        else:
+            self._scores.pop(key, None)
         self.nbytes += len(blob)
         self.puts += 1
         while self.nbytes > self.budget_bytes and len(self._blobs) > 1:
-            k, b = self._blobs.popitem(last=False)
+            if self._scores:
+                # min() keeps the FIRST minimal key in insertion order,
+                # so score ties deterministically spill the oldest blob
+                k = min(self._blobs,
+                        key=lambda kk: self._scores.get(kk, float("-inf")))
+                b = self._blobs.pop(k)
+            else:
+                k, b = self._blobs.popitem(last=False)
+            self._scores.pop(k, None)
             self.nbytes -= len(b)
             self.evictions += 1
             if self.on_evict is not None:
@@ -109,6 +127,7 @@ class HostShard:
 
     def drop(self, key: str):
         blob = self._blobs.pop(key, None)
+        self._scores.pop(key, None)
         if blob is not None:
             self.nbytes -= len(blob)
 
@@ -304,9 +323,11 @@ class TieredBlockStore(BlockKVStore):
 
     def __init__(self, budget_bytes: int = 8 << 30, model_tag: str = "",
                  verify_every: int = 0,
-                 tiers: Optional[TierConfig] = None):
+                 tiers: Optional[TierConfig] = None,
+                 policy: str = "lru", policy_half_life: int = 256):
         super().__init__(budget_bytes, model_tag=model_tag,
-                         verify_every=verify_every)
+                         verify_every=verify_every, policy=policy,
+                         policy_half_life=policy_half_life)
         self.tiers = tiers or TierConfig()
         t = self.tiers
         self._lock = threading.RLock()
@@ -325,6 +346,9 @@ class TieredBlockStore(BlockKVStore):
         self.tier_corrupt = 0       # blobs failing the promote re-verify
         self.prefetch_promotions = 0
         self._prefetched: set = set()
+        # rolling-window tier-fetch outcomes (decayed like the base
+        # store's hit/miss window; see tier_stats())
+        self._w_tier = {"host": 0.0, "disk": 0.0, "miss": 0.0}
 
     # -- locking: serialize against the prefetch worker ----------------
     def lookup(self, tokens: np.ndarray) -> Optional[BlockEntry]:
@@ -341,6 +365,9 @@ class TieredBlockStore(BlockKVStore):
                 return None
             # tier hit: not a full miss (no re-encode), not a device hit
             self.misses -= 1
+            # reverse the window miss the base lookup just noted (decay
+            # was already applied, so the exact undo is -= 1)
+            self._w_misses -= 1.0
             self.promotions += 1
             self._prefetched.discard(key)
             return super().insert(tokens, kv)
@@ -360,6 +387,19 @@ class TieredBlockStore(BlockKVStore):
     def peek(self, tokens: np.ndarray) -> Optional[BlockEntry]:
         with self._lock:
             return super().peek(tokens)
+
+    def resident(self, tokens: np.ndarray) -> bool:
+        """Cache-aware admission probe (DESIGN.md §12): device OR any
+        host shard counts as resident — either serves without a
+        re-encode (a host blob is a quick decode+promote, not a
+        prefill). Disk does NOT count: a disk load is slow enough that
+        admission should let the prefetch worker hide it first.
+        Stat-free like ``peek``."""
+        with self._lock:
+            key = block_key(tokens, self.model_tag)
+            if key in self._entries:
+                return True
+            return any(key in sh for sh in self.shards)
 
     def link_pages(self, tokens: np.ndarray,
                    pages: Sequence[int]) -> Optional[BlockEntry]:
@@ -383,14 +423,20 @@ class TieredBlockStore(BlockKVStore):
         when the POOL lets go (see ``BlockServer``)."""
         if ent.kv is None:
             return
-        self.demote_raw(key, ent.kv)
+        self.demote_raw(key, ent.kv, score=self._policy_score(key, ent))
 
-    def demote_raw(self, key: str, kv: Any) -> bool:
-        """Serialize one KV pytree into the host tier (all replicas)."""
+    def demote_raw(self, key: str, kv: Any,
+                   score: Optional[float] = None) -> bool:
+        """Serialize one KV pytree into the host tier (all replicas).
+
+        ``score``: the block's GDSF priority at demotion time (None
+        under plain LRU) — the host tier uses it to spill COLD blobs to
+        disk first so hot blocks stay one decode away from the device
+        (DESIGN.md §12)."""
         with self._lock:
             blob = kv_codec.encode_kv(jax.tree.map(np.asarray, kv))
             for s in self.ring.replicas_for(key):
-                self.shards[s].put(key, blob)
+                self.shards[s].put(key, blob, score=score)
             self.demotions += 1
             return True
 
@@ -403,7 +449,8 @@ class TieredBlockStore(BlockKVStore):
             for key in victims:
                 ent = self._entries.pop(key)
                 self._bytes -= ent.nbytes
-                self.demote_raw(key, ent.kv)
+                self.demote_raw(key, ent.kv,
+                                score=self._policy_score(key, ent))
                 if self.on_evict is not None:
                     self.on_evict(key, ent)
 
@@ -423,6 +470,14 @@ class TieredBlockStore(BlockKVStore):
             self.integrity_failures += 1
             return None
         return jax.tree.map(jnp.asarray, kv_np)
+
+    def _note_tier(self, outcome: str):
+        """Decay-and-bump the rolling tier-fetch window (one per
+        ``_tier_fetch``): outcome is "host", "disk" or "miss"."""
+        d = self.window_decay
+        for k in self._w_tier:
+            self._w_tier[k] *= d
+        self._w_tier[outcome] += 1.0
 
     def _tier_fetch(self, key: str) -> Optional[Any]:
         """Ring-routed host fetch, then disk; None = re-encode.
@@ -452,6 +507,7 @@ class TieredBlockStore(BlockKVStore):
                 failed = True
                 continue
             self.host_hits += 1
+            self._note_tier("host")
             return kv
         if self.disk is not None:
             if self.faults is not None and \
@@ -466,9 +522,11 @@ class TieredBlockStore(BlockKVStore):
                         failed = True
                     else:
                         self.disk_loads += 1
+                        self._note_tier("disk")
                         return kv
         if failed:
             self.fetch_failovers += 1
+        self._note_tier("miss")
         return None
 
     def prefetch(self, tokens: np.ndarray) -> bool:
@@ -498,6 +556,26 @@ class TieredBlockStore(BlockKVStore):
     def host_entries(self) -> int:
         return sum(len(sh) for sh in self.shards)
 
+    def tier_stats(self) -> Dict[str, Any]:
+        """Tier-local telemetry (also ``stats()["tiers"]``): lifetime
+        shard/ring/disk counters PLUS the rolling-window tier-fetch
+        outcomes — ``window_host_rate`` is the fraction of *recent*
+        tier fetches a host shard served, the live-traffic companion to
+        the cumulative ``host_hits``/``disk_loads``."""
+        w = self._w_tier
+        wtot = w["host"] + w["disk"] + w["miss"]
+        return {
+            "host_entries": self.host_entries,
+            "host_bytes": self.host_nbytes,
+            "window_host_hits": round(w["host"], 4),
+            "window_disk_loads": round(w["disk"], 4),
+            "window_tier_misses": round(w["miss"], 4),
+            "window_host_rate": round(w["host"] / wtot if wtot else 0.0, 4),
+            "shards": [sh.stats() for sh in self.shards],
+            "ring": self.ring.stats(),
+            "disk": self.disk.stats() if self.disk is not None else None,
+        }
+
     def stats(self) -> Dict[str, Any]:
         out = super().stats()
         out.update({
@@ -505,19 +583,14 @@ class TieredBlockStore(BlockKVStore):
             "disk_spills": self.disk_spills,
             "tier_corrupt": self.tier_corrupt,
             "prefetch_promotions": self.prefetch_promotions,
-            "tiers": {
-                "host_entries": self.host_entries,
-                "host_bytes": self.host_nbytes,
-                "shards": [sh.stats() for sh in self.shards],
-                "ring": self.ring.stats(),
-                "disk": self.disk.stats() if self.disk is not None else None,
-            }})
+            "tiers": self.tier_stats()})
         return out
 
     def reset_stats(self):
         super().reset_stats()
         self.host_hits = self.disk_spills = 0
         self.tier_corrupt = self.prefetch_promotions = 0
+        self._w_tier = {"host": 0.0, "disk": 0.0, "miss": 0.0}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,186 @@
+"""Seeded serving-traffic generator: Zipf popularity, session affinity,
+shaped offered load (DESIGN.md §12).
+
+At production scale the cache hit rate IS the TTFT story, and the hit
+rate is set by the traffic's popularity structure, not by the cache
+alone. Three properties of real RAG traffic matter and are modeled
+here, each behind one knob:
+
+  * **Zipf passage popularity** — retrieval mass concentrates on a few
+    hot passages: P(rank r) ∝ 1 / r^a over a fixed corpus. ``zipf_a``
+    around 1 matches web/query popularity measurements.
+  * **Session affinity** — a follow-up question re-retrieves mostly the
+    passages its session already touched. With probability
+    ``session_prob`` a request continues an open session and re-draws
+    from that session's passage set (plus possible drift); sessions
+    retire after a geometric number of follow-ups.
+  * **Shaped load** — arrivals are an inhomogeneous Poisson process:
+    ``load_shape`` modulates the instantaneous rate (flat / linear ramp
+    / one diurnal sine period over the request stream).
+
+Everything is driven by ONE ``numpy`` Generator seeded from
+``TrafficConfig.seed``, so a config is a complete, reproducible
+description of a workload: benchmarks and tests replay identical
+streams, and two servers fed the same config see the same bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    """One reproducible workload description."""
+    n_requests: int = 64
+    # -- corpus / popularity -------------------------------------------
+    pool_size: int = 32             # distinct passages in the corpus
+    zipf_a: float = 1.1             # popularity exponent (P(r) ∝ r^-a)
+    passages_per_req: int = 2       # retrieved blocks per request
+    passage_len: int = 48           # tokens per passage block
+    query_len: int = 24             # tokens in the final (query) block
+    new_tokens: int = 8             # decode tokens per request
+    vocab: int = 4096               # token id range (exclusive)
+    # -- session affinity ----------------------------------------------
+    session_prob: float = 0.5       # P(continue an open session)
+    session_len: float = 3.0        # mean follow-ups before retirement
+    max_sessions: int = 8           # concurrently open sessions
+    drift_prob: float = 0.25        # P(one passage re-drawn on follow-up)
+    # -- offered load --------------------------------------------------
+    mean_gap_s: float = 0.02        # 1 / base arrival rate
+    load_shape: str = "ramp"        # "flat" | "ramp" | "diurnal"
+    ramp_span: float = 3.0          # peak/trough rate ratio for "ramp"
+    diurnal_amp: float = 0.6        # rate swing ±amp for "diurnal"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrafficRequest:
+    """One generated request: ``blocks`` is passages + final query block
+    (the ``BlockServer.submit`` contract); ``passages`` are corpus
+    indices (for hit-rate analysis); ``session`` groups follow-ups."""
+    blocks: List[np.ndarray]
+    passages: Tuple[int, ...]
+    new_tokens: int
+    session: int
+
+
+def zipf_weights(pool_size: int, a: float) -> np.ndarray:
+    """Normalized Zipf pmf over ranks 0..pool_size-1: P(r) ∝ (r+1)^-a."""
+    w = (np.arange(1, int(pool_size) + 1, dtype=np.float64)) ** -float(a)
+    return w / w.sum()
+
+
+def make_corpus(cfg: TrafficConfig, rng: np.random.Generator) -> List[np.ndarray]:
+    """``pool_size`` distinct passage blocks (rank = corpus index).
+    Drawn from the config's rng so the corpus is part of the seed
+    contract; identical across every consumer of the same config."""
+    return [rng.integers(1, cfg.vocab, size=cfg.passage_len).astype(np.int32)
+            for _ in range(cfg.pool_size)]
+
+
+def _draw_passages(rng: np.random.Generator, weights: np.ndarray,
+                   k: int) -> Tuple[int, ...]:
+    """k distinct Zipf-weighted corpus indices (a retrieval result)."""
+    k = min(int(k), weights.shape[0])
+    return tuple(int(i) for i in
+                 rng.choice(weights.shape[0], size=k, replace=False,
+                            p=weights))
+
+
+def generate(cfg: TrafficConfig) -> List[TrafficRequest]:
+    """The request stream: Zipf draws threaded through session affinity.
+
+    A request either continues an open session (probability
+    ``session_prob`` when any is open) — reusing that session's passage
+    set, with one passage re-drawn on ``drift_prob`` (topic drift) — or
+    opens a fresh session with a fresh Zipf retrieval. Sessions close
+    after a geometric(1/session_len) number of follow-ups; at most
+    ``max_sessions`` stay open (oldest retires first).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    corpus = make_corpus(cfg, rng)
+    weights = zipf_weights(cfg.pool_size, cfg.zipf_a)
+    sessions: List[dict] = []       # {"id", "passages", "left"}
+    next_session = 0
+    out: List[TrafficRequest] = []
+    for _ in range(int(cfg.n_requests)):
+        if sessions and rng.random() < cfg.session_prob:
+            s = sessions[int(rng.integers(len(sessions)))]
+            passages = s["passages"]
+            if cfg.drift_prob > 0 and rng.random() < cfg.drift_prob:
+                # topic drift: one slot re-retrieved from the corpus
+                slot = int(rng.integers(len(passages)))
+                repl = int(rng.choice(cfg.pool_size, p=weights))
+                if repl not in passages:
+                    passages = (passages[:slot] + (repl,)
+                                + passages[slot + 1:])
+                    s["passages"] = passages
+            s["left"] -= 1
+            if s["left"] <= 0:
+                sessions.remove(s)
+            sid = s["id"]
+        else:
+            passages = _draw_passages(rng, weights, cfg.passages_per_req)
+            sid = next_session
+            next_session += 1
+            # geometric follow-up budget, mean ~session_len
+            left = int(rng.geometric(1.0 / max(cfg.session_len, 1.0)))
+            sessions.append({"id": sid, "passages": passages, "left": left})
+            if len(sessions) > cfg.max_sessions:
+                sessions.pop(0)
+        query = rng.integers(1, cfg.vocab,
+                             size=cfg.query_len).astype(np.int32)
+        blocks = [corpus[i] for i in passages] + [query]
+        out.append(TrafficRequest(blocks=blocks, passages=passages,
+                                  new_tokens=int(cfg.new_tokens),
+                                  session=sid))
+    return out
+
+
+def load_multiplier(cfg: TrafficConfig, frac: float) -> float:
+    """Instantaneous rate multiplier at stream position frac ∈ [0, 1)."""
+    if cfg.load_shape == "flat":
+        return 1.0
+    if cfg.load_shape == "ramp":
+        # linear ramp from 1 up to ramp_span× the base rate
+        span = max(float(cfg.ramp_span), 1.0)
+        return 1.0 + (span - 1.0) * frac
+    if cfg.load_shape == "diurnal":
+        # one full sine period over the stream: 1 ± diurnal_amp
+        amp = min(max(float(cfg.diurnal_amp), 0.0), 0.95)
+        return 1.0 + amp * math.sin(2.0 * math.pi * frac)
+    raise ValueError(f"unknown load_shape {cfg.load_shape!r}; "
+                     f"expected flat|ramp|diurnal")
+
+
+def arrival_times(cfg: TrafficConfig, n: Optional[int] = None,
+                  mean_gap_s: Optional[float] = None) -> np.ndarray:
+    """(n,) float64 arrival offsets of an inhomogeneous Poisson stream.
+
+    Gap i is Exp(mean = mean_gap_s / multiplier(i/n)) — rate-modulated
+    by ``load_shape``. Seeded independently of ``generate`` (offset
+    seed) so request CONTENT and TIMING can be swept separately: the
+    same passage stream replayed at several offered loads is the
+    sustained-load benchmark's x-axis.
+    """
+    n = int(cfg.n_requests if n is None else n)
+    gap = float(cfg.mean_gap_s if mean_gap_s is None else mean_gap_s)
+    rng = np.random.default_rng(cfg.seed + 0x9E3779B9)
+    gaps = np.empty(n, np.float64)
+    for i in range(n):
+        mult = load_multiplier(cfg, i / max(n, 1))
+        gaps[i] = rng.exponential(gap / mult)
+    return np.cumsum(gaps)
+
+
+def working_set_blocks(reqs: Sequence[TrafficRequest]) -> int:
+    """Distinct passages actually touched by a stream — sizes the store
+    budget so eviction pressure is real but hot blocks can stay."""
+    seen = set()
+    for r in reqs:
+        seen.update(r.passages)
+    return len(seen)

@@ -1,0 +1,377 @@
+"""Eviction-policy seam (DESIGN.md §12): plain LRU pinned bitwise, the
+GDSF cost-aware policy deterministic, pinned entries safe under BOTH,
+plus the rolling-window counters and the admission-side features
+(resident-first ordering, starvation escape hatch) the policy feeds.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kv_cache import (BlockKVStore, CostAwareTracker,
+                                 EVICTION_POLICIES, PagedKVPool, block_key)
+from repro.serving.scheduler import Scheduler
+
+
+def _kv(nbytes_per_side=1024):
+    n = nbytes_per_side // 4
+    return {"k": jnp.zeros((n,), jnp.float32),
+            "v": jnp.zeros((n,), jnp.float32)}
+
+
+def _blocks(n, width=4):
+    return [np.full(width, i, np.int32) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# policy="lru" is bitwise-identical to the historical behavior
+# ---------------------------------------------------------------------------
+def test_lru_victim_sequence_pinned_exactly():
+    """The default policy must reproduce the historical victim order
+    EXACTLY: first unpinned entry in insertion/touch order, one
+    eviction_skip counted per pinned entry walked past, per pass."""
+    victims = []
+    store = BlockKVStore(budget_bytes=4 * 2048)       # holds 4 entries
+    store.on_evict = lambda key, ent: victims.append(key)
+    bs = _blocks(8)
+    for b in bs[:4]:
+        store.insert(b, _kv())
+    store.lookup(bs[0])                    # a touched -> back of LRU
+    assert store.pin(bs[1]) is not None    # b pinned (in flight)
+    # shadow model of the historical loop over the OrderedDict
+    order = [block_key(b) for b in (bs[2], bs[3], bs[0])]   # unpinned LRU
+    for b in bs[4:7]:
+        store.insert(b, _kv())
+    # victims: c, d, a — never the pinned b; one skip per pass over b
+    assert victims == order
+    assert store.evictions == 3
+    assert store.eviction_skips == 3       # b walked past once per pass
+    assert store.resident(bs[1])           # stat-free: no LRU touch
+    store.unpin(bs[1])
+    store.insert(np.full(4, 99, np.int32), _kv())
+    assert victims[-1] == block_key(bs[1])  # unpinned -> evictable again
+
+
+def test_policy_validation():
+    assert set(EVICTION_POLICIES) == {"lru", "cost_aware"}
+    with pytest.raises(ValueError):
+        BlockKVStore(policy="mru")
+    with pytest.raises(ValueError):
+        PagedKVPool({"g0": {"k": jnp.zeros((1, 4, 4, 2, 8), jnp.float32),
+                            "v": jnp.zeros((1, 4, 4, 2, 8), jnp.float32)}},
+                    4, 4, policy="bogus")
+    assert BlockKVStore().stats()["policy"] == "lru"
+    assert BlockKVStore(policy="cost_aware").stats()["policy"] == "cost_aware"
+
+
+# ---------------------------------------------------------------------------
+# cost-aware: frequency wins, ties are deterministic, pins are safe
+# ---------------------------------------------------------------------------
+def test_cost_aware_keeps_hot_block_lru_would_evict():
+    """The GDSF discriminator: a frequently-touched old block survives a
+    scan of one-hit wonders that would flush it out of plain LRU."""
+    def run(policy):
+        store = BlockKVStore(budget_bytes=3 * 2048, policy=policy)
+        hot = np.full(4, 77, np.int32)
+        store.insert(hot, _kv())
+        for _ in range(6):
+            store.lookup(hot)              # popularity signal
+        for b in _blocks(6):               # cold scan pushes hot to LRU head
+            store.insert(b, _kv())
+        return store.lookup(hot) is not None
+    assert run("cost_aware") and not run("lru")
+
+
+def test_cost_aware_tie_break_is_lru_order_and_deterministic():
+    """Equal scores (same freq/cost/size) must evict in LRU order — the
+    strict `<` scan keeps the FIRST minimal entry — and the whole victim
+    sequence must replay identically run over run."""
+    def victims():
+        out = []
+        store = BlockKVStore(budget_bytes=3 * 2048, policy="cost_aware")
+        store.on_evict = lambda key, ent: out.append(key)
+        for b in _blocks(9):               # never looked up: all freq=1
+            store.insert(b, _kv())
+        return out
+    bs = _blocks(9)
+    assert victims() == victims() == [block_key(b) for b in bs[:6]]
+
+
+def test_cost_aware_never_evicts_pinned():
+    store = BlockKVStore(budget_bytes=2 * 2048, policy="cost_aware")
+    a, b = np.full(4, 1, np.int32), np.full(4, 2, np.int32)
+    store.insert(a, _kv())
+    store.insert(b, _kv())
+    store.pin(a)
+    store.pin(b)
+    for blk in _blocks(4, width=8):        # pressure with everything pinned
+        store.insert(blk, _kv())
+    assert store.lookup(a) is not None and store.lookup(b) is not None
+    assert store.eviction_skips > 0
+    store.unpin(a)
+    store.unpin(b)
+
+
+def test_cost_aware_clock_ages_stale_frequency():
+    """The aging clock: after enough evictions the clock rises past a
+    stale entry's decayed frequency, so ancient popularity cannot pin a
+    block forever (the classic LFU failure mode)."""
+    tk = CostAwareTracker(half_life_ops=4)
+    tk.touch("old")
+    for _ in range(8):
+        tk.touch("noise")                  # ops pass, "old" decays
+    s_old = tk.score("old", 4, 1024)
+    tk.credit_eviction(s_old + 1.0)        # eviction at higher priority
+    assert tk.score("fresh", 4, 1024) > s_old
+
+
+def test_cost_aware_pool_reclaims_cold_group_first():
+    """PagedKVPool group reclaim under cost_aware frees the LEAST popular
+    zero-ref group, not the insertion-oldest one."""
+    num_pages, ps = 7, 4           # sink + 6: two 2-page groups, 2 free
+    slabs = {"g0": {"k": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32),
+                    "v": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32)}}
+    def run(policy):
+        pool = PagedKVPool(slabs, num_pages, ps, policy=policy)
+        for i in range(2):                 # two resident groups
+            pages = pool.alloc(2)
+            pool.register((f"b{i}", 0), pages, 2 * ps - 1)
+        for _ in range(5):
+            pool.lookup(("b0", 0))         # b0 is frequency-hot...
+        pool.lookup(("b1", 0))             # ...but b1 is most recent
+        assert pool.alloc(4) is not None   # forces a reclaim
+        return set(pool._groups)
+    assert run("cost_aware") == {("b0", 0)}     # popularity beats recency
+    assert run("lru") == {("b1", 0)}            # recency-only reclaim
+
+
+def _fuzz_cost_aware(seed, num_pages=12, ps=4, steps=120):
+    """test_paged_pool._fuzz_ops with policy="cost_aware": random op
+    sequences, ``check(retained=...)`` must hold after EVERY op and the
+    end state must be leak-free — the policy changes WHICH group is
+    reclaimed, never the bookkeeping invariants."""
+    rng = np.random.default_rng(seed)
+    slabs = {"g0": {"k": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32),
+                    "v": jnp.zeros((1, num_pages, ps, 2, 8), jnp.float32)}}
+    pool = PagedKVPool(slabs, num_pages, ps, policy="cost_aware",
+                       policy_half_life=16)
+    retained = []
+    next_key = 0
+    for _ in range(steps):
+        op = rng.integers(7)
+        keys = list(pool._groups)
+        if op == 0:
+            n = int(rng.integers(1, 4))
+            pages = pool.alloc(n)
+            if pages is not None:
+                pool.register((f"b{next_key}", 0), pages, n * ps - 1)
+                next_key += 1
+        elif op == 1 and keys:
+            key = keys[rng.integers(len(keys))]
+            if pool.lookup(key) is not None:
+                pool.acquire(key)
+        elif op == 2 and keys:
+            key = keys[rng.integers(len(keys))]
+            if pool._groups.get(key) is not None \
+                        and pool._groups[key].refs > 0:
+                pool.release(key)
+        elif op == 3:
+            n = int(rng.integers(1, 3))
+            pages = pool.alloc(n)
+            if pages is not None:
+                pool.retain(pages)
+                retained.append(pages)
+        elif op == 4 and retained:
+            pool.free(retained.pop(rng.integers(len(retained))))
+        elif op == 5 and keys:
+            key = keys[rng.integers(len(keys))]
+            g = pool._groups.get(key)
+            if g is not None and g.refs == 0:
+                pool.drop(key)
+        elif op == 6 and keys:             # popularity churn
+            pool.lookup(keys[rng.integers(len(keys))])
+        flat = [p for tail in retained for p in tail]
+        bad = pool.check(retained=flat)
+        assert not bad, (seed, op, bad)
+    for key in list(pool._groups):
+        while pool._groups[key].refs > 0:
+            pool.release(key)
+        pool.drop(key)
+    while retained:
+        pool.free(retained.pop())
+    assert pool.check(retained=[]) == []
+    assert pool.free_pages == num_pages - 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pool_cost_aware_fuzz(seed):
+    _fuzz_cost_aware(seed)
+
+
+# ---------------------------------------------------------------------------
+# rolling-window counters
+# ---------------------------------------------------------------------------
+def test_window_counters_track_recent_not_lifetime():
+    store = BlockKVStore(window_decay=0.8)
+    t = np.arange(8, dtype=np.int32)
+    for _ in range(10):
+        store.lookup(np.full(4, 1000, np.int32))    # 10 misses
+    store.insert(t, _kv())
+    for _ in range(10):
+        store.lookup(t)                              # then 10 hits
+    assert store.hits == 10 and store.misses == 10
+    assert store.hit_rate == 0.5                     # lifetime unmoved
+    # the decayed window forgets the early misses: recent-rate >> 0.5
+    assert store.window_hit_rate > 0.75
+    s = store.stats()
+    assert {"window_hits", "window_misses", "window_hit_rate",
+            "hits", "misses", "hit_rate", "policy"} <= set(s)
+    assert s["window_hit_rate"] == round(store.window_hit_rate, 4)
+    store.reset_stats()
+    assert store.window_hit_rate == 0.0
+
+
+def test_window_counters_existing_keys_untouched():
+    """stats() keeps every pre-window key with unchanged meaning."""
+    store = BlockKVStore()
+    t = np.arange(4, dtype=np.int32)
+    store.lookup(t)
+    store.insert(t, _kv())
+    store.lookup(t)
+    s = store.stats()
+    for key in ("entries", "bytes", "hits", "misses", "hit_rate",
+                "evictions", "eviction_skips", "integrity_failures",
+                "unpin_underflow", "demotions", "promotions",
+                "disk_loads", "prefetch_hits", "fetch_failovers"):
+        assert key in s, key
+    assert s["hits"] == 1 and s["misses"] == 1
+
+
+def test_tier_window_counters(tmp_path):
+    from repro.serving.tiered_store import TierConfig, TieredBlockStore
+    store = TieredBlockStore(budget_bytes=2 * 4096, model_tag="m",
+                             tiers=TierConfig(host_bytes=1 << 20, shards=1,
+                                              replicas=1))
+    bs = _blocks(4, width=8)
+    for b in bs:
+        store.insert(b, _kv(2048))        # overflows device -> host demotes
+    assert store.demotions > 0
+    miss_before = store._w_misses
+    assert store.lookup(bs[0]) is not None   # host promotion
+    ts = store.tier_stats()
+    assert {"window_host_hits", "window_disk_loads", "window_tier_misses",
+            "window_host_rate", "host_entries", "shards"} <= set(ts)
+    assert ts["window_host_hits"] > 0
+    # the promotion reclassified the device window-miss too
+    assert store._w_misses < miss_before + 1.0
+    # residency: device or host count, a never-seen block doesn't
+    assert store.resident(bs[0]) and not store.resident(
+        np.full(8, 1234, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# admission: starvation escape + resident-first ordering
+# ---------------------------------------------------------------------------
+def _reqs(sched, lens_list):
+    return [sched.submit([np.full(l, i + 1, np.int32) for l in lens])
+            for i, lens in enumerate(lens_list)]
+
+
+def test_starvation_escape_regression():
+    """A rare-bucket request behind an always-ready hot bucket starves
+    under pure bucketed admission (max_wait_s high, bucket never fills);
+    max_starve_s forces one any_bucket pop that admits it in rid order."""
+    starving = Scheduler(max_batch=2, max_wait_s=60.0)
+    r0 = _reqs(starving, [[100, 8]])[0]            # rare bucket, alone
+    _reqs(starving, [[16, 8], [16, 8]])            # hot bucket, full
+    taken = starving.take(2)
+    assert r0 not in [r.rid for r in taken]        # the historical starve
+    assert starving.take(2) == []                  # rare bucket not ready
+
+    hatch = Scheduler(max_batch=2, max_wait_s=60.0, max_starve_s=0.0)
+    r0 = _reqs(hatch, [[100, 8]])[0]
+    hot = _reqs(hatch, [[16, 8], [16, 8]])
+    taken = hatch.take(2)
+    assert [r.rid for r in taken] == [r0, hot[0]]  # strict rid order
+    assert hatch.starvation_escapes == 1
+    assert [r.rid for r in hatch.take(2)] == [hot[1]]
+
+
+def test_starvation_escape_inactive_when_fresh():
+    sched = Scheduler(max_batch=2, max_wait_s=0.0, max_starve_s=3600.0)
+    _reqs(sched, [[16, 8], [16, 8], [100, 8]])
+    taken = sched.take(2)
+    assert sched.starvation_escapes == 0           # nobody waited an hour
+    assert len(taken) == 2                         # normal bucketed pop
+
+
+def test_resident_first_ordering_within_bucket():
+    sched = Scheduler(max_batch=4, max_wait_s=0.0)
+    rids = _reqs(sched, [[16, 8]] * 4)
+    resident = {rids[1], rids[3]}
+    sched.residency = lambda r: r.rid in resident
+    taken = [r.rid for r in sched.take(3)]
+    # stable partition: residents first, rid order inside each class
+    assert taken == [rids[1], rids[3], rids[0]]
+    assert sched.resident_reorders == 1
+    assert [r.rid for r in sched.take(3)] == [rids[2]]
+
+
+def test_resident_bucket_preference_and_no_gating():
+    """A ready bucket holding resident work is preferred over an older
+    all-cold bucket — but with NO resident work anywhere, admission
+    falls back to the historical oldest-head order (never gates)."""
+    sched = Scheduler(max_batch=2, max_wait_s=0.0)
+    cold = _reqs(sched, [[16, 8], [16, 8]])
+    warm = _reqs(sched, [[100, 8]])
+    sched.residency = lambda r: r.rid in set(warm)
+    assert [r.rid for r in sched.take(2)] == warm  # younger bucket wins
+    assert [r.rid for r in sched.take(2)] == cold  # then drains anyway
+    sched2 = Scheduler(max_batch=2, max_wait_s=0.0)
+    rids = _reqs(sched2, [[16, 8], [100, 8]])
+    sched2.residency = lambda r: False
+    assert [r.rid for r in sched2.take(1)] == [rids[0]]
+    assert sched2.resident_reorders == 0
+
+
+def test_cache_aware_server_bitwise_parity_vs_fifo():
+    """THE admission-reordering safety invariant: the cache-aware server
+    (cost-aware eviction + resident-first admission, tight tiered
+    budgets so both mechanisms actually fire) emits bitwise-identical
+    per-request tokens to the FIFO/LRU server on the same stream."""
+    import jax
+    from conftest import tiny_dense
+    from repro.models import api
+    from repro.serving import traffic as tr
+    from repro.serving.engine import BlockAttentionEngine
+    from repro.serving.server import BlockServer
+    from repro.serving.tiered_store import TierConfig
+
+    cfg = tiny_dense()
+    params = api.model_init(jax.random.PRNGKey(0), cfg)
+    reqs = tr.generate(tr.TrafficConfig(
+        n_requests=10, pool_size=5, passages_per_req=2, passage_len=12,
+        query_len=8, new_tokens=3, vocab=cfg.vocab_size, zipf_a=1.3,
+        session_prob=0.4, seed=3))
+    stream = [(r.blocks, r.new_tokens) for r in reqs]
+
+    def drain(cache_aware):
+        eng = BlockAttentionEngine(
+            params, cfg, max_seq=96,
+            tiers=TierConfig(host_bytes=1 << 20, shards=1, replicas=1),
+            store_policy="cost_aware" if cache_aware else "lru")
+        srv = BlockServer(eng, num_slots=2, decode_segment=2,
+                          prefetch=True, cache_aware=cache_aware,
+                          max_starve_s=0.0 if cache_aware else None)
+        rids = [srv.submit(b, max_new_tokens=nt) for b, nt in stream]
+        done = {c.rid: c for c in srv.run()}
+        # squeeze mid-stream-like pressure for a second pass: tiny budget
+        eng.store.budget_bytes = max(eng.store.nbytes // 3, 4096)
+        rids2 = [srv.submit(b, max_new_tokens=nt) for b, nt in stream]
+        done2 = {c.rid: c for c in srv.run()}
+        srv.shutdown()
+        out = [done[r].tokens.tolist() for r in rids]
+        out += [done2[r].tokens.tolist() for r in rids2]
+        if cache_aware:
+            assert srv.stats()["admission"]["cache_aware"] is True
+        return out
+    assert drain(True) == drain(False)

@@ -1,0 +1,137 @@
+"""serving.traffic: the seeded Zipf/session/shaped-load generator
+(DESIGN.md §12).
+
+The contract under test: a ``TrafficConfig`` is a COMPLETE workload
+description — same config, same bytes — and the three realism knobs
+actually do what they claim: Zipf draws concentrate on the head ranks,
+session affinity makes consecutive same-session requests share passages,
+and the load shapes modulate arrival rate the way their names say.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import traffic as tr
+
+
+def _cfg(**kw):
+    return tr.TrafficConfig(**dict(dict(n_requests=64, pool_size=16,
+                                        passages_per_req=2, passage_len=12,
+                                        query_len=6, vocab=128, seed=7), **kw))
+
+
+def test_generate_deterministic_and_well_formed():
+    a, b = tr.generate(_cfg()), tr.generate(_cfg())
+    assert len(a) == len(b) == 64
+    for ra, rb in zip(a, b):
+        assert ra.passages == rb.passages and ra.session == rb.session
+        assert all(np.array_equal(x, y) for x, y in zip(ra.blocks, rb.blocks))
+        # blocks = passages + final query block, all in-vocab int32
+        assert len(ra.blocks) == len(ra.passages) + 1
+        assert all(blk.dtype == np.int32 for blk in ra.blocks)
+        assert len(ra.blocks[-1]) == 6
+        assert len(set(ra.passages)) == len(ra.passages)
+    assert tr.generate(_cfg(seed=8))[0].passages != a[0].passages \
+        or any(x.passages != y.passages
+               for x, y in zip(a, tr.generate(_cfg(seed=8))))
+
+
+def test_corpus_is_part_of_the_seed_contract():
+    """Same config -> byte-identical corpus; the SAME passage index means
+    the SAME tokens for every consumer (that's what makes cache hits)."""
+    c1 = tr.make_corpus(_cfg(), np.random.default_rng(7))
+    c2 = tr.make_corpus(_cfg(), np.random.default_rng(7))
+    assert all(np.array_equal(x, y) for x, y in zip(c1, c2))
+    reqs = tr.generate(_cfg())
+    by_passage = {}
+    for r in reqs:
+        for p, blk in zip(r.passages, r.blocks):
+            by_passage.setdefault(p, blk)
+            assert np.array_equal(by_passage[p], blk)
+
+
+def test_zipf_popularity_concentrates_on_head():
+    w = tr.zipf_weights(32, 1.2)
+    assert w.shape == (32,) and abs(w.sum() - 1.0) < 1e-12
+    assert all(w[i] > w[i + 1] for i in range(31))
+    reqs = tr.generate(_cfg(n_requests=256, pool_size=32, zipf_a=1.2,
+                            session_prob=0.0))
+    counts = np.zeros(32)
+    for r in reqs:
+        for p in r.passages:
+            counts[p] += 1
+    # head quartile takes the majority of retrieval mass
+    assert counts[:8].sum() > 0.5 * counts.sum()
+    assert counts[:8].sum() > 2 * counts[-8:].sum()
+
+
+def test_session_affinity_reuses_passages():
+    reqs = tr.generate(_cfg(n_requests=128, session_prob=0.8,
+                            drift_prob=0.0))
+    by_session = {}
+    follow_ups = overlaps = 0
+    for r in reqs:
+        if r.session in by_session:
+            follow_ups += 1
+            overlaps += bool(set(r.passages) & by_session[r.session])
+        by_session[r.session] = set(r.passages)
+    assert follow_ups > 20                # affinity actually exercised
+    assert overlaps == follow_ups         # no drift -> exact reuse
+    # with affinity off every request opens a new session
+    solo = tr.generate(_cfg(session_prob=0.0))
+    assert len({r.session for r in solo}) == len(solo)
+
+
+def test_drift_changes_at_most_one_passage():
+    reqs = tr.generate(_cfg(n_requests=128, session_prob=0.9,
+                            drift_prob=0.5, passages_per_req=3))
+    prev = {}
+    drifted = 0
+    for r in reqs:
+        if r.session in prev:
+            changed = len(set(prev[r.session]) - set(r.passages))
+            assert changed <= 1
+            drifted += changed
+        prev[r.session] = r.passages
+    assert drifted > 0
+
+
+def test_load_shapes():
+    flat = _cfg(load_shape="flat")
+    assert tr.load_multiplier(flat, 0.0) == tr.load_multiplier(flat, 0.9) == 1
+    ramp = _cfg(load_shape="ramp", ramp_span=3.0)
+    assert tr.load_multiplier(ramp, 0.0) == 1.0
+    assert abs(tr.load_multiplier(ramp, 1.0) - 3.0) < 1e-12
+    di = _cfg(load_shape="diurnal", diurnal_amp=0.5)
+    assert abs(tr.load_multiplier(di, 0.0) - 1.0) < 1e-12
+    assert tr.load_multiplier(di, 0.25) > 1.4   # peak
+    assert tr.load_multiplier(di, 0.75) < 0.6   # trough
+    with pytest.raises(ValueError):
+        tr.load_multiplier(_cfg(load_shape="bogus"), 0.5)
+
+
+def test_arrival_times_shape_and_independence():
+    cfg = _cfg(n_requests=400, load_shape="ramp", ramp_span=4.0,
+               mean_gap_s=0.01)
+    t1, t2 = tr.arrival_times(cfg), tr.arrival_times(cfg)
+    np.testing.assert_array_equal(t1, t2)          # seeded
+    assert t1.shape == (400,) and np.all(np.diff(t1) >= 0)
+    # ramp: the back half arrives faster than the front half
+    front = np.diff(t1[: 200]).mean()
+    back = np.diff(t1[200:]).mean()
+    assert back < front
+    # timing is seeded independently of content: same stream, new clock
+    assert not np.array_equal(t1, tr.arrival_times(_cfg(n_requests=400,
+                                                        seed=8),
+                                                   mean_gap_s=0.01))
+    assert [r.passages for r in tr.generate(cfg)] == \
+        [r.passages for r in tr.generate(cfg)]
+    # gap override rescales without re-seeding
+    half = tr.arrival_times(cfg, mean_gap_s=0.005)
+    assert abs(half[-1] * 2 - t1[-1]) < 1e-9
+
+
+def test_working_set_blocks():
+    reqs = tr.generate(_cfg())
+    ws = tr.working_set_blocks(reqs)
+    assert 0 < ws <= 16
+    assert ws == len({p for r in reqs for p in r.passages})
